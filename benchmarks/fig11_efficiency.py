@@ -1,0 +1,42 @@
+"""Paper Fig. 11: cluster energy efficiency on dense matmul by format.
+
+Energy is not measurable in this container; the structural counterpart is
+arithmetic intensity and roofline occupancy per operand format on the
+target (v5e): sub-byte weights raise ops/byte, which is exactly how the
+silicon's efficiency scales with narrower formats.  us_per_call measures
+the jnp-path quantized matmul on this CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import QuantConfig
+from repro.kernels.ops import prepare_weight, quantized_matmul
+
+M, K, N = 128, 2048, 2048
+PEAK, BW = 197e12, 819e9
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(key, (K, N), jnp.float32) * 0.05
+    flops = 2 * M * K * N
+    for w_bits in (8, 4, 2):
+        cfg = QuantConfig(mode="int", a_bits=8, w_bits=w_bits)
+        pw = prepare_weight(w, cfg)
+        fn = jax.jit(lambda x, pw: quantized_matmul(x, pw, cfg,
+                                                    use_kernel=False))
+        us = time_fn(fn, x, pw)
+        bytes_moved = M * K + K * N * w_bits / 8 + M * N * 4
+        ai = flops / bytes_moved
+        t_v5e = max(flops / PEAK, bytes_moved / BW)
+        emit(f"fig11/eff_w{w_bits}a8", us,
+             f"arith_intensity={ai:.1f};v5e_roofline_occupancy="
+             f"{(flops / PEAK) / t_v5e:.2f}")
+
+
+if __name__ == "__main__":
+    run()

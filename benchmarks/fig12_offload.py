@@ -1,0 +1,53 @@
+"""Paper Fig. 12: offload speedup & overhead on an FP matmul.
+
+Host/accelerator split maps to Python-host / XLA-jit (DESIGN.md §2-C4):
+  * "lazy code load into L2" -> first-call jit staging (compile) time,
+  * low vs high code utilization -> 1 call vs 1000 calls amortization,
+  * host-only baseline -> interpreted (op-by-op, un-jitted) execution.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+M = 256
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (M, M), jnp.float32)
+    b = jax.random.normal(key, (M, M), jnp.float32)
+
+    def mm(a, b):
+        # a small chain so there is something to fuse (as DORY fuses tiles)
+        c = a @ b
+        return (c * 0.5 + a) @ b
+
+    # interpreted "host" path (no jit): op-by-op dispatch.
+    t_host = time_fn(mm, a, b, warmup=1, iters=5)
+
+    # offload path: staging (compile) + steady-state.
+    f = jax.jit(mm)
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(a, b))
+    t_stage = (time.perf_counter() - t0) * 1e6
+    t_acc = time_fn(f, a, b)
+
+    emit("fig12/host_eager", t_host, "baseline")
+    emit("fig12/offload_stage", t_stage,
+         f"lazy_code_load_overhead={t_stage / t_acc:.0f}x_one_call")
+    emit("fig12/offload_steady", t_acc,
+         f"speedup_vs_host={t_host / t_acc:.2f}x")
+    # utilization sweep (paper: 1 vs 1000 executions)
+    for n in (1, 10, 1000):
+        total = t_stage + n * t_acc
+        emit(f"fig12/amortized_n{n}", total / n,
+             f"overhead_frac={t_stage / total:.3f}")
+
+
+if __name__ == "__main__":
+    run()

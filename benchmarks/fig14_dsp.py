@@ -1,0 +1,87 @@
+"""Paper Fig. 14: general-purpose DSP suite (FIR, IIR, FFT, DWT, K-Means,
+MatMul, Conv1D), full precision vs reduced precision.
+
+The cluster gains come from 8-core parallelism + FP16/bf16 SIMD; the JAX
+analogue is XLA vectorization + bf16.  Derived column reports GFLOp/s on
+this CPU and the fp32->bf16 ratio (paper sees ~2x on the cluster).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+N = 1 << 16
+TAPS = 64
+
+
+def fir(x, h):
+    return jnp.convolve(x, h, mode="same")
+
+
+def iir(x, a):
+    z = jnp.zeros((), x.dtype)
+
+    def step(carry, xt):
+        y = xt + a[0] * carry[0] + a[1] * carry[1]
+        return (y, carry[0]), y
+    _, y = jax.lax.scan(step, (z, z), x)
+    return y
+
+
+def dwt_haar(x, levels=4):
+    outs = []
+    for _ in range(levels):
+        e, o = x[::2], x[1::2]
+        outs.append((e - o) * 0.70710678)
+        x = (e + o) * 0.70710678
+    outs.append(x)
+    return jnp.concatenate(outs)
+
+
+def kmeans_assign(pts, cents):
+    d = jnp.sum((pts[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d, axis=-1)
+
+
+BENCHES = {
+    "fir": (lambda dt: (jax.jit(fir),
+                        (jnp.ones(N, dt), jnp.ones(TAPS, dt))),
+            2 * N * TAPS),
+    "iir": (lambda dt: (jax.jit(iir), (jnp.ones(N, dt),
+                                       jnp.array([0.5, -0.25], dt))),
+            4 * N),
+    "fft": (lambda dt: (jax.jit(lambda x: jnp.fft.fft(x.astype(jnp.complex64))),
+                        (jnp.ones(N, dt),)),
+            5 * N * 16),
+    "dwt": (lambda dt: (jax.jit(dwt_haar), (jnp.ones(N, dt),)),
+            3 * N),
+    "kmeans": (lambda dt: (jax.jit(kmeans_assign),
+                           (jnp.ones((4096, 16), dt), jnp.ones((32, 16), dt))),
+               3 * 4096 * 32 * 16),
+    "matmul": (lambda dt: (jax.jit(jnp.matmul),
+                           (jnp.ones((512, 512), dt), jnp.ones((512, 512), dt))),
+               2 * 512 ** 3),
+    "conv1d": (lambda dt: (jax.jit(functools.partial(
+        jnp.convolve, mode="same")),
+        (jnp.ones(N, dt), jnp.ones(31, dt))), 2 * N * 31),
+}
+
+
+def run():
+    for name, (mk, flops) in BENCHES.items():
+        res = {}
+        for dt, tag in ((jnp.float32, "fp32"), (jnp.bfloat16, "bf16")):
+            fn, args = mk(dt)
+            res[tag] = time_fn(fn, *args)
+            emit(f"fig14/{name}_{tag}", res[tag],
+                 f"gflops={flops / res[tag] / 1e3:.2f}")
+        emit(f"fig14/{name}_ratio", res["bf16"],
+             f"bf16_speedup={res['fp32'] / res['bf16']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

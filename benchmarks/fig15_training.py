@@ -1,0 +1,42 @@
+"""Paper Fig. 15: online-learning kernels (PULP-TrainLib set).
+
+Conv2D / PointWise / Linear layers, each in its three training phases —
+forward, grad-wrt-input, grad-wrt-weights — every phase one matmul [16].
+fp32 vs bf16 (paper: bf16 SIMD gives up to 1.8x).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+# (name, (M, K, N)) — the matmul each phase reduces to, PULP-TrainLib sizes
+# scaled to this CPU.
+LAYERS = {
+    "conv2d": (1024, 288, 64),     # im2col'd 3x3x32 -> 64, 32x32 map
+    "pointwise": (1024, 128, 128),
+    "linear": (256, 512, 512),
+}
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for name, (m, k, n) in LAYERS.items():
+        for dt, tag in ((jnp.float32, "fp32"), (jnp.bfloat16, "bf16")):
+            x = jax.random.normal(key, (m, k), dt)
+            w = jax.random.normal(key, (k, n), dt)
+            g = jax.random.normal(key, (m, n), dt)
+            mm = jax.jit(jnp.matmul)
+            res = {}
+            res["fw"] = time_fn(mm, x, w)                     # y = x w
+            res["gi"] = time_fn(mm, g, w.T)                   # dx = g w^T
+            res["gw"] = time_fn(mm, x.T, g)                   # dw = x^T g
+            for phase, us in res.items():
+                fl = 2 * m * k * n
+                emit(f"fig15/{name}_{phase}_{tag}", us,
+                     f"gflops={fl / us / 1e3:.2f}")
+
+
+if __name__ == "__main__":
+    run()

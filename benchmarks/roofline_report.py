@@ -1,0 +1,116 @@
+"""§Roofline report: three roofline terms per (arch x shape x mesh) cell.
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun and prints
+the table used in EXPERIMENTS.md: per-device loop-adjusted FLOPs / HBM
+bytes / collective bytes converted to seconds against v5e peaks, dominant
+term, and MODEL_FLOPS utilization.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import param_count
+from repro.models.model import param_specs
+from repro.models.common import is_spec_tree_leaf, ParamSpec
+
+import jax
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE: shared + top_k of routed)."""
+    import math
+    total = 0
+    for spec in jax.tree.leaves(param_specs(cfg), is_leaf=is_spec_tree_leaf):
+        n = math.prod(spec.shape)
+        total += n
+    if cfg.n_experts and cfg.top_k:
+        # subtract inactive routed expert fraction
+        inactive = 0
+        for name in ("w_gate", "w_up", "w_down"):
+            pass
+        per_layer_expert = 3 * cfg.d_model * cfg.d_ff_expert * cfg.n_experts
+        n_moe_layers = sum(
+            e[2] for e in cfg.pattern if e[0] == "scan" and "moe" in e[1])
+        frac = 1 - cfg.top_k / cfg.n_experts
+        total -= int(per_layer_expert * n_moe_layers * frac)
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * tokens (train) / 2 * N_active * tokens (inference)."""
+    sp = SHAPES[shape]
+    n = active_params(cfg)
+    if sp.step == "train":
+        return 6.0 * n * sp.global_batch * sp.seq_len
+    if sp.step == "prefill":
+        return 2.0 * n * sp.global_batch * sp.seq_len
+    return 2.0 * n * sp.global_batch          # decode: one token per row
+
+
+def load_cells(out_dir="experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(str(pathlib.Path(out_dir) / "*.json"))):
+        r = json.loads(pathlib.Path(f).read_text())
+        if r.get("status") != "ok":
+            cells.append(r)
+            continue
+        tr = r.get("traffic", {})
+        cb = r.get("collective_bytes", {})
+        n = r["n_chips"]
+        t_c = tr.get("flops", 0) / PEAK_FLOPS_BF16
+        t_m = tr.get("hbm_bytes", 0) / HBM_BW
+        t_x = cb.get("total", 0) / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        cfg = get_config(r["arch"])
+        mf = model_flops(cfg, r["shape"])
+        hlo_total_flops = tr.get("flops", 0) * n
+        r.update(t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+                 model_flops=mf,
+                 useful_frac=mf / hlo_total_flops if hlo_total_flops else 0,
+                 t_step=max(t_c, t_m, t_x),
+                 roofline_frac=t_c / max(t_c, t_m, t_x, 1e-12))
+        cells.append(r)
+    return cells
+
+
+def markdown(out_dir="experiments/dryrun", tag=None):
+    """Render the §Roofline table as markdown rows."""
+    rows = ["| arch | shape | mesh | tag | t_compute | t_memory | "
+            "t_collective | dominant | MF/HLO | roofline |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load_cells(out_dir):
+        if r.get("status") != "ok" or (tag and r.get("tag") != tag):
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+            f"{r['t_compute']*1e3:.1f}ms | {r['t_memory']*1e3:.1f}ms | "
+            f"{r['t_collective']*1e3:.1f}ms | {r['dominant']} | "
+            f"{r['useful_frac']*100:.1f}% | {r['roofline_frac']*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def run(out_dir="experiments/dryrun"):
+    cells = load_cells(out_dir)
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':5s} {'tag':10s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'dom':>10s} "
+           f"{'MF/HLO':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for r in cells:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} {r.get('mesh','?'):5s} "
+                  f"ERROR")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:5s} "
+              f"{r.get('tag','?'):10s} "
+              f"{r['t_compute']*1e3:8.1f}ms {r['t_memory']*1e3:8.1f}ms "
+              f"{r['t_collective']*1e3:8.1f}ms {r['dominant']:>10s} "
+              f"{r['useful_frac']*100:6.1f}% {r['roofline_frac']*100:6.1f}%")
+
+
+if __name__ == "__main__":
+    run()

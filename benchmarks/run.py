@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the §Roofline table when
+dry-run artifacts exist).  See DESIGN.md §6 for the paper-artifact index.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import (fig11_efficiency, fig12_offload, fig14_dsp,
+                        fig15_training, table4_matmul, table6_qnn)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table4_matmul.run()
+    fig11_efficiency.run()
+    fig12_offload.run()
+    fig14_dsp.run()
+    fig15_training.run()
+    table6_qnn.run()
+    # §Roofline table (requires experiments/dryrun/*.json from the dry-run)
+    if pathlib.Path("experiments/dryrun").exists():
+        print("\n=== roofline (from dry-run artifacts) ===")
+        from benchmarks import roofline_report
+        roofline_report.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table IV: mixed-precision MatMul throughput by operand format.
+
+The silicon metric is MAC/cycle on the Flex-V cluster; the TPU-native
+analogue per format is
+  * measured CPU wall time of the (jitted) quantized matmul (jnp path —
+    numerics identical to the Pallas kernel, which is validated separately
+    in interpret mode), and
+  * the *structural* v5e speedup: with sub-byte weights the matmul's
+    weight-byte term shrinks by 8/w_bits, which is the decode-regime win
+    (time = max(flops/peak, bytes/bw)); reported as est. v5e time ratio
+    vs w8a8 for a weight-bound shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import QuantConfig
+from repro.core.tiling import plan_matmul_tiles
+from repro.kernels.ops import prepare_weight, quantized_matmul
+
+FORMATS = [(2, 2), (4, 2), (4, 4), (8, 2), (8, 4), (8, 8)]   # (a, w) bits
+M, K, N = 256, 1024, 1024
+PEAK = 197e12
+BW = 819e9
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(key, (K, N), jnp.float32) * 0.05
+    flops = 2 * M * K * N
+
+    def v5e_time(w_bits, m_dec=8):
+        # decode-regime estimate (m small): weight bytes dominate, which is
+        # where the paper's packed formats pay on TPU (DESIGN.md §7).
+        fl = 2 * m_dec * K * N
+        wb = K * N * w_bits / 8 + m_dec * K
+        return max(fl / PEAK, wb / BW)
+
+    base = v5e_time(8)
+    for a_bits, w_bits in FORMATS:
+        cfg = QuantConfig(mode="int", a_bits=a_bits, w_bits=w_bits)
+        pw = prepare_weight(w, cfg)
+        fn = jax.jit(lambda x, pw: quantized_matmul(
+            x, pw, cfg, use_kernel=False))
+        us = time_fn(fn, x, pw)
+        plan = plan_matmul_tiles(M, K, N, x_bits=a_bits, w_bits=w_bits,
+                                 x_packed=a_bits < 8)
+        emit(f"table4/mm_w{w_bits}a{a_bits}", us,
+             f"v5e_speedup_vs_w8a8={base / v5e_time(w_bits):.2f}x;"
+             f"packed_bytes={pw.nbytes};tiles={plan.bm}x{plan.bk}x{plan.bn}")
+
+
+if __name__ == "__main__":
+    run()

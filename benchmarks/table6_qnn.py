@@ -1,0 +1,56 @@
+"""Paper Table VI: end-to-end QNN inference (MobileNetV1 8b / 8b4b,
+ResNet-20 4b2b): latency, model size, memory saved.
+
+Networks run at reduced width on this CPU (full-size MACs are reported
+analytically).  Memory-saved numbers reproduce Table VI's packing
+arithmetic exactly (47% / 63%-class reductions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.quant import QuantConfig
+from repro.models import vision as V
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # --- MobileNetV1 (reduced base=8 for CPU wall time) --------------------
+    specs_r = V.mobilenet_specs(base=8, n_classes=100)
+    p = V.init_vision(specs_r, key)
+    x = jax.random.normal(key, (1, 96, 96, 3), jnp.float32)
+    specs_full = V.mobilenet_specs(base=32)
+    b_fp = V.model_bytes(specs_full, None)
+    for tag, q in (("8b", QuantConfig(mode="int", a_bits=8, w_bits=8,
+                                      use_kernel=False)),
+                   ("8b4b", QuantConfig(mode="int", a_bits=8, w_bits=4,
+                                        use_kernel=False))):
+        fn = jax.jit(lambda p, x: V.mobilenet_apply(p, x, q))
+        us = time_fn(fn, p, x, iters=3)
+        b_q = V.model_bytes(specs_full, q)
+        b_8 = V.model_bytes(specs_full, QuantConfig(mode="int", w_bits=8))
+        emit(f"table6/mobilenetv1_{tag}", us,
+             f"macs_full={V.mobilenet_macs() / 1e6:.0f}M;"
+             f"size={b_q / 1e6:.2f}MB;saved_vs_8b={(1 - b_q / b_8) * 100:.0f}%")
+
+    # --- ResNet-20 4b2b ------------------------------------------------------
+    specs = V.resnet20_specs()
+    p = V.init_vision(specs, key)
+    x = jax.random.normal(key, (8, 32, 32, 3), jnp.float32)
+    for tag, q in (("8b", QuantConfig(mode="int", a_bits=8, w_bits=8,
+                                      use_kernel=False)),
+                   ("4b2b", QuantConfig(mode="int", a_bits=4, w_bits=2,
+                                        use_kernel=False))):
+        fn = jax.jit(lambda p, x: V.resnet20_apply(p, x, q))
+        us = time_fn(fn, p, x, iters=3)
+        b_q = V.model_bytes(specs, q)
+        b_8 = V.model_bytes(specs, QuantConfig(mode="int", w_bits=8))
+        emit(f"table6/resnet20_{tag}", us,
+             f"size={b_q / 1e3:.0f}kB;saved_vs_8b={(1 - b_q / b_8) * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

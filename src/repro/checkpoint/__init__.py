@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: async, atomic, mesh-elastic."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager, latest_step, restore, save,
+)

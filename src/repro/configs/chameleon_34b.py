@@ -1,0 +1,16 @@
+"""chameleon-34b [vlm] — early-fusion VQ image tokens
+[arXiv:2405.09818; unverified].  48L, d_model=8192, 64 heads (kv=8),
+d_ff=22016, vocab 65536 (text + VQ image codes), qk-norm (chameleon's
+training stabilizer).
+
+The VQ-VAE patch frontend is a STUB: input_specs() supplies precomputed
+token embeddings (B, S, d_model).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True, input_mode="embeds",
+)

@@ -1,0 +1,15 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf].  48L, d_model=1536, 24 MHA heads, d_ff=6144
+(GELU MLP), LayerNorm, vocab 2048 (one EnCodec codebook head).
+
+The EnCodec frontend is a STUB: input_specs() supplies precomputed frame
+embeddings (B, S, d_model) per the assignment instructions.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, d_ff=6144,
+    vocab_size=2048,
+    norm="layer", mlp_act="gelu", input_mode="embeds",
+)

@@ -1,0 +1,16 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+24L, d_model=1024, 4 heads, no FFN (projections live inside the cells),
+vocab 50304.  Block ratio 7:1 mLSTM:sLSTM (the paper's xLSTM[7:1]),
+arranged as three scanned periods of [7 x mLSTM, 1 x sLSTM].
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    ssm_chunk=256,
+    pattern=(("group", (("mlstm", 7), ("slstm", 1)), 3),),
+    sub_quadratic=True,
+)

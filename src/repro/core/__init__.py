@@ -1,0 +1,19 @@
+"""Core library: Shaheen's compute contribution as composable JAX modules.
+
+  quant    — QuantConfig ("the CSR"), symmetric int8/4/2 quantizers, STE QAT
+  packing  — sub-byte strided packing (Slicer&Router memory format)
+  tiling   — DORY-style VMEM tile planner
+  iotlb    — windowed permission-checked buffer views (software IOTLB)
+"""
+from repro.core.quant import (  # noqa: F401
+    BF16, QuantConfig, compute_scale, dequantize, fake_quant,
+    fake_quant_activation, fake_quant_weight, qmax, qmin, quantize,
+    quantize_activation, quantize_weight,
+)
+from repro.core.packing import (  # noqa: F401
+    pack, pack_factor, packed_shape, random_qtensor, unpack,
+)
+from repro.core.tiling import (  # noqa: F401
+    DEFAULT_VMEM_BUDGET, MatmulTilePlan, plan_matmul_tiles,
+)
+from repro.core.iotlb import Iotlb, IotlbFault, Window  # noqa: F401

@@ -1,0 +1,105 @@
+"""Software IOTLB: windowed, permission-checked views over shared buffers.
+
+Shaheen's IOTLB (§III-C2) mediates every cluster access to host memory: the
+host programs up to 32 entries (virtual range -> physical base + R/W perms);
+out-of-window accesses raise an interrupt on the host while the IOTLB keeps
+the AXI protocol alive (sinking writes, serving dummy reads) so a buggy or
+malicious cluster kernel cannot corrupt host state or deadlock the bus.
+
+The TPU runtime offers no user-programmable equivalent, so this transfers as
+a *software invariant-enforcement layer*, not a security boundary (see
+DESIGN.md §2-C5): the serving KV-cache manager and the host-offload staging
+buffers route every region access through an :class:`Iotlb`, which either
+translates it or records a structured fault — mirroring the graceful
+containment behaviour of the hardware block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+MAX_ENTRIES = 32   # matches the silicon block
+
+
+class IotlbFault(Exception):
+    def __init__(self, kind: str, detail: str):
+        self.kind = kind
+        super().__init__(f"IOTLB fault [{kind}]: {detail}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    name: str
+    virt_base: int
+    size: int
+    phys_base: int
+    readable: bool = True
+    writable: bool = True
+
+    @property
+    def virt_end(self) -> int:
+        return self.virt_base + self.size
+
+    def contains(self, start: int, length: int) -> bool:
+        return self.virt_base <= start and start + length <= self.virt_end
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    kind: str
+    start: int
+    length: int
+    write: bool
+
+
+class Iotlb:
+    """Host-programmed translation table with graceful fault containment."""
+
+    def __init__(self, max_entries: int = MAX_ENTRIES):
+        self._max = max_entries
+        self._windows: Dict[str, Window] = {}
+        self.faults: List[FaultRecord] = []
+
+    # -- host-side programming (CVA6 writing the 32 entries) ---------------
+    def program(self, window: Window) -> None:
+        if len(self._windows) >= self._max and window.name not in self._windows:
+            raise IotlbFault("capacity", f"more than {self._max} entries")
+        for other in self._windows.values():
+            if other.name == window.name:
+                continue
+            if (window.virt_base < other.virt_end
+                    and other.virt_base < window.virt_end):
+                raise IotlbFault(
+                    "overlap", f"{window.name} overlaps {other.name}")
+        self._windows[window.name] = window
+
+    def evict(self, name: str) -> None:
+        self._windows.pop(name, None)
+
+    # -- accelerator-side access path --------------------------------------
+    def translate(self, start: int, length: int, *, write: bool,
+                  strict: bool = True) -> Optional[Tuple[int, int]]:
+        """Map a virtual range to (phys_start, length).
+
+        On a miss/permission error: raises when ``strict`` (host notified),
+        otherwise records the fault and returns None (transaction sunk, as
+        the hardware block does to keep AXI alive).
+        """
+        for w in self._windows.values():
+            if w.contains(start, length):
+                if write and not w.writable:
+                    return self._fault("wperm", start, length, write, strict)
+                if not write and not w.readable:
+                    return self._fault("rperm", start, length, write, strict)
+                return (w.phys_base + (start - w.virt_base), length)
+        return self._fault("miss", start, length, write, strict)
+
+    def _fault(self, kind, start, length, write, strict):
+        self.faults.append(FaultRecord(kind, start, length, write))
+        if strict:
+            raise IotlbFault(kind, f"range [{start}, {start+length}) write={write}")
+        return None
+
+    @property
+    def windows(self) -> Tuple[Window, ...]:
+        return tuple(self._windows.values())

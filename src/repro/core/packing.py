@@ -1,0 +1,93 @@
+"""Sub-byte operand packing — the memory format behind Flex-V's Slicer&Router.
+
+Flex-V keeps int4/int2 operands densely packed in 32-bit words and extracts
+lanes inside the datapath (Fig. 6/7 of the paper), eliminating the software
+pack/unpack that cripples XpulpNN on mixed-precision kernels (Table IV).
+
+On TPU we keep the same discipline: sub-byte tensors live **packed in HBM**
+(int4 -> 2 lanes/byte, int2 -> 4 lanes/byte) and are expanded only inside the
+Pallas kernel's VMEM tile.  The packing layout is *strided*, chosen so the
+kernel-side unpack is `f` shift/mask ops followed by a contiguous block
+concatenation (no lane interleave, which would be a costly sublane shuffle on
+TPU):
+
+    factor f = 8 // bits,  axis length K = f * Kp
+    byte j (j in [0, Kp)) stores lanes i = 0..f-1
+    lane i of byte j  <=>  original element at index  i*Kp + j
+
+so unpacking lane i yields the contiguous block  [i*Kp, (i+1)*Kp)  and the
+full tensor is  concat(lane_0, ..., lane_{f-1})  along the packed axis.
+
+Values are signed two's-complement within each b-bit lane.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qmax, qmin
+
+
+def pack_factor(bits: int) -> int:
+    if bits not in (2, 4, 8):
+        raise ValueError(f"bits must be one of (2,4,8), got {bits}")
+    return 8 // bits
+
+
+def pack(q: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Pack b-bit signed values (stored in int8) along ``axis``.
+
+    Result is int8 with ``axis`` shrunk by ``8 // bits``; identity for b=8.
+    """
+    f = pack_factor(bits)
+    if f == 1:
+        return q.astype(jnp.int8)
+    axis = axis % q.ndim
+    k = q.shape[axis]
+    if k % f:
+        raise ValueError(f"axis length {k} not divisible by pack factor {f}")
+    kp = k // f
+    mask = (1 << bits) - 1
+    word = jnp.zeros(
+        q.shape[:axis] + (kp,) + q.shape[axis + 1:], dtype=jnp.int32)
+    qi = q.astype(jnp.int32)
+    for i in range(f):
+        lane = jax.lax.slice_in_dim(qi, i * kp, (i + 1) * kp, axis=axis)
+        word = word | ((lane & mask) << (i * bits))
+    # int32 word values fit in a byte by construction (f*bits == 8).
+    return word.astype(jnp.uint8).view(jnp.int8)
+
+
+def unpack(packed: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack`; returns sign-extended int8 values.
+
+    Written with ops Pallas/Mosaic lowers cheaply (shift, mask, block concat)
+    so the same routine is used inside kernels on VMEM tiles.
+    """
+    f = pack_factor(bits)
+    if f == 1:
+        return packed.astype(jnp.int8)
+    axis = axis % packed.ndim
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    w = packed.view(jnp.uint8).astype(jnp.int32)
+    lanes = []
+    for i in range(f):
+        v = (w >> (i * bits)) & mask
+        v = ((v + half) & mask) - half          # sign-extend b-bit lane
+        lanes.append(v)
+    return jnp.concatenate(lanes, axis=axis).astype(jnp.int8)
+
+
+def packed_shape(shape, bits: int, axis: int = 0):
+    f = pack_factor(bits)
+    axis = axis % len(shape)
+    if shape[axis] % f:
+        raise ValueError(f"dim {shape[axis]} not divisible by {f}")
+    return tuple(s // f if i == axis else s for i, s in enumerate(shape))
+
+
+def random_qtensor(key, shape, bits: int):
+    """Uniform random values spanning the full b-bit signed range (tests)."""
+    return jax.random.randint(
+        key, shape, qmin(bits), qmax(bits) + 1, dtype=jnp.int8)

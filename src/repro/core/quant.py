@@ -1,0 +1,158 @@
+"""Symmetric integer quantization — the numerical core of Shaheen's Flex-V path.
+
+The paper's Flex-V cluster executes linear kernels on int8/int4/int2 operands
+(Table IV), with the operand *format* held in a CSR rather than encoded in the
+opcode ("dynamic bit-scalable execution").  This module is the software
+equivalent of that CSR-driven format state: a :class:`QuantConfig` names the
+format once, and every quantized layer reads it — call sites never choose a
+per-call kernel variant.
+
+Conventions (match PULP-NN / Flex-V):
+  * signed symmetric quantization, zero-point = 0,
+  * b-bit range  [-2^(b-1), 2^(b-1) - 1]   (e.g. int4 -> [-8, 7]),
+  * weights: static per-output-channel scales,
+  * activations: dynamic per-row (per-token) scales,
+  * accumulation in int32, dequantized with a_scale * w_scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+def qmin(bits: int) -> int:
+    return -(1 << (bits - 1))
+
+
+def qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """The 'CSR' of the framework: one object names the numeric format.
+
+    mode:
+      'bf16'  — no quantization (paper's FP16/bf16 SIMD path, C2)
+      'int'   — int activations x int weights on the MXU int8 path (C1)
+      'wo'    — weight-only: packed sub-byte weights dequantized to bf16
+                inside the kernel; activations stay bf16 (serving path)
+      'qat'   — fake-quant with straight-through estimators (online learning)
+    """
+    mode: str = "bf16"
+    a_bits: int = 8
+    w_bits: int = 8
+    # 'channel' (per output channel) or 'tensor' for weight scales.
+    w_granularity: str = "channel"
+    # use the Pallas kernel (True) or the pure-jnp reference path (False).
+    use_kernel: bool = True
+
+    def __post_init__(self):
+        if self.mode not in ("bf16", "int", "wo", "qat"):
+            raise ValueError(f"unknown quant mode {self.mode!r}")
+        if self.mode != "bf16":
+            if self.a_bits not in SUPPORTED_BITS:
+                raise ValueError(f"a_bits={self.a_bits} not in {SUPPORTED_BITS}")
+            if self.w_bits not in SUPPORTED_BITS:
+                raise ValueError(f"w_bits={self.w_bits} not in {SUPPORTED_BITS}")
+        if self.w_granularity not in ("channel", "tensor"):
+            raise ValueError(f"bad w_granularity {self.w_granularity!r}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode != "bf16"
+
+    def tag(self) -> str:
+        if self.mode == "bf16":
+            return "bf16"
+        if self.mode == "wo":
+            return f"w{self.w_bits}a16"
+        return f"w{self.w_bits}a{self.a_bits}"
+
+
+BF16 = QuantConfig(mode="bf16")
+
+
+def compute_scale(x: jax.Array, bits: int, axis, eps: float = 1e-8) -> jax.Array:
+    """absmax scale so that max|x| maps to qmax(bits)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.maximum(amax, eps) / qmax(bits)
+
+
+def quantize(x: jax.Array, bits: int, axis=None, scale: Optional[jax.Array] = None):
+    """Quantize to b-bit signed integers (stored widened in int8).
+
+    Returns (q, scale) with q int8 whose values fit the b-bit range and
+    scale float32 broadcastable against ``x``'s shape.
+    """
+    if scale is None:
+        scale = compute_scale(x, bits, axis=axis)
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    q = jnp.clip(q, qmin(bits), qmax(bits)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_weight(w: jax.Array, bits: int, granularity: str = "channel"):
+    """Static weight quantization. ``w`` is (in_features, out_features);
+    per-channel scales are per *output* channel (axis 0 reduction)."""
+    axis = 0 if granularity == "channel" else None
+    q, scale = quantize(w, bits, axis=axis)
+    # scale shape: (1, out) for channel, (1, 1) for tensor -> squeeze row dim
+    return q, scale.reshape(-1).astype(jnp.float32)
+
+
+def quantize_activation(x: jax.Array, bits: int):
+    """Dynamic per-row (per-token) activation quantization.
+
+    x: (..., K). Returns q int8 (..., K) and scales (..., 1) float32.
+    """
+    q, scale = quantize(x, bits, axis=-1)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through-estimator fake quantization (QAT / online learning, C2).
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Quantize-dequantize with identity (straight-through) gradient."""
+    q, scale = quantize(x, bits, axis=axis)
+    return dequantize(q, scale, dtype=x.dtype)
+
+
+def _fq_fwd(x, bits, axis):
+    scale = compute_scale(x, bits, axis=axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), qmin(bits), qmax(bits))
+    y = (q * scale).astype(x.dtype)
+    # pass the clip mask so gradients are zeroed outside the representable
+    # range (standard STE-with-clipping; keeps QAT stable at 2 bits).
+    inside = (x.astype(jnp.float32) / scale >= qmin(bits)) & (
+        x.astype(jnp.float32) / scale <= qmax(bits))
+    return y, inside
+
+
+def _fq_bwd(bits, axis, inside, g):
+    return (jnp.where(inside, g, 0).astype(g.dtype),)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_weight(w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    axis = 0 if cfg.w_granularity == "channel" else None
+    return fake_quant(w, cfg.w_bits, axis)
+
+
+def fake_quant_activation(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    return fake_quant(x, cfg.a_bits, -1)

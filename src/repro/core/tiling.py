@@ -1,0 +1,123 @@
+"""DORY-style tile planner, retargeted from L1-SPM to TPU VMEM.
+
+The paper's software stack uses DORY [49] to pick layer tiles that fit the
+cluster's 256 kB L1 scratchpad and to schedule double-buffered DMA transfers
+so that >95% of data movement overlaps compute.  On TPU the same two jobs
+exist with different constants:
+
+  * capacity:   VMEM (default budget 32 MiB, configurable) instead of L1,
+  * legality:   MXU/VPU alignment — last dim multiples of 128 lanes, the
+                second-to-last dim multiples of the dtype sublane count
+                (8 for f32, 16 for bf16, 32 for int8) — instead of 4-byte
+                SIMD alignment,
+  * overlap:    the Pallas pipeline emitter double-buffers HBM->VMEM copies
+                for every BlockSpec automatically, which is exactly DORY's
+                double-buffering scheme (hence the x2 on in/out tiles below).
+
+``plan_matmul_tiles`` minimizes HBM traffic  ~ M*K*N*(1/bm + 1/bn)  under the
+VMEM budget, preferring square-ish (bm, bn) and the largest legal bk, the
+same objective DORY optimizes for L1 reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+SUBLANE = {1: 32, 2: 16, 4: 8}   # bytes-per-element -> sublane multiple
+LANE = 128
+DEFAULT_VMEM_BUDGET = 32 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTilePlan:
+    bm: int
+    bk: int
+    bn: int
+    vmem_bytes: int          # estimated VMEM footprint incl. double buffering
+    grid: tuple              # (gm, gn, gk)
+
+    def __str__(self):
+        return (f"tiles(bm={self.bm}, bk={self.bk}, bn={self.bn}) "
+                f"grid={self.grid} vmem={self.vmem_bytes/2**20:.2f}MiB")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _candidates(dim: int, align: int, cap: int):
+    """Aligned tile sizes <= min(dim_padded, cap), descending."""
+    hi = min(_round_up(dim, align), cap)
+    out, t = [], hi
+    while t >= align:
+        out.append(t)
+        t //= 2
+        t = _round_up(t, align) if t >= align else t
+    # dedupe, keep descending order
+    seen, res = set(), []
+    for t in out:
+        if t not in seen:
+            seen.add(t)
+            res.append(t)
+    return res
+
+
+def matmul_vmem_bytes(bm: int, bk: int, bn: int, *, x_bytes: float,
+                      w_bytes: float, out_bytes: int, acc_bytes: int = 4) -> int:
+    """VMEM per grid step.  x/w_bytes may be fractional (packed sub-byte)."""
+    x_tile = bm * bk * x_bytes
+    w_tile = bk * bn * w_bytes
+    out_tile = bm * bn * out_bytes
+    acc = bm * bn * acc_bytes
+    # Pallas double-buffers streamed inputs and outputs; the accumulator is a
+    # single scratch allocation.
+    return int(2 * (x_tile + w_tile) + 2 * out_tile + acc)
+
+
+def plan_matmul_tiles(m: int, k: int, n: int, *,
+                      x_bits: int = 8, w_bits: int = 8, out_bytes: int = 4,
+                      x_packed: bool = False,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                      max_bm: int = 512, max_bn: int = 1024,
+                      max_bk: int = 2048) -> MatmulTilePlan:
+    """Pick (bm, bk, bn) for an (M,K) x (K,N) matmul with packed operands.
+
+    K tiles must additionally be divisible by both pack factors so each VMEM
+    tile of a packed operand unpacks to a whole number of lane blocks.
+    """
+    x_bytes = (x_bits / 8.0) if x_packed else max(1, x_bits // 8)
+    w_bytes = w_bits / 8.0
+    # sublane multiple follows the *stored* x dtype: int8 -> 32, bf16 -> 16.
+    sub = SUBLANE[1] if x_bits <= 8 else SUBLANE[2]
+    k_align = LANE
+    # packed lanes: a bk tile must split into pack_factor contiguous blocks,
+    # and the packed minor dim stays 128-lane aligned.
+    for bits in (x_bits if x_packed else 8, w_bits):
+        k_align = max(k_align, LANE * (8 // bits))
+    if k % k_align:
+        # K too small/odd for the strict alignment: single K tile (the
+        # kernel still unpacks whole lane blocks; K is pre-padded to 256).
+        k_cands = [k]
+    else:
+        k_cands = _candidates(k, k_align, max_bk)
+
+    best = None
+    for bn in _candidates(n, LANE, max_bn):
+        for bm in _candidates(m, sub, max_bm):
+            for bk in k_cands:
+                vm = matmul_vmem_bytes(bm, bk, bn, x_bytes=x_bytes,
+                                       w_bytes=w_bytes, out_bytes=out_bytes)
+                if vm > vmem_budget:
+                    continue
+                # HBM traffic objective (lower better), then prefer big bk
+                # (fewer grid steps / less pipeline overhead).
+                score = (1.0 / bm + 1.0 / bn, -bk, -(bm * bn))
+                if best is None or score < best[0]:
+                    grid = (math.ceil(m / bm), math.ceil(n / bn),
+                            math.ceil(k / bk))
+                    best = (score, MatmulTilePlan(bm, bk, bn, vm, grid))
+                break  # largest feasible bk for this (bm, bn) found
+    if best is None:
+        raise ValueError(
+            f"no legal tiling for ({m},{k},{n}) within {vmem_budget} bytes")
+    return best[1]

@@ -1,0 +1,4 @@
+"""Deterministic, shard-aware data pipeline."""
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, TokenDataset, make_batch, synthetic_batch,
+)

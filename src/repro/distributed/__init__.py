@@ -1,0 +1,5 @@
+"""Distributed runtime: logical sharding rules, collectives, compression."""
+from repro.distributed.sharding import (  # noqa: F401
+    FSDP_SP_RULES, RULE_SETS, TP_RULES, current_mesh, lshard, make_sharding,
+    make_spec, use_rules,
+)

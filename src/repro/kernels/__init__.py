@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (mixed-precision
+quantized matmul) with jit wrappers (ops) and pure-jnp oracles (ref)."""
+from repro.kernels.ops import (  # noqa: F401
+    PackedWeight, prepare_weight, quantized_matmul,
+)

@@ -1,0 +1,130 @@
+"""Public jit'd wrappers around the mixed-precision matmul kernels.
+
+This is the layer model code calls.  It owns:
+  * offline weight preparation (quantize + strided sub-byte packing),
+  * DORY-style tile planning (repro.core.tiling) per matmul shape,
+  * padding to legal tiles and un-padding,
+  * dynamic per-token activation quantization for the int path,
+  * kernel/reference dispatch: the Pallas kernel runs in interpret mode on
+    CPU (this container) and compiled on TPU; ``use_kernel=False`` routes to
+    the pure-jnp oracle (used by the distributed dry-run, where the jnp path
+    lowers through XLA SPMD like any other op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack, pack_factor
+from repro.core.quant import QuantConfig, quantize_activation, quantize_weight
+from repro.core.tiling import plan_matmul_tiles
+from repro.kernels import ref
+from repro.kernels.mpq_matmul import mpq_matmul_kernel, wo_matmul_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """Offline-prepared weight: packed sub-byte payload + dequant scales."""
+    packed: jax.Array        # (K//fw, N) int8
+    scale: jax.Array         # (N,) float32
+    k: int
+    n: int
+    w_bits: int
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.k, self.n, self.w_bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.size + self.scale.size * 4
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def prepare_weight(w: jax.Array, cfg: QuantConfig) -> PackedWeight:
+    """Quantize (per-channel) and pack a (K, N) weight for the kernels.
+
+    K is zero-padded to a 256-lane multiple before packing so any legal bk
+    tile divides it; zero lanes contribute nothing to the dot product.
+    """
+    k, n = w.shape
+    k_pad = _round_up(k, 256)
+    n_pad = _round_up(n, 128)
+    q, scale = quantize_weight(w, cfg.w_bits, cfg.w_granularity)
+    if cfg.w_granularity == "tensor":
+        scale = jnp.broadcast_to(scale, (n,))
+    q = jnp.pad(q, ((0, k_pad - k), (0, n_pad - n)))
+    scale = jnp.pad(scale, (0, n_pad - n))
+    return PackedWeight(pack(q, cfg.w_bits, axis=0), scale, k, n, cfg.w_bits)
+
+
+def _pad_rows(x: jax.Array, m: int) -> jax.Array:
+    return x if x.shape[0] == m else jnp.pad(x, ((0, m - x.shape[0]), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
+def quantized_matmul(x: jax.Array, pw: PackedWeight, cfg: QuantConfig,
+                     use_kernel: bool = True, interpret: bool | None = None):
+    """y = x @ W for a prepared weight, in the format named by ``cfg``.
+
+    x: (..., K) bf16/f32.  Returns (..., N) in x.dtype (wo) / f32->x.dtype
+    (int path dequantized).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    lead = x.shape[:-1]
+    k, n = pw.k, pw.n
+    kp = pw.packed.shape[0] * pack_factor(pw.w_bits)
+    np_ = pw.packed.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    if k != kp:
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+
+    if cfg.mode == "int":
+        x_q, x_scale = quantize_activation(x2, cfg.a_bits)
+        fa = pack_factor(cfg.a_bits)
+        if fa > 1:
+            x_q = pack(x_q, cfg.a_bits, axis=1)
+        if not use_kernel:
+            out = ref.mpq_matmul_ref(x_q, x_scale, pw.packed, pw.scale,
+                                     a_bits=cfg.a_bits, w_bits=pw.w_bits)
+        else:
+            plan = plan_matmul_tiles(m, kp, np_, x_bits=cfg.a_bits,
+                                     w_bits=pw.w_bits, x_packed=fa > 1)
+            mp = _round_up(m, plan.bm)
+            out = mpq_matmul_kernel(
+                _pad_rows(x_q, mp), _pad_rows(x_scale, mp), pw.packed,
+                pw.scale[None, :], a_bits=cfg.a_bits, w_bits=pw.w_bits,
+                bm=plan.bm, bk=plan.bk, bn=plan.bn, interpret=interpret)
+            out = out[:m]
+        out = out.astype(x.dtype)
+    elif cfg.mode == "wo":
+        if not use_kernel:
+            out = ref.wo_matmul_ref(x2, pw.packed, pw.scale,
+                                    w_bits=pw.w_bits, out_dtype=x.dtype)
+        else:
+            plan = plan_matmul_tiles(m, kp, np_, x_bits=16, w_bits=pw.w_bits)
+            mp = _round_up(m, plan.bm)
+            out = wo_matmul_kernel(
+                _pad_rows(x2, mp), pw.packed, pw.scale[None, :],
+                w_bits=pw.w_bits, bm=plan.bm, bk=plan.bk, bn=plan.bn,
+                out_dtype=x.dtype, interpret=interpret)
+            out = out[:m]
+    else:
+        raise ValueError(f"quantized_matmul needs mode int/wo, got {cfg.mode}")
+    return out[:, :n].reshape(*lead, n)

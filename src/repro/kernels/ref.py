@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the mixed-precision matmul kernels.
+
+These implement the exact semantics the Pallas kernels must match and are the
+ground truth for the per-kernel allclose sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack
+
+
+def mpq_matmul_ref(x_q: jax.Array, x_scale: jax.Array, w_packed: jax.Array,
+                   w_scale: jax.Array, *, a_bits: int, w_bits: int,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """Integer path (paper C1): int{8,4,2} acts x int{8,4,2} weights.
+
+    x_q:      (M, K//fa) packed int8 (fa = 8//a_bits; fa==1 means unpacked)
+    x_scale:  (M, 1) float32 per-row dynamic scales
+    w_packed: (K//fw, N) packed int8
+    w_scale:  (N,) float32 per-output-channel scales
+    """
+    x = unpack(x_q, a_bits, axis=1).astype(jnp.int32)
+    w = unpack(w_packed, w_bits, axis=0).astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale * w_scale[None, :]
+    return out.astype(out_dtype)
+
+
+def wo_matmul_ref(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array, *,
+                  w_bits: int, out_dtype=None) -> jax.Array:
+    """Weight-only path (serving): bf16 acts x packed int{8,4,2} weights.
+
+    The per-channel scale is applied after accumulation (scales only touch
+    the N dimension), matching the kernel.
+    """
+    out_dtype = out_dtype or x.dtype
+    w = unpack(w_packed, w_bits, axis=0)
+    acc = jax.lax.dot_general(
+        x, w.astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return (acc * w_scale[None, :].astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,540 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses the compiled (partitioned) HLO text, sums the
+operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, and multiplies ops inside while loops by
+the loop trip count (scan-over-layers puts most collectives inside a
+while body — missing that would undercount by ~n_layers).
+
+Trip counts are recovered heuristically from the loop condition
+computation (largest integer constant compared against the induction
+variable), which is exact for lax.scan-generated loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def shape_bytes(type_str: str) -> float:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return b * n
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    bytes_per_call: float
+    calls: int
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_per_call * self.calls
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _COMP_START.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def _result_types(line: str) -> List[str]:
+    """Operand/result type strings of an op line (result side of '=')."""
+    # result type is between '=' and the op name; tuples list several.
+    try:
+        rhs = line.split("=", 1)[1].strip()
+    except IndexError:
+        return []
+    m = re.match(r"\(([^)]*)\)", rhs)
+    if m:
+        return [t.strip() for t in m.group(1).split(",") if "[" in t]
+    m = re.match(r"([a-z0-9]+\[[0-9,]*\])", rhs)
+    return [m.group(1)] if m else []
+
+
+def analyze_collectives(hlo: str) -> List[CollectiveOp]:
+    comps = _split_computations(hlo)
+
+    # trip count per while body: largest s32 constant in the condition.
+    body_trips: Dict[str, int] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {}   # parent -> (child, mult)
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                body_trips[body] = trip
+                edges.setdefault(name, []).append((body, trip))
+                edges.setdefault(name, []).append((cond, 1))
+            else:
+                cm = _CALL_RE.search(ln)
+                if cm:
+                    edges.setdefault(name, []).append((cm.group(1), 1))
+
+    # propagate multipliers from the entry computation.
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if m <= mult.get(name, 0):
+            return
+        mult[name] = m
+        for child, k in edges.get(name, []):
+            visit(child, m * k)
+
+    if entry:
+        visit(entry, 1)
+    else:
+        for name in comps:
+            mult.setdefault(name, 1)
+
+    ops: List[CollectiveOp] = []
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for ln in lines:
+            for kind in COLLECTIVES:
+                if re.search(rf"\b{kind}\(", ln) or re.search(
+                        rf"= \S+ {kind}", ln):
+                    nbytes = sum(shape_bytes(t) for t in _result_types(ln))
+                    ops.append(CollectiveOp(kind, name, nbytes, m))
+                    break
+    return ops
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Total collective bytes by kind (+ 'total'), loop-trip adjusted."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for op in analyze_collectives(hlo):
+        out[op.kind] += op.total_bytes
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loop-adjusted FLOP and HBM-traffic accounting.
+#
+# XLA's compiled.cost_analysis() counts every while body ONCE (verified
+# empirically), which undercounts a scan-over-layers model by ~n_layers.
+# We therefore re-derive both terms from the scheduled HLO with the loop
+# multipliers computed above:
+#   * flops: 2 * prod(result dims) * prod(lhs contracting dims) per `dot`
+#     (CPU HLO keeps dots unfused; convolutions don't appear in this model
+#     zoo), each scaled by its computation's trip multiplier;
+#   * hbm bytes: every scheduled top-level op materializes its result and
+#     reads its operands (post-fusion HLO is a buffer-level schedule), so
+#     traffic ~= sum(result + operand bytes) over non-free ops x multiplier.
+# ---------------------------------------------------------------------------
+
+_FREE_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "call", "conditional", "after-all",
+             "custom-call")
+# ops that touch only O(result) bytes regardless of operand size
+# (dynamic-slice reads a window; broadcast/iota write without reading).
+_RESULT_ONLY_OPS = ("dynamic-slice", "slice", "broadcast", "iota", "pad",
+                    "gather", "reverse")
+# ops that touch only the update-region operand (read-modify-write)
+_REGION_OPS = {"dynamic-update-slice": 1, "scatter": 2}
+_OPNAME_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_RESULT_NAME_RE = re.compile(r"^%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_HEADER_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _computation_tables(hlo: str):
+    """Per computation: (lines, symbol table name -> type string)."""
+    comps = _split_computations(hlo)
+    tables: Dict[str, Dict[str, str]] = {}
+    headers: Dict[str, str] = {}
+    # recover header lines for parameter shapes.
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None and s.endswith("{"):
+            m = _COMP_START.match(line)
+            if m:
+                cur = m.group(1)
+                headers[cur] = line
+        elif s == "}":
+            cur = None
+    for name, lines in comps.items():
+        table: Dict[str, str] = {}
+        for pname, ptype in _HEADER_PARAM_RE.findall(headers.get(name, "")):
+            table[pname] = ptype
+        for ln in lines:
+            rm = _RESULT_NAME_RE.match(ln)
+            if rm:
+                types = _result_types(ln)
+                if types:
+                    table[rm.group(1)] = types[0]
+        tables[name] = table
+    return comps, tables
+
+
+def _multipliers(hlo: str) -> Dict[str, int]:
+    comps = _split_computations(hlo)
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                edges.setdefault(name, []).append((body, trip))
+                edges.setdefault(name, []).append((cond, 1))
+            else:
+                cm = _CALL_RE.search(ln)
+                if cm:
+                    edges.setdefault(name, []).append((cm.group(1), 1))
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    mult: Dict[str, int] = {}
+
+    def visit(n, m):
+        if m <= mult.get(n, 0):
+            return
+        mult[n] = m
+        for child, k in edges.get(n, []):
+            visit(child, m * k)
+
+    if entry:
+        visit(entry, 1)
+    for n in comps:
+        mult.setdefault(n, 0)   # unreachable (dead) computations
+    return mult
+
+
+def traffic_analysis(hlo: str) -> Dict[str, float]:
+    """Loop-adjusted {'flops', 'hbm_bytes', 'dot_count'} per device."""
+    comps, tables = _computation_tables(hlo)
+    mult = _multipliers(hlo)
+    flops = 0.0
+    hbm = 0.0
+    ndot = 0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        if m == 0:
+            continue
+        table = tables[cname]
+        # fusion internals don't touch HBM (they're the compute units of the
+        # buffer-level schedule); while bodies and reducers must be counted.
+        fused = cname.startswith("fused_computation")
+        for ln in lines:
+            om = _OPNAME_RE.search(ln)
+            opname = om.group(1) if om else ""
+            if opname == "dot":
+                ops = _OPERAND_RE.findall(ln.split("dot(", 1)[1])
+                cm = _CONTRACT_RE.search(ln)
+                rdims = _shape_dims(_result_types(ln)[0]) if _result_types(ln) else None
+                lhs_t = table.get(ops[0]) if ops else None
+                if rdims is not None and lhs_t and cm:
+                    ldims = _shape_dims(lhs_t)
+                    contract = 1
+                    for d in (int(x) for x in cm.group(1).split(",") if x):
+                        contract *= ldims[d] if d < len(ldims) else 1
+                    r = 1
+                    for d in rdims:
+                        r *= d
+                    flops += 2.0 * r * contract * m
+                    ndot += 1
+            if fused:
+                continue   # only top-level (scheduled) ops move HBM bytes
+            if opname in _FREE_OPS or not opname:
+                continue
+            types = _result_types(ln)
+            result_bytes = sum(shape_bytes(t) for t in types)
+            paren = ln.split(f"{opname}(", 1)
+            operands = []
+            if len(paren) > 1:
+                arglist = paren[1].split(")", 1)[0]
+                operands = _OPERAND_RE.findall(arglist)
+
+            if opname in _RESULT_ONLY_OPS:
+                nbytes = 2 * result_bytes            # read window + write
+            elif opname in _REGION_OPS:
+                i = _REGION_OPS[opname]
+                t = table.get(operands[i]) if i < len(operands) else None
+                nbytes = 2 * (shape_bytes(t) if t else result_bytes)
+            elif opname == "fusion":
+                cm2 = _CALL_RE.search(ln)
+                flines = comps.get(cm2.group(1), []) if cm2 else []
+                ftable = tables.get(cm2.group(1), {}) if cm2 else {}
+                dus = _fusion_dus_alias(flines, ftable)
+                if dus >= 0:
+                    nbytes = dus       # in-place carried-buffer update
+                elif _fusion_pure_convert(flines):
+                    # CPU bf16-legalization staging: count the narrow side.
+                    opsum = sum(shape_bytes(table.get(o, ""))
+                                for o in operands if table.get(o))
+                    nbytes = min(result_bytes, opsum) if opsum else \
+                        result_bytes
+                else:
+                    # count result + operand bytes, but operands consumed
+                    # only through a windowed read (dynamic-slice/gather on
+                    # a fusion parameter) count as the window, not the full
+                    # buffer — scan bodies read their xs arrays this way.
+                    nbytes = result_bytes
+                    windows = _fusion_window_params(flines)
+                    for pos, operand in enumerate(operands):
+                        t = table.get(operand)
+                        if not t:
+                            continue
+                        w = windows.get(pos)
+                        nbytes += min(w, shape_bytes(t)) if w is not None \
+                            else shape_bytes(t)
+            else:
+                nbytes = result_bytes + sum(
+                    shape_bytes(table.get(o, "")) for o in operands
+                    if table.get(o))
+            hbm += nbytes * m
+    return {"flops": flops, "hbm_bytes": hbm, "dot_count": float(ndot)}
+
+
+def traffic_report(hlo: str, top: int = 15):
+    """Top HBM-traffic contributors: (bytes_total, mult, op, result_type,
+    computation) — the profile the §Perf loop reads."""
+    comps, tables = _computation_tables(hlo)
+    mult = _multipliers(hlo)
+    rows = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        if m == 0 or cname.startswith("fused_computation"):
+            continue
+        table = tables[cname]
+        for ln in lines:
+            om = _OPNAME_RE.search(ln)
+            opname = om.group(1) if om else ""
+            if opname in _FREE_OPS or not opname:
+                continue
+            types = _result_types(ln)
+            result_bytes = sum(shape_bytes(t) for t in types)
+            paren = ln.split(f"{opname}(", 1)
+            operands = _OPERAND_RE.findall(paren[1].split(")", 1)[0]) \
+                if len(paren) > 1 else []
+            if opname in _RESULT_ONLY_OPS:
+                nbytes = 2 * result_bytes
+            elif opname in _REGION_OPS:
+                i = _REGION_OPS[opname]
+                t = table.get(operands[i]) if i < len(operands) else None
+                nbytes = 2 * (shape_bytes(t) if t else result_bytes)
+            elif opname == "fusion":
+                cm2 = _CALL_RE.search(ln)
+                flines = comps.get(cm2.group(1), []) if cm2 else []
+                ftable = tables.get(cm2.group(1), {}) if cm2 else {}
+                dus = _fusion_dus_alias(flines, ftable)
+                if dus >= 0:
+                    nbytes = dus
+                elif _fusion_pure_convert(flines):
+                    opsum = sum(shape_bytes(table.get(o, ""))
+                                for o in operands if table.get(o))
+                    nbytes = min(result_bytes, opsum) if opsum else \
+                        result_bytes
+                else:
+                    windows = _fusion_window_params(flines)
+                    nbytes = result_bytes
+                    for pos, operand in enumerate(operands):
+                        t = table.get(operand)
+                        if not t:
+                            continue
+                        w = windows.get(pos)
+                        nbytes += min(w, shape_bytes(t)) if w is not None \
+                            else shape_bytes(t)
+            else:
+                nbytes = result_bytes + sum(
+                    shape_bytes(table.get(o, "")) for o in operands
+                    if table.get(o))
+            if nbytes * m > 0:
+                meta = re.search(r'op_name="([^"]+)"', ln)
+                rows.append((nbytes * m, m, opname,
+                             types[0] if types else "?",
+                             (meta.group(1)[-70:] if meta else cname[:40])))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+_PARAM_ORDER_RE = re.compile(r"=\s*\S+\s+parameter\((\d+)\)")
+
+
+def _fusion_dus_alias(lines, table) -> float:
+    """If the fused computation is an in-place carried-buffer update — its
+    root is a dynamic-update-slice, possibly wrapped in converts (XLA:CPU
+    legalizes bf16 through f32 convert pairs; a TPU build aliases the
+    buffer) — return the update-region bytes, else -1."""
+    root = None
+    for ln in lines:
+        if ln.startswith("ROOT"):
+            root = ln
+    if root is None:
+        return -1.0
+    # walk back through convert/bitcast/copy wrappers to find the DUS.
+    by_name = {}
+    for ln in lines:
+        rm = _RESULT_NAME_RE.match(ln)
+        if rm:
+            by_name[rm.group(1)] = ln
+    cur = root
+    for _ in range(4):
+        om = _OPNAME_RE.search(cur)
+        op = om.group(1) if om else ""
+        if op == "dynamic-update-slice":
+            ops = _OPERAND_RE.findall(
+                cur.split("dynamic-update-slice(", 1)[1])
+            if len(ops) < 2:
+                return -1.0
+            t = table.get(ops[1])
+            return 2 * shape_bytes(t) if t else -1.0
+        if op == "scatter":
+            # XLA:CPU promotes bf16 scatters through f32 copies of the
+            # whole operand; a TPU build updates in place — count the
+            # update region only.
+            ops = _OPERAND_RE.findall(cur.split("scatter(", 1)[1])
+            if len(ops) < 3:
+                return -1.0
+            t = table.get(ops[2])
+            return 2 * shape_bytes(t) if t else -1.0
+        if op in ("convert", "bitcast", "copy"):
+            ops = _OPERAND_RE.findall(cur.split(f"{op}(", 1)[1])
+            nxt = by_name.get(ops[0]) if ops else None
+            if nxt is None:
+                return -1.0
+            cur = nxt
+            continue
+        return -1.0
+    return -1.0
+
+
+def _fusion_pure_convert(lines) -> bool:
+    """True when the fused computation only converts/copies (CPU bf16
+    legalization staging; a TPU dot consumes bf16 operands directly)."""
+    for ln in lines:
+        om = _OPNAME_RE.search(ln)
+        op = om.group(1) if om else ""
+        if op and op not in ("parameter", "convert", "bitcast", "copy",
+                             "tuple"):
+            return False
+    return True
+
+
+def _fusion_window_params(lines) -> Dict[int, float]:
+    """For a fused computation: parameter position -> window bytes, for
+    parameters consumed ONLY as the sliced operand of dynamic-slice/gather
+    (i.e. the fusion reads a window of that operand, not all of it)."""
+    # map internal name -> parameter position
+    pname_pos: Dict[str, int] = {}
+    for ln in lines:
+        rm = _RESULT_NAME_RE.match(ln)
+        pm = _PARAM_ORDER_RE.search(ln)
+        if rm and pm:
+            pname_pos[rm.group(1)] = int(pm.group(1))
+    windows: Dict[int, float] = {}
+    blocked = set()
+    for ln in lines:
+        om = _OPNAME_RE.search(ln)
+        opname = om.group(1) if om else ""
+        if opname == "parameter":
+            continue
+        paren = ln.split(f"{opname}(", 1)
+        ops = _OPERAND_RE.findall(paren[1].split(")", 1)[0]) \
+            if len(paren) > 1 else []
+        for j, o in enumerate(ops):
+            if o not in pname_pos:
+                continue
+            pos = pname_pos[o]
+            if opname in ("dynamic-slice", "gather") and j == 0:
+                types = _result_types(ln)
+                w = sum(shape_bytes(t) for t in types)
+                windows[pos] = windows.get(pos, 0.0) + w
+            else:
+                blocked.add(pos)
+    return {p: w for p, w in windows.items() if p not in blocked}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants per the assignment).
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int, *, per_device: bool) -> Dict[str, float]:
+    """Three roofline times in seconds.
+
+    ``per_device``: whether flops/bytes are already per-device (XLA cost
+    analysis of the partitioned module) or global sums.
+    """
+    div = 1 if per_device else n_chips
+    t_compute = (flops / div) / PEAK_FLOPS_BF16
+    t_memory = (hbm_bytes / div) / HBM_BW
+    t_coll = (coll_bytes / div) / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant}

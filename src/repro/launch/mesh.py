@@ -1,0 +1,33 @@
+"""Production mesh construction (single-pod and multi-pod).
+
+A v5e pod here is 16x16 = 256 chips; the multi-pod mesh prepends a 'pod'
+axis (2 pods = 512 chips).  Defined as functions so importing this module
+never touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_single_pod_submesh():
+    """16x16 mesh from the first 256 devices of a 512-device platform,
+    so one 512-device process can compile both mesh variants."""
+    devs = np.array(jax.devices()[:256]).reshape(16, 16)
+    return Mesh(devs, ("data", "model"))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CI-sized sharding tests (8 host devices)."""
+    import math
+    n = math.prod(shape)
+    devs = np.array(jax.devices()[:n]).reshape(*shape)
+    return Mesh(devs, axes)

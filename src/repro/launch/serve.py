@@ -1,0 +1,62 @@
+"""Serving launcher: batched requests against any assigned arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce \
+      --quant w4a16 --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import all_archs, get_config, reduce_config
+from repro.core.quant import QuantConfig
+from repro.models import init_params
+from repro.models.model import quantize_for_serving
+from repro.serve import Request, ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_archs())
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "w8a8", "w4a16", "w2a16", "w4a8"])
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduce_config(cfg)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{cfg.name} has a stub frontend (embeds input); "
+                         "serve a token arch instead")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if args.quant != "none":
+        w = int(args.quant[1])
+        mode = "wo" if args.quant.endswith("a16") else "int"
+        a = 16 if mode == "wo" else int(args.quant.split("a")[1])
+        q = QuantConfig(mode=mode, a_bits=8 if a == 16 else a, w_bits=w,
+                        use_kernel=False)
+        cfg = cfg.with_(quant=q)
+        params, n = quantize_for_serving(cfg, params)
+        print(f"serving with {args.quant}: packed {n} tensors")
+
+    key = jax.random.PRNGKey(1)
+    reqs = []
+    for i in range(args.requests):
+        key, k = jax.random.split(key)
+        n = int(jax.random.randint(k, (), 2, 9))
+        reqs.append(Request(i, [int(t) for t in jax.random.randint(
+            k, (n,), 0, cfg.vocab_size)]))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_batch=args.max_batch, max_prompt=32,
+        max_new_tokens=args.max_new_tokens))
+    for r in eng.run(reqs):
+        print(f"req {r.rid}: {len(r.prompt)} prompt -> {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

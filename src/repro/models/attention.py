@@ -1,0 +1,312 @@
+"""GQA attention with context-parallel execution and seq-sharded KV caches.
+
+Distribution strategy (baseline 'fsdp_sp' rules, DESIGN.md §5): activations
+are sequence-sharded over the 'model' mesh axis.  Attention therefore runs
+under shard_map:
+
+  train/prefill — each shard holds a slice of queries; K/V are all-gathered
+    over the seq axis (context parallelism) and queries are processed in
+    VMEM-sized chunks with exact per-chunk softmax.  The chunk body is
+    rematerialized (scan-of-checkpoint), so backward memory is flash-like:
+    one chunk of scores at a time, never the (S x S) matrix.
+
+  decode — the KV cache stays sequence-sharded (a 500k-token cache never
+    lives on one chip); each shard computes partial attention over its local
+    cache rows and the result is combined with the flash-decoding
+    max/denominator reduction (pmax/psum over the seq axis).
+
+Head counts never have to divide the mesh (the rule tables replicate
+heads in this mode), which is what makes the scheme total over all ten
+assigned architectures (yi-34b: 56 heads, musicgen: 24).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import current_mesh, lshard, make_spec
+from repro.models.common import ParamSpec, dense, rms_norm, rope
+
+NEG_INF = -1e30
+# per-shard score-chunk budget (bytes) used to pick the query chunk size.
+SCORE_BYTES_BUDGET = 1 << 30
+
+
+def attn_specs(cfg) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, h * dh), ("embed", "heads"), quantize=True),
+        "wk": ParamSpec((d, kv * dh), ("embed", "kv_heads"), quantize=True),
+        "wv": ParamSpec((d, kv * dh), ("embed", "kv_heads"), quantize=True),
+        "wo": ParamSpec((h * dh, d), ("heads", "embed"), quantize=True),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h * dh,), ("heads",), init="zeros")
+        specs["bk"] = ParamSpec((kv * dh,), ("kv_heads",), init="zeros")
+        specs["bv"] = ParamSpec((kv * dh,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((dh,), (None,), init="ones", dtype=jnp.float32)
+        specs["k_norm"] = ParamSpec((dh,), (None,), init="ones", dtype=jnp.float32)
+    return specs
+
+
+def kv_cache_spec(cfg, batch: int, capacity: int):
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    ax = ("cache_batch", "cache_seq", "kv_heads", None)
+    return {
+        "k": ParamSpec((batch, capacity, kv, dh), ax, init="zeros"),
+        "v": ParamSpec((batch, capacity, kv, dh), ax, init="zeros"),
+    }
+
+
+def _pick_q_chunk(b: int, h: int, skv: int) -> int:
+    qc = SCORE_BYTES_BUDGET // max(1, b * h * skv * 4)
+    qc = max(16, min(512, qc))
+    return 1 << (qc.bit_length() - 1)       # round down to a power of two
+
+
+def _chunked_attention_local(q, k, v, q0, kv_valid):
+    """Exact causal attention, local arrays, query-chunked.
+
+    q: (B, Sq, H, dh) local query slice whose global positions start at q0.
+    k, v: (B, Skv, KV, dh) full keys/values.
+    kv_valid: number of valid kv rows (int32 scalar).
+    """
+    b, sq, hq, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = hq // kv
+    qc = _pick_q_chunk(b, hq, skv)
+    if sq % qc:
+        qc = 1 << ((sq & -sq).bit_length() - 1)   # largest pow2 dividing sq
+    nc = sq // qc
+    scale = dh ** -0.5
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+
+    def chunk(args):
+        qx, c0 = args                      # (B, qc, H, dh), chunk global start
+        qx = qx.reshape(b, qc, kv, g, dh)
+        # operands stay bf16; the MXU accumulates in f32
+        # (preferred_element_type) — materializing f32 copies of K/V was
+        # the dominant HBM term in the baseline profile (§Perf).
+        s = jnp.einsum("bqkgd,bskd->bqkgs", (qx * scale).astype(q.dtype), k,
+                       preferred_element_type=jnp.float32)
+        qpos = c0 + jnp.arange(qc, dtype=jnp.int32)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < kv_valid)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", p, v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, qc, hq, v.shape[-1]).astype(q.dtype)
+
+    if nc == 1:
+        return chunk((q, q0))
+    qr = jnp.moveaxis(q.reshape(b, nc, qc, hq, dh), 1, 0)
+    c0s = q0 + jnp.arange(nc, dtype=jnp.int32) * qc
+    out = jax.lax.map(jax.checkpoint(chunk), (qr, c0s))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, v.shape[-1])
+
+
+def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes):
+    """Flash-decoding: partial softmax over the local cache slice, combined
+    across the seq mesh axes with a max/denominator reduction."""
+    b, sq, hq, dh = q.shape
+    kv = k_loc.shape[2]
+    g = hq // kv
+    scale = dh ** -0.5
+    qx = q.reshape(b, sq, kv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", (qx * scale).astype(q.dtype), k_loc,
+                   preferred_element_type=jnp.float32)
+    kpos = k0 + jnp.arange(k_loc.shape[1], dtype=jnp.int32)
+    # kv_valid: scalar or (B,) (continuous batching: per-slot fill levels).
+    kv_b = jnp.broadcast_to(jnp.atleast_1d(kv_valid), (b,))
+    s = jnp.where(kpos[None, None, None, None, :]
+                  < kv_b[:, None, None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    # fully-masked shards (cache slice beyond kv_valid) contribute zeros.
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(q.dtype), v_loc,
+                     preferred_element_type=jnp.float32)
+    if seq_axes:
+        mg = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - mg)               # 0 for fully-masked shards
+        l = jax.lax.psum(l * corr, seq_axes)
+        acc = jax.lax.psum(acc * corr[..., None], seq_axes)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, v_loc.shape[-1]).astype(q.dtype)
+
+
+def _seq_axes_info():
+    """(mesh, seq mesh axes tuple) if seq is sharded under current rules."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None, ()
+    spec = make_spec((None, "seq"))
+    ax = spec[1] if len(spec) > 1 else None
+    if ax is None:
+        return mesh, ()
+    return mesh, (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def _axes_size(mesh, axes) -> int:
+    return functools.reduce(lambda a, x: a * mesh.shape[x], axes, 1)
+
+
+def _batch_spec(mesh, b: int):
+    """Batch mesh axes, or None when the batch doesn't divide them."""
+    spec = make_spec(("batch",))
+    ax = spec[0] if len(spec) else None
+    if ax is None:
+        return None
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    return ax if b % _axes_size(mesh, axes) == 0 else None
+
+
+def sdpa(q, k, v, *, kv_valid) -> jax.Array:
+    """Causal SDPA for q/k/v of equal seq length (train/prefill).
+
+    q: (B, S, H, dh), k/v: (B, S, KV, dh), both seq-sharded per the rules.
+    """
+    mesh, seq_axes = _seq_axes_info()
+    if not seq_axes or q.shape[1] % _axes_size(mesh, seq_axes):
+        return _chunked_attention_local(
+            q, k, v, jnp.int32(0), kv_valid)
+
+    bspec = _batch_spec(mesh, q.shape[0])
+    qkv_spec = P(bspec, make_spec((None, "seq"))[1], None, None)
+
+    def local_fn(q_l, k_l, v_l):
+        idx = 0
+        for ax in seq_axes:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        s_loc = q_l.shape[1]
+        q0 = (idx * s_loc).astype(jnp.int32)
+        kf = jax.lax.all_gather(k_l, seq_axes, axis=1, tiled=True)
+        vf = jax.lax.all_gather(v_l, seq_axes, axis=1, tiled=True)
+        return _chunked_attention_local(q_l, kf, vf, q0, kv_valid)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(qkv_spec, qkv_spec, qkv_spec),
+        out_specs=qkv_spec, check_vma=False)(q, k, v)
+
+
+def decode_sdpa(q, k_cache, v_cache, *, kv_valid) -> jax.Array:
+    """Single-step attention against a (possibly seq-sharded) KV cache."""
+    mesh, seq_axes = _seq_axes_info()
+    if not seq_axes or k_cache.shape[1] % _axes_size(mesh, seq_axes):
+        return _decode_attention_local(
+            q, k_cache, v_cache, jnp.int32(0), kv_valid, ())
+
+    bspec = _batch_spec(mesh, q.shape[0])
+    sspec = make_spec((None, "seq"))[1]
+    q_spec = P(bspec, None, None, None)
+    c_spec = P(bspec, sspec, None, None)
+
+    def local_fn(q_l, k_l, v_l):
+        idx = 0
+        for ax in seq_axes:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        k0 = (idx * k_l.shape[1]).astype(jnp.int32)
+        return _decode_attention_local(q_l, k_l, v_l, k0, kv_valid, seq_axes)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(q_spec, c_spec, c_spec),
+        out_specs=q_spec, check_vma=False)(q, k_cache, v_cache)
+
+
+def cache_update(cache: dict, k_new, v_new, index) -> dict:
+    """Write one token's K/V at ``index`` into a (possibly sharded) cache.
+
+    ``index``: scalar or (B,) per-slot positions; negative = no write
+    (inactive serving slot)."""
+    mesh, seq_axes = _seq_axes_info()
+
+    def write_local(buf, val, k0):
+        bsz = buf.shape[0]
+        idx_b = jnp.broadcast_to(jnp.atleast_1d(index), (bsz,))
+        li = idx_b - k0
+        inb = (li >= 0) & (li < buf.shape[1])
+        li_c = jnp.clip(li, 0, buf.shape[1] - 1)
+        rows = jnp.take_along_axis(
+            buf, li_c[:, None, None, None], axis=1)       # (B,1,KV,dh)
+        new = jnp.where(inb[:, None, None, None], val.astype(buf.dtype),
+                        rows)
+        return buf.at[jnp.arange(bsz), li_c].set(new[:, 0])
+
+    if not seq_axes or cache["k"].shape[1] % _axes_size(mesh, seq_axes):
+        return {"k": write_local(cache["k"], k_new, 0),
+                "v": write_local(cache["v"], v_new, 0)}
+
+    bspec = _batch_spec(mesh, cache["k"].shape[0])
+    sspec = make_spec((None, "seq"))[1]
+    c_spec = P(bspec, sspec, None, None)
+    n_spec = P(bspec, None, None, None)
+
+    def local_fn(kb, vb, kn, vn):
+        idx = 0
+        for ax in seq_axes:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        k0 = idx * kb.shape[1]
+        return write_local(kb, kn, k0), write_local(vb, vn, k0)
+
+    k2, v2 = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(c_spec, c_spec, n_spec, n_spec),
+        out_specs=(c_spec, c_spec), check_vma=False)(
+            cache["k"], cache["v"], k_new, v_new)
+    return {"k": k2, "v": v2}
+
+
+def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
+                    mode: str, pos: jax.Array) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention sublayer: QKV proj, RoPE, SDPA, out proj.
+
+    mode: 'train' (no cache), 'prefill' (emit cache), 'decode' (use cache).
+    pos: scalar int32 — first position of ``x`` in the sequence.
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(x, p["wq"], cfg.quant, p.get("bq"))
+    k = dense(x, p["wk"], cfg.quant, p.get("bk"))
+    v = dense(x, p["wv"], cfg.quant, p.get("bv"))
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    positions = jnp.atleast_1d(pos)[:, None] + \
+        jnp.arange(s, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = lshard(q, "batch", "seq", "heads", None)
+    k = lshard(k, "batch", "seq", "kv_heads", None)
+    v = lshard(v, "batch", "seq", "kv_heads", None)
+
+    new_cache = None
+    if mode == "train":
+        o = sdpa(q, k, v, kv_valid=jnp.int32(s))
+    elif mode == "prefill":
+        o = sdpa(q, k, v, kv_valid=jnp.int32(s))
+        cap = cache["k"].shape[1]
+        pad = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+        new_cache = {
+            "k": lshard(jnp.pad(k.astype(cache["k"].dtype), pad),
+                        "cache_batch", "cache_seq", "kv_heads", None),
+            "v": lshard(jnp.pad(v.astype(cache["v"].dtype), pad),
+                        "cache_batch", "cache_seq", "kv_heads", None),
+        }
+    elif mode == "decode":
+        assert s == 1
+        new_cache = cache_update(cache, k, v, pos)
+        o = decode_sdpa(q, new_cache["k"], new_cache["v"],
+                        kv_valid=pos + 1)
+    else:
+        raise ValueError(mode)
+    o = lshard(o, "batch", "seq", "heads", None)
+    y = dense(o.reshape(b, s, h * dh), p["wo"], cfg.quant)
+    return y, new_cache

@@ -1,0 +1,166 @@
+"""Residual blocks: the units the LM's block program composes.
+
+Every block has the same interface:
+  specs(cfg)                          -> ParamSpec tree
+  apply(p, x, cfg, cache, mode, pos)  -> (x', new_cache, aux_loss)
+  cache_spec(cfg, batch, capacity)    -> ParamSpec tree or None
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models import mla, moe, ssm, xlstm
+from repro.models.attention import apply_attention, attn_specs, kv_cache_spec
+from repro.models.common import ParamSpec, dense, layer_norm, rms_norm
+
+
+def norm_specs(cfg) -> dict:
+    d = cfg.d_model
+    s = {"w": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layer":
+        s["b"] = ParamSpec((d,), (None,), init="zeros", dtype=jnp.float32)
+    return s
+
+
+def apply_norm(p: dict, x, cfg):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "gelu":
+        return {"w_up": ParamSpec((d, f), ("embed", "ffn"), quantize=True),
+                "w_down": ParamSpec((f, d), ("ffn", "embed"), quantize=True)}
+    return {"w_gate": ParamSpec((d, f), ("embed", "ffn"), quantize=True),
+            "w_up": ParamSpec((d, f), ("embed", "ffn"), quantize=True),
+            "w_down": ParamSpec((f, d), ("ffn", "embed"), quantize=True)}
+
+
+def apply_mlp(p: dict, x, cfg):
+    if cfg.mlp_act == "gelu":
+        h = dense(x, p["w_up"], cfg.quant)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        h = lshard(h, "batch", "seq", "ffn")
+        return dense(h, p["w_down"], cfg.quant)
+    g = dense(x, p["w_gate"], cfg.quant)
+    u = dense(x, p["w_up"], cfg.quant)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = lshard(h, "batch", "seq", "ffn")
+    return dense(h, p["w_down"], cfg.quant)
+
+
+# --- transformer blocks -----------------------------------------------------
+
+def _attn_block_specs(cfg, ffn: str) -> dict:
+    s = {"ln1": norm_specs(cfg), "attn": attn_specs(cfg),
+         "ln2": norm_specs(cfg)}
+    s["ffn"] = moe.moe_specs(cfg) if ffn == "moe" else mlp_specs(cfg)
+    return s
+
+
+def _apply_attn_block(p, x, cfg, cache, mode, pos, ffn: str):
+    x = lshard(x, "batch", "seq", None)
+    a, new_cache = apply_attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+        cache=cache, mode=mode, pos=pos)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if ffn == "moe":
+        y, aux = moe.moe_ffn(p["ffn"], h, cfg)
+    else:
+        y, aux = apply_mlp(p["ffn"], h, cfg), jnp.float32(0)
+    x = lshard(x + y, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _mla_block_specs(cfg, ffn: str) -> dict:
+    s = {"ln1": norm_specs(cfg), "attn": mla.mla_specs(cfg),
+         "ln2": norm_specs(cfg)}
+    s["ffn"] = moe.moe_specs(cfg) if ffn == "moe" else mlp_specs(cfg)
+    return s
+
+
+def _apply_mla_block(p, x, cfg, cache, mode, pos, ffn: str):
+    x = lshard(x, "batch", "seq", None)
+    a, new_cache = mla.apply_mla(
+        p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+        cache=cache, mode=mode, pos=pos)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if ffn == "moe":
+        y, aux = moe.moe_ffn(p["ffn"], h, cfg)
+    else:
+        y, aux = apply_mlp(p["ffn"], h, cfg), jnp.float32(0)
+    x = lshard(x + y, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _mamba_block_specs(cfg) -> dict:
+    return {"ln": norm_specs(cfg), "mamba": ssm.mamba_specs(cfg)}
+
+
+def _apply_mamba_block(p, x, cfg, cache, mode, pos):
+    y, new_cache = ssm.apply_mamba(
+        p["mamba"], apply_norm(p["ln"], x, cfg), cfg,
+        cache=cache, mode=mode, pos=pos)
+    return x + y, new_cache, jnp.float32(0)
+
+
+def _apply_mlstm_block(p, x, cfg, cache, mode, pos):
+    y, new_cache = xlstm.apply_mlstm(p, x, cfg, cache=cache, mode=mode,
+                                     pos=pos)
+    return y, new_cache, jnp.float32(0)
+
+
+def _apply_slstm_block(p, x, cfg, cache, mode, pos):
+    y, new_cache = xlstm.apply_slstm(p, x, cfg, cache=cache, mode=mode,
+                                     pos=pos)
+    return y, new_cache, jnp.float32(0)
+
+
+class BlockDef:
+    def __init__(self, specs, apply, cache_spec=None):
+        self.specs = specs
+        self.apply = apply
+        self.cache_spec = cache_spec or (lambda cfg, b, cap: None)
+
+
+BLOCKS = {
+    "attn_mlp": BlockDef(
+        lambda cfg: _attn_block_specs(cfg, "mlp"),
+        lambda p, x, cfg, cache, mode, pos: _apply_attn_block(
+            p, x, cfg, cache, mode, pos, "mlp"),
+        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap)),
+    "attn_moe": BlockDef(
+        lambda cfg: _attn_block_specs(cfg, "moe"),
+        lambda p, x, cfg, cache, mode, pos: _apply_attn_block(
+            p, x, cfg, cache, mode, pos, "moe"),
+        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap)),
+    "mla_mlp": BlockDef(
+        lambda cfg: _mla_block_specs(cfg, "mlp"),
+        lambda p, x, cfg, cache, mode, pos: _apply_mla_block(
+            p, x, cfg, cache, mode, pos, "mlp"),
+        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap)),
+    "mla_moe": BlockDef(
+        lambda cfg: _mla_block_specs(cfg, "moe"),
+        lambda p, x, cfg, cache, mode, pos: _apply_mla_block(
+            p, x, cfg, cache, mode, pos, "moe"),
+        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap)),
+    "mamba": BlockDef(
+        _mamba_block_specs, _apply_mamba_block,
+        lambda cfg, b, cap: ssm.mamba_cache_spec(cfg, b)),
+    "mlstm": BlockDef(
+        xlstm.mlstm_specs, _apply_mlstm_block,
+        lambda cfg, b, cap: xlstm.mlstm_cache_spec(cfg, b)),
+    "slstm": BlockDef(
+        xlstm.slstm_specs, _apply_slstm_block,
+        lambda cfg, b, cap: xlstm.slstm_cache_spec(cfg, b)),
+}
+# shared-parameter attention block (zamba2): same def, params held once.
+BLOCKS["shared_attn"] = BLOCKS["attn_mlp"]

@@ -1,0 +1,178 @@
+"""Declarative parameters + shared layers for the model zoo.
+
+Parameters are declared as trees of :class:`ParamSpec` (shape + logical
+sharding axes + init), which can be
+
+  * materialized   -> real arrays (smoke tests, examples, training),
+  * abstracted     -> jax.ShapeDtypeStruct (the multi-pod dry-run lowers
+                      train/serve steps against 34B-parameter models with
+                      ZERO host allocation),
+  * sharded        -> NamedSharding via the logical rule table in
+                      repro.distributed.sharding.
+
+Every matmul weight is a plain (in, out) array; layers that want heads
+reshape afterwards.  Quantization ("the CSR", DESIGN.md §3) is applied by
+``dense``: QAT fake-quant in training mode, packed sub-byte kernels when a
+leaf has been converted to a PackedWeight for serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, fake_quant_activation, fake_quant_weight
+from repro.distributed.sharding import lshard
+from repro.kernels.ops import PackedWeight, quantized_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override (default 1/sqrt(fan_in))
+    dtype: Any = None              # override model dtype (norms stay f32)
+    quantize: bool = False         # eligible for sub-byte packing (serving)
+    stacked: int = 0               # leading scan-stacked dims to skip in fan-in
+
+    def fan_in(self) -> int:
+        core = self.shape[self.stacked:]
+        axes = self.axes[self.stacked:]
+        # leading batch-like dims (expert banks, per-head recurrences) do
+        # not contribute to fan-in.
+        while len(core) > 1 and axes and axes[0] in ("expert", "heads",
+                                                     "layers"):
+            core, axes = core[1:], axes[1:]
+        if len(core) <= 1:
+            return core[-1]
+        import math
+        return math.prod(core[:-1])
+
+
+def is_spec_tree_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return dataclasses.replace(
+        spec, shape=(n,) + spec.shape, axes=("layers",) + spec.axes,
+        stacked=spec.stacked + 1)
+
+
+def stack_specs(tree, n: int):
+    return jax.tree.map(lambda s: stack_spec(s, n), tree,
+                        is_leaf=is_spec_tree_leaf)
+
+
+def materialize(tree, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec_tree_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dt)
+        else:
+            std = spec.scale if spec.scale is not None else spec.fan_in() ** -0.5
+            if spec.init == "embed":
+                std = 1.0
+            v = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype), tree,
+        is_leaf=is_spec_tree_leaf)
+
+
+def spec_axes(tree):
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec_tree_leaf)
+
+
+def param_count(tree) -> int:
+    import math
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(tree, is_leaf=is_spec_tree_leaf))
+
+
+# ---------------------------------------------------------------------------
+# Shared layers.
+# ---------------------------------------------------------------------------
+
+def dense(x: jax.Array, w, quant: Optional[QuantConfig] = None,
+          bias: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ w (+ bias), honouring the quantization mode.
+
+    w is either a raw (K, N) array or a PackedWeight (serving).  QAT mode
+    fake-quantizes both operands with STE so online learning trains against
+    the deployment arithmetic (paper §VI-C).
+    """
+    if isinstance(w, PackedWeight):
+        assert quant is not None and quant.mode in ("int", "wo")
+        y = quantized_matmul(x, w, quant, use_kernel=quant.use_kernel)
+    elif quant is not None and quant.mode == "qat":
+        wq = fake_quant_weight(w, quant)
+        xq = fake_quant_activation(x, quant)
+        y = xq @ wq
+    elif quant is not None and quant.mode in ("int", "wo"):
+        # raw weights but an int/wo config: emulate deployment numerics with
+        # fake-quant (used by the dry-run, which lowers the jnp path).
+        wq = fake_quant_weight(w, quant)
+        if quant.mode == "int":
+            x = fake_quant_activation(x, quant)
+        y = x @ wq
+    else:
+        y = x @ w
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, NeoX half-split convention.
+
+    x: (B, S, H, D), positions: (B, S) int32.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down, quant=None) -> jax.Array:
+    g = dense(x, w_gate, quant)
+    u = dense(x, w_up, quant)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = lshard(h, "batch", "seq", "ffn")
+    return dense(h, w_down, quant)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)

@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache.
+
+Prefill/train use the naive (expanded) form and share the context-parallel
+SDPA from models/attention.py.  Decode uses the *absorbed* form: the
+up-projections W_UK / W_UV are folded into the query/output sides so
+attention runs directly against the compressed (kv_lora + rope) cache —
+the cache stores 576 floats per token instead of 2*H*dh = 4096, which is
+the technique's serving win and composes with the paper's sub-byte
+quantization on every projection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.attention import sdpa
+from repro.models.common import ParamSpec, dense, rms_norm, rope
+
+
+def mla_dims(cfg):
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return dn, dr, dv
+
+
+def mla_specs(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = mla_dims(cfg)
+    return {
+        "w_q": ParamSpec((d, h * (dn + dr)), ("embed", "heads"), quantize=True),
+        "w_dkv": ParamSpec((d, r + dr), ("embed", "kv_lora"), quantize=True),
+        "kv_norm": ParamSpec((r,), (None,), init="ones", dtype=jnp.float32),
+        "w_uk": ParamSpec((r, h * dn), ("kv_lora", "heads"), quantize=True),
+        "w_uv": ParamSpec((r, h * dv), ("kv_lora", "heads"), quantize=True),
+        "w_o": ParamSpec((h * dv, d), ("heads", "embed"), quantize=True),
+    }
+
+
+def mla_cache_spec(cfg, batch: int, capacity: int):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return {
+        "ckv": ParamSpec((batch, capacity, r + dr),
+                         ("cache_batch", "cache_seq", None), init="zeros"),
+    }
+
+
+def _compress(p, x, cfg):
+    """x -> (c_kv normalized (B,S,r), k_rope roped (B,S,dr))."""
+    r = cfg.kv_lora_rank
+    ckv_full = dense(x, p["w_dkv"], cfg.quant)
+    c_kv, k_r = ckv_full[..., :r], ckv_full[..., r:]
+    return rms_norm(c_kv, p["kv_norm"]), k_r
+
+
+def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
+              mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = mla_dims(cfg)
+    scale_dim = dn + dr
+
+    q = dense(x, p["w_q"], cfg.quant).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    positions = jnp.atleast_1d(pos)[:, None] + \
+        jnp.arange(s, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv, k_r = _compress(p, x, cfg)
+    k_rope = rope(k_r[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        # naive (expanded) form + shared context-parallel SDPA.
+        k_nope = dense(c_kv, p["w_uk"], cfg.quant).reshape(b, s, h, dn)
+        v = dense(c_kv, p["w_uv"], cfg.quant).reshape(b, s, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = lshard(qq, "batch", "seq", "heads", None)
+        k = lshard(k, "batch", "seq", "heads", None)
+        v = lshard(v, "batch", "seq", "heads", None)
+        o = sdpa(qq, k, v, kv_valid=jnp.int32(s))
+        if mode == "prefill":
+            entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+            cap = cache["ckv"].shape[1]
+            entry = jnp.pad(entry.astype(cache["ckv"].dtype),
+                            ((0, 0), (0, cap - s), (0, 0)))
+            new_cache = {"ckv": lshard(entry, "cache_batch", "cache_seq", None)}
+    elif mode == "decode":
+        assert s == 1
+        entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+        buf = cache["ckv"]
+        # per-slot write at `pos` (negative = inactive slot, no write).
+        pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+        inb = (pos_b >= 0) & (pos_b < buf.shape[1])
+        idx = jnp.clip(pos_b, 0, buf.shape[1] - 1)
+        rows = jnp.take_along_axis(buf, idx[:, None, None], axis=1)
+        new = jnp.where(inb[:, None, None], entry.astype(buf.dtype), rows)
+        buf = buf.at[jnp.arange(b), idx].set(new[:, 0])
+        buf = lshard(buf, "cache_batch", "cache_seq", None)
+        new_cache = {"ckv": buf}
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        # absorbed queries: q_c = q_nope @ W_UK^T per head -> (B,1,H,r)
+        w_uk = p["w_uk"].reshape(r, h, dn)
+        q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                         w_uk.astype(jnp.float32))
+        sc = jnp.einsum("bqhr,bsr->bqhs", q_c.astype(x.dtype), c_all,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("bqhd,bsd->bqhs", q_rope, kr_all,
+                         preferred_element_type=jnp.float32)
+        sc = sc * (scale_dim ** -0.5)
+        kpos = jnp.arange(buf.shape[1], dtype=jnp.int32)
+        sc = jnp.where(kpos[None, None, None, :]
+                       <= pos_b[:, None, None, None], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        ctx_c = jnp.einsum("bqhs,bsr->bqhr", pr.astype(x.dtype), c_all,
+                          preferred_element_type=jnp.float32)
+        w_uv = p["w_uv"].reshape(r, h, dv)
+        o = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv.astype(jnp.float32))
+        o = o.astype(x.dtype)
+    else:
+        raise ValueError(mode)
+
+    y = dense(o.reshape(b, s, h * dv), p["w_o"], cfg.quant)
+    return y, new_cache

@@ -1,0 +1,238 @@
+"""LM assembly: embedding -> block program (scan stages) -> head.
+
+The block program (ArchConfig.pattern) is interpreted into lax.scan stages
+with stacked parameters, so compile time scales with the number of *distinct*
+block kinds, not the number of layers — mandatory for dry-running 34B/60L
+models on a 512-device host platform.  Caches thread through the scans as
+xs/ys.  One forward covers the three lowered entry points:
+
+  mode='train'    — no cache, remat per scan body
+  mode='prefill'  — emits a cache sized ``capacity``
+  mode='decode'   — consumes/updates the cache at position ``pos``
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models import common
+from repro.models.blocks import BLOCKS, apply_norm, norm_specs
+from repro.models.common import ParamSpec, dense, embed_lookup, stack_specs
+from repro.models.config import ArchConfig
+
+
+def _linear_inner(group) -> List[str]:
+    kinds = []
+    for kind, count in group:
+        kinds.extend([kind] * count)
+    return kinds
+
+
+def _has_shared(cfg) -> bool:
+    return any(entry[0] == "group" and any(k == "shared_attn" for k, _ in entry[1])
+               for entry in cfg.pattern) or any(
+        entry[0] == "scan" and entry[1] == "shared_attn"
+        for entry in cfg.pattern)
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    specs: dict = {}
+    if cfg.input_mode == "tokens":
+        specs["embed"] = ParamSpec((vp, d), ("vocab", "embed"), init="embed",
+                                   scale=0.02)
+    stages = []
+    for entry in cfg.pattern:
+        if entry[0] == "scan":
+            _, kind, count = entry
+            if kind == "shared_attn":
+                stages.append({})        # params live in specs['shared']
+            else:
+                stages.append(stack_specs(BLOCKS[kind].specs(cfg), count))
+        else:
+            _, group, repeats = entry
+            st = {}
+            for j, kind in enumerate(_linear_inner(group)):
+                if kind == "shared_attn":
+                    continue
+                st[f"b{j}"] = stack_specs(BLOCKS[kind].specs(cfg), repeats)
+            stages.append(st)
+    specs["stages"] = stages
+    if _has_shared(cfg):
+        specs["shared"] = BLOCKS["attn_mlp"].specs(cfg)
+    specs["final_norm"] = norm_specs(cfg)
+    specs["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"), scale=0.02,
+                                 quantize=True)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, capacity: int) -> list:
+    stages = []
+    for entry in cfg.pattern:
+        if entry[0] == "scan":
+            _, kind, count = entry
+            cs = BLOCKS[kind].cache_spec(cfg, batch, capacity)
+            stages.append(None if cs is None else stack_specs(cs, count))
+        else:
+            _, group, repeats = entry
+            st = {}
+            for j, kind in enumerate(_linear_inner(group)):
+                cs = BLOCKS[kind].cache_spec(cfg, batch, capacity)
+                if cs is not None:
+                    st[f"b{j}"] = stack_specs(cs, repeats)
+            stages.append(st)
+    return stages
+
+
+def cache_capacity(cfg: ArchConfig, prompt_len: int) -> int:
+    cap = prompt_len + cfg.decode_margin
+    return ((cap + 255) // 256) * 256
+
+
+def _remat(fn, cfg, mode):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
+                      shared):
+    block = BLOCKS[kind]
+    if kind == "shared_attn":
+        stage_p = None   # body uses `shared`
+
+    def body(carry, xs):
+        h, aux = carry
+        p_i, c_i = xs
+        if kind == "shared_attn":
+            p_i = shared
+        h, c_new, a = block.apply(p_i, h, cfg, c_i, mode, pos)
+        return (h, aux + a), c_new
+
+    (x, aux), c_out = jax.lax.scan(
+        _remat(body, cfg, mode), (x, jnp.float32(0)), (stage_p, stage_c),
+        length=count)
+    return x, c_out, aux
+
+
+def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, shared):
+    kinds = _linear_inner(group)
+
+    def body(carry, xs):
+        h, aux = carry
+        p_map, c_map = xs
+        new_c = {}
+        for j, kind in enumerate(kinds):
+            p_j = shared if kind == "shared_attn" else p_map[f"b{j}"]
+            c_j = None if c_map is None else c_map.get(f"b{j}")
+            h, c_new, a = BLOCKS[kind].apply(p_j, h, cfg, c_j, mode, pos)
+            aux = aux + a
+            if c_new is not None:
+                new_c[f"b{j}"] = c_new
+        return (h, aux), new_c
+
+    (x, aux), c_out = jax.lax.scan(
+        _remat(body, cfg, mode), (x, jnp.float32(0)), (stage_p, stage_c))
+    return x, c_out, aux
+
+
+def forward(params: dict, inputs: jax.Array, cfg: ArchConfig, *,
+            cache: Optional[list] = None, mode: str = "train",
+            pos: Any = 0) -> Tuple[jax.Array, Optional[list], jax.Array]:
+    """Returns (logits (B, S, padded_vocab), new_cache, aux_loss)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if cfg.input_mode == "tokens":
+        x = embed_lookup(params["embed"], inputs)
+    else:
+        x = inputs.astype(cfg.dtype)
+    x = lshard(x, "batch", "seq", None)
+
+    shared = params.get("shared")
+    aux_total = jnp.float32(0)
+    new_cache: list = []
+    for i, entry in enumerate(cfg.pattern):
+        stage_p = params["stages"][i]
+        stage_c = None if cache is None else cache[i]
+        if entry[0] == "scan":
+            x, c2, aux = _apply_scan_stage(
+                entry[1], entry[2], stage_p, x, cfg, stage_c, mode, pos,
+                shared)
+        else:
+            x, c2, aux = _apply_group_stage(
+                entry[1], stage_p, x, cfg, stage_c, mode, pos, shared)
+        new_cache.append(c2)
+        aux_total = aux_total + aux
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = dense(x, params["lm_head"], cfg.quant)
+    logits = lshard(logits, "batch", "seq", "vocab")
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Convenience init/abstract entry points.
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return common.materialize(param_specs(cfg), key, cfg.dtype)
+
+
+def abstract_params(cfg: ArchConfig):
+    return common.abstract(param_specs(cfg), cfg.dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, prompt_len: int):
+    cap = cache_capacity(cfg, prompt_len)
+    specs = cache_specs(cfg, batch, cap)
+    return common.materialize(specs, jax.random.PRNGKey(0), cfg.dtype)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, prompt_len: int):
+    cap = cache_capacity(cfg, prompt_len)
+    return common.abstract(cache_specs(cfg, batch, cap), cfg.dtype)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return common.param_count(param_specs(cfg))
+
+
+def quantize_for_serving(cfg: ArchConfig, params):
+    """Convert every quantize-eligible 2D weight into a PackedWeight.
+
+    This is the deployment transform of the paper's technique: sub-byte
+    weights leave host memory already packed (repro.core.packing) and are
+    expanded only inside the Pallas kernel's VMEM tile.  Stacked (scanned)
+    and >2D leaves keep raw weights and run the fake-quant emulation path.
+    """
+    from repro.kernels.ops import prepare_weight
+    from repro.models.common import ParamSpec, is_spec_tree_leaf
+
+    assert cfg.quant is not None and cfg.quant.mode in ("int", "wo"), \
+        "quantize_for_serving needs an int/wo QuantConfig"
+    specs = param_specs(cfg)
+    flat_s, treedef = jax.tree.flatten(specs, is_leaf=is_spec_tree_leaf)
+    flat_p = treedef.flatten_up_to(params)
+    out = []
+    n_packed = 0
+    for spec, leaf in zip(flat_s, flat_p):
+        if not (isinstance(spec, ParamSpec) and spec.quantize):
+            out.append(leaf)
+            continue
+        if leaf.ndim == 2 and spec.stacked == 0:
+            out.append(prepare_weight(leaf, cfg.quant))
+            n_packed += 1
+        elif leaf.ndim == 3 and spec.stacked == 1:
+            # scan-stacked weights: pack per layer; lax.scan slices the
+            # PackedWeight pytree leaves so block bodies see 2D weights.
+            out.append(jax.vmap(
+                lambda w: prepare_weight(w, cfg.quant))(leaf))
+            n_packed += 1
+        else:
+            out.append(leaf)   # >2D expert banks: fake-quant emulation
+    return jax.tree.unflatten(treedef, out), n_packed

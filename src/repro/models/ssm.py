@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) block: chunked scan for train/prefill, one-step for decode.
+
+Sequence recurrence does not sequence-shard, so SSM blocks run with
+batch-only activation sharding (the rule tables replicate 'seq' inside
+these blocks via explicit constraints); the surrounding residual stream
+stays on the global layout.
+
+Chunked algorithm (SSD, simplified n_groups=1): per chunk of length L the
+intra-chunk term is a causal decay-weighted (C_i . B_j) quadratic form and
+the inter-chunk term propagates the (H, P, N) state through a sequential
+scan over chunks — O(S L) + O(S/L) instead of O(S^2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.common import ParamSpec, dense, rms_norm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_ch
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, h, conv_ch = ssm_dims(cfg)
+    n = cfg.ssm_state
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_inner + 2 * n + h), ("embed", "ffn"), quantize=True),
+        "conv_w": ParamSpec((cfg.conv_dim, conv_ch), (None, "ffn"),
+                            scale=0.2),
+        "conv_b": ParamSpec((conv_ch,), ("ffn",), init="zeros"),
+        "A_log": ParamSpec((h,), ("heads",), init="zeros"),
+        "D": ParamSpec((h,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("heads",), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("ffn",), init="ones",
+                          dtype=jnp.float32),
+        "out_proj": ParamSpec((d_inner, d), ("ffn", "embed"), quantize=True),
+    }
+
+
+def mamba_cache_spec(cfg, batch: int):
+    d_inner, h, conv_ch = ssm_dims(cfg)
+    return {
+        "conv": ParamSpec((batch, cfg.conv_dim - 1, conv_ch),
+                          ("cache_batch", None, "ffn"), init="zeros"),
+        "ssm": ParamSpec((batch, h, cfg.ssm_headdim, cfg.ssm_state),
+                         ("cache_batch", "heads", None, "state"),
+                         init="zeros", dtype=jnp.float32),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]):
+    """Depthwise causal conv along seq.  u: (B, S, C), w: (K, C).
+
+    Returns (out (B, S, C), new_state (B, K-1, C) = last K-1 inputs).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(ext[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    out = out + b[None, None, :]
+    new_state = ext[:, -(k - 1):, :] if k > 1 else state
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, a, b_in, c_in, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P), dt: (B, S, H), a: (B, S, H) = dt * A  (negative),
+    b_in/c_in: (B, S, N), h0: (B, H, P, N) initial state (f32).
+    Returns y (B, S, H, P) and final state.
+    """
+    bsz, s, hh, p = xh.shape
+    n = b_in.shape[-1]
+    l = min(chunk, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+
+    # chunk-major layout for the sequential scan over chunks.
+    xc = jnp.moveaxis(xh.reshape(bsz, nc, l, hh, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, l, hh), 1, 0).astype(jnp.float32)
+    ac = jnp.moveaxis(a.reshape(bsz, nc, l, hh), 1, 0).astype(jnp.float32)
+    bc = jnp.moveaxis(b_in.reshape(bsz, nc, l, n), 1, 0).astype(jnp.float32)
+    cc = jnp.moveaxis(c_in.reshape(bsz, nc, l, n), 1, 0).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def chunk_step(h_prev, inp):
+        """One chunk: intra-chunk quadratic term + inter-chunk state pass.
+        Materializes only one (B, L, L, H) decay block at a time.  The
+        H-carrying intermediates are sharded over 'heads' (the dominant
+        HBM/FLOP term would otherwise replicate across the model axis,
+        EXPERIMENTS.md §Perf) and kept bf16 with f32 accumulation."""
+        x_c, dt_c, a_c, b_c, c_c = inp
+        cum = jnp.cumsum(a_c, axis=1)                   # (B, L, H)
+        cum = lshard(cum, "batch", None, "heads")
+        tot = cum[:, -1]                                # (B, H)
+        # intra: y_i += sum_{j<=i} (c_i.b_j) exp(cum_i - cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]   # (B, L, L, H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        decay = lshard(decay, "batch", None, None, "heads")
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)
+        w_ij = (cb[..., None] * decay).astype(jnp.bfloat16)
+        w_ij = lshard(w_ij, "batch", None, None, "heads")
+        xdt = (x_c.astype(jnp.float32) * dt_c[..., None]).astype(jnp.bfloat16)
+        xdt = lshard(xdt, "batch", None, "heads", None)
+        y_c = jnp.einsum("bijh,bjhp->bihp", w_ij, xdt,
+                         preferred_element_type=jnp.float32)
+        # inter: y_i += exp(cum_i) * c_i . h_prev
+        y_c += jnp.einsum("bin,bhpn->bihp", c_c, h_prev) * jnp.exp(
+            cum)[..., None]
+        y_c = lshard(y_c, "batch", None, "heads", None)
+        # state: h = exp(tot) h_prev + sum_j exp(tot - cum_j) dt_j b_j x_j^T
+        sdec = jnp.exp(tot[:, None, :] - cum)           # (B, L, H)
+        s_c = jnp.einsum("blh,bln,blhp->bhpn", sdec * dt_c, b_c,
+                         x_c.astype(jnp.float32))
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return lshard(h_new, "batch", "heads", None, None), y_c
+
+    h_final, y = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0, (xc, dtc, ac, bc, cc))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, hh, p)
+    return y, h_final
+
+
+def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
+                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    d_inner, h, conv_ch = ssm_dims(cfg)
+    n = cfg.ssm_state
+    pdim = cfg.ssm_headdim
+
+    x = lshard(x, "batch", None, None)
+    zxbcdt = dense(x, p["in_proj"], cfg.quant)
+    z, xr, bc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, bc], axis=-1)
+
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    xc, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    a_param = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    xh = xc.reshape(b, s, h, pdim)
+
+    if mode == "decode":
+        assert s == 1
+        h0 = cache["ssm"].astype(jnp.float32)
+        dt1 = dt[:, 0]                                            # (B,H)
+        da = jnp.exp(dt1 * a_param[None, :])                      # (B,H)
+        inj = jnp.einsum("bh,bn,bhp->bhpn", dt1, b_in[:, 0].astype(
+            jnp.float32), xh[:, 0].astype(jnp.float32))
+        h_new = h0 * da[:, :, None, None] + inj
+        # inactive serving slots (pos < 0) keep their state untouched.
+        valid = (jnp.broadcast_to(jnp.atleast_1d(pos), (b,)) >= 0)
+        h_new = jnp.where(valid[:, None, None, None], h_new, h0)
+        new_conv = jnp.where(valid[:, None, None], new_conv, cache["conv"])
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]                                            # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": h_new}
+    else:
+        h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+        a = dt * a_param[None, None, :]
+        y, h_final = _ssd_chunked(xh, dt, a, b_in, c_in, h0, cfg.ssm_chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "ssm": h_final}
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMS norm (mamba2's norm-before-out-proj, gated by z).
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"])
+    out = dense(y, p["out_proj"], cfg.quant)
+    return out, new_cache

@@ -1,0 +1,196 @@
+"""Quantized CNNs for the paper's QNN benchmarks (Table VI).
+
+PULP-NN (the library the paper measures) lowers convolutions to
+im2col + matmul so the Flex-V dot-product unit sees dense GEMMs; we do the
+same so convolutions hit the mpq_matmul kernel path.  Networks:
+
+  * MobileNetV1 (width-multiplier) — uniform w8a8 and mixed w4a8
+    (paper's "MobileNetV1 8b4b": 8-bit activations, 4-bit weights),
+  * ResNet-20 (CIFAR) — aggressive w2a4 ("4b2b": 4-bit acts, 2-bit
+    weights).
+
+Weights quantize per-output-channel; activations dynamically per row —
+identical conventions to the LM path (core/quant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.kernels.ops import PackedWeight, prepare_weight, quantized_matmul
+from repro.models.common import ParamSpec, materialize
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           pad: int = 0) -> jax.Array:
+    """x: (B, H, W, C) -> patches (B, Ho, Wo, kh*kw*C)."""
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                x, (0, i, j, 0),
+                (b, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _qmm(cols, wf, quant: Optional[QuantConfig]):
+    """(fake-)quantized matmul dispatch shared by conv/head layers."""
+    from repro.core.quant import fake_quant_activation, fake_quant_weight
+    if quant is None or not quant.quantized:
+        return cols @ wf
+    if quant.mode == "qat":
+        return fake_quant_activation(cols, quant) @ fake_quant_weight(
+            wf, quant)
+    pw = prepare_weight(wf, quant)
+    return quantized_matmul(cols, pw, quant, use_kernel=quant.use_kernel)
+
+
+def conv2d_q(x, w, quant: Optional[QuantConfig], stride=1, pad=0):
+    """Conv via im2col + (quantized) matmul.  w: (kh, kw, Cin, Cout) raw or
+    PackedWeight of the flattened (kh*kw*Cin, Cout)."""
+    if isinstance(w, PackedWeight):
+        kh = kw = int(round((w.k // (x.shape[-1])) ** 0.5))
+        cols = im2col(x, kh, kw, stride, pad)
+        return quantized_matmul(cols, w, quant)
+    kh, kw, cin, cout = w.shape
+    cols = im2col(x, kh, kw, stride, pad)
+    return _qmm(cols, w.reshape(kh * kw * cin, cout), quant)
+
+
+def depthwise_conv_q(x, w, stride=1, pad=1):
+    """Depthwise 3x3 (bf16/f32; PULP-NN keeps depthwise in higher precision
+    relative to its share of compute)."""
+    kh, kw, c = w.shape
+    cols = im2col(x, kh, kw, stride, pad)            # (..., kh*kw*C)
+    cols = cols.reshape(*cols.shape[:-1], kh * kw, c)
+    return jnp.einsum("bhwkc,kc->bhwc", cols, w.reshape(kh * kw, c))
+
+
+def bn_relu(x, scale, bias, relu=True):
+    y = x * scale + bias
+    return jnp.maximum(y, 0) if relu else y
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1
+# ---------------------------------------------------------------------------
+
+MBV1_LAYERS = [  # (cout_mult_of_base, stride) for the 13 dw-pw pairs
+    (2, 1), (4, 2), (4, 1), (8, 2), (8, 1), (16, 2), (16, 1),
+    (16, 1), (16, 1), (16, 1), (16, 1), (32, 2), (32, 1)]
+
+
+def mobilenet_specs(base: int = 32, n_classes: int = 1000,
+                    in_ch: int = 3) -> dict:
+    specs = {"stem": ParamSpec((3, 3, in_ch, base), (None,) * 4,
+                               quantize=True)}
+    cin = base
+    for i, (mult, _) in enumerate(MBV1_LAYERS):
+        cout = base * mult
+        specs[f"dw{i}"] = ParamSpec((3, 3, cin), (None,) * 3, scale=0.3)
+        specs[f"pw{i}"] = ParamSpec((1, 1, cin, cout), (None,) * 4,
+                                    quantize=True)
+        specs[f"bn{i}_s"] = ParamSpec((cout,), (None,), init="ones")
+        specs[f"bn{i}_b"] = ParamSpec((cout,), (None,), init="zeros")
+        cin = cout
+    specs["head"] = ParamSpec((cin, n_classes), (None, None), quantize=True)
+    return specs
+
+
+def mobilenet_apply(p: dict, x: jax.Array, quant: Optional[QuantConfig]):
+    """x: (B, H, W, 3) -> logits (B, n_classes)."""
+    h = conv2d_q(x, p["stem"], quant, stride=2, pad=1)
+    h = jnp.maximum(h, 0)
+    for i, (_, stride) in enumerate(MBV1_LAYERS):
+        h = depthwise_conv_q(h, p[f"dw{i}"], stride=stride, pad=1)
+        h = jnp.maximum(h, 0)
+        h = conv2d_q(h, p[f"pw{i}"], quant)
+        h = bn_relu(h, p[f"bn{i}_s"], p[f"bn{i}_b"])
+    h = h.mean(axis=(1, 2))
+    w = p["head"]
+    if isinstance(w, PackedWeight):
+        return quantized_matmul(h, w, quant)
+    return _qmm(h, w, quant)
+
+
+def mobilenet_macs(base: int = 32, img: int = 224, in_ch: int = 3) -> int:
+    macs = (img // 2) ** 2 * 9 * in_ch * base
+    cin, res = base, img // 2
+    for mult, stride in MBV1_LAYERS:
+        cout = base * mult
+        res = res // stride
+        macs += res * res * (9 * cin + cin * cout)
+        cin = cout
+    return macs
+
+
+# ---------------------------------------------------------------------------
+# ResNet-20 (CIFAR)
+# ---------------------------------------------------------------------------
+
+def resnet20_specs(base: int = 16, n_classes: int = 10) -> dict:
+    specs = {"stem": ParamSpec((3, 3, 3, base), (None,) * 4, quantize=True)}
+    cin = base
+    for s, width_mult in enumerate([1, 2, 4]):
+        cout = base * width_mult
+        for b in range(3):
+            stride = 2 if (s > 0 and b == 0) else 1
+            specs[f"s{s}b{b}c1"] = ParamSpec((3, 3, cin, cout), (None,) * 4,
+                                             quantize=True)
+            specs[f"s{s}b{b}c2"] = ParamSpec((3, 3, cout, cout), (None,) * 4,
+                                             quantize=True)
+            if stride != 1 or cin != cout:
+                specs[f"s{s}b{b}sc"] = ParamSpec((1, 1, cin, cout),
+                                                 (None,) * 4, quantize=True)
+            cin = cout
+    specs["head"] = ParamSpec((cin, n_classes), (None, None), quantize=True)
+    return specs
+
+
+def resnet20_apply(p: dict, x: jax.Array, quant: Optional[QuantConfig]):
+    h = conv2d_q(x, p["stem"], quant, pad=1)
+    h = jnp.maximum(h, 0)
+    cin = h.shape[-1]
+    for s in range(3):
+        for b in range(3):
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = conv2d_q(h, p[f"s{s}b{b}c1"], quant, stride=stride, pad=1)
+            y = jnp.maximum(y, 0)
+            y = conv2d_q(y, p[f"s{s}b{b}c2"], quant, pad=1)
+            sc = p.get(f"s{s}b{b}sc")
+            hs = conv2d_q(h, sc, quant, stride=stride) if sc is not None else h
+            h = jnp.maximum(y + hs, 0)
+    h = h.mean(axis=(1, 2))
+    w = p["head"]
+    if isinstance(w, PackedWeight):
+        return quantized_matmul(h, w, quant)
+    return _qmm(h, w, quant)
+
+
+def init_vision(specs: dict, key, dtype=jnp.float32):
+    return materialize(specs, key, dtype)
+
+
+def model_bytes(specs: dict, quant: Optional[QuantConfig]) -> int:
+    """Deployed model size: packed sub-byte weights + f32 scales for
+    quantize-eligible tensors, f32 for the rest (Table VI 'Model size')."""
+    import math
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = math.prod(s.shape)
+        if quant is not None and quant.quantized and s.quantize:
+            cout = s.shape[-1]
+            total += n * quant.w_bits // 8 + 4 * cout
+        else:
+            total += 4 * n
+    return total

@@ -1,0 +1,294 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating) is a gated linear-attention
+recurrence; we implement the stabilized *chunkwise* form so training never
+stores the (dh x dh) matrix state per timestep — only per chunk — mirroring
+the SSD scan in models/ssm.py.  The single-step recurrence is used for
+decode and doubles as the test oracle for the chunkwise path.
+
+sLSTM (scalar memory, recurrent gate connections) is inherently sequential
+(that is the architecture), so it runs as a lax.scan over time with per-head
+block-diagonal recurrence.
+
+Both carry O(1)-in-sequence state, which is why xlstm-350m is a `long_500k`
+architecture (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.common import ParamSpec, dense, rms_norm
+from repro.models.ssm import _causal_conv
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model          # projection factor 2 (paper)
+    h = cfg.n_heads
+    return d_in, h, d_in // h
+
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in, h, dh = mlstm_dims(cfg)
+    return {
+        "norm": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+        "w_up": ParamSpec((d, 2 * d_in), ("embed", "ffn"), quantize=True),
+        "conv_w": ParamSpec((4, d_in), (None, "ffn"), scale=0.2),
+        "conv_b": ParamSpec((d_in,), ("ffn",), init="zeros"),
+        "w_q": ParamSpec((d_in, d_in), ("embed", "heads"), quantize=True),
+        "w_k": ParamSpec((d_in, d_in), ("embed", "heads"), quantize=True),
+        "w_v": ParamSpec((d_in, d_in), ("embed", "heads"), quantize=True),
+        "w_if": ParamSpec((d_in, 2 * h), ("embed", None), scale=0.02),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros"),
+        "out_norm": ParamSpec((d_in,), ("ffn",), init="ones",
+                              dtype=jnp.float32),
+        "w_down": ParamSpec((d_in, d), ("ffn", "embed"), quantize=True),
+    }
+
+
+def mlstm_cache_spec(cfg, batch: int):
+    d_in, h, dh = mlstm_dims(cfg)
+    return {
+        "conv": ParamSpec((batch, 3, d_in), ("cache_batch", None, "ffn"),
+                          init="zeros"),
+        "C": ParamSpec((batch, h, dh, dh), ("cache_batch", "heads", None, None),
+                       init="zeros", dtype=jnp.float32),
+        "n": ParamSpec((batch, h, dh), ("cache_batch", "heads", None),
+                       init="zeros", dtype=jnp.float32),
+        "m": ParamSpec((batch, h), ("cache_batch", "heads"),
+                       init="zeros", dtype=jnp.float32),
+    }
+
+
+def mlstm_cell_step(state, q, k, v, log_i, log_f):
+    """Stabilized single-step recurrence (decode + test oracle).
+
+    q/k/v: (B, H, dh), log_i/log_f: (B, H).  state = (C, n, m).
+    """
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    fd = jnp.exp(log_f + m - m_new)
+    ii = jnp.exp(log_i - m_new)
+    C_new = fd[..., None, None] * C + ii[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = fd[..., None] * n + ii[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q/k/v: (B, S, H, dh) (q pre-scaled by dh^-0.5), gates: (B, S, H) f32.
+    state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) f32.
+    Returns h (B, S, H, dh) and final state.
+    """
+    bsz, s, hh, dh = q.shape
+    l = min(chunk, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+    cm = lambda t: jnp.moveaxis(
+        t.reshape(bsz, nc, l, *t.shape[2:]), 1, 0)     # chunk-major
+    qc, kc, vc = cm(q), cm(k), cm(v)
+    lic, lfc = cm(log_i), cm(log_f)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_c, k_c, v_c, li, lf = inp                     # (B,L,H,*) / (B,L,H)
+        b = jnp.cumsum(lf, axis=1)                      # (B, L, H) inclusive
+        btot = b[:, -1]                                 # (B, H)
+        # output stabilizers: m~_i = max(b_i + m, max_j<=i (b_i - b_j + li_j))
+        g = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :]
+        g = jnp.where(causal[None, :, :, None], g, NEG)  # (B, L, L, H) (i,j)
+        m_intra = jnp.max(g, axis=2)                    # (B, L, H)
+        m_t = jnp.maximum(b + m[:, None, :], m_intra)
+        dmat = jnp.exp(g - m_t[:, :, None, :])          # (B, L, L, H)
+        qs = jnp.einsum("blhd,bkhd->blkh", q_c.astype(jnp.float32),
+                        k_c.astype(jnp.float32))        # (B, L, L, H)
+        w_ij = qs * dmat
+        num = jnp.einsum("blkh,bkhd->blhd", w_ij, v_c.astype(jnp.float32))
+        den = jnp.sum(w_ij, axis=2)                     # (B, L, H)
+        inter = jnp.exp(b + m[:, None, :] - m_t)        # (B, L, H)
+        num += inter[..., None] * jnp.einsum(
+            "blhk,bhvk->blhv", q_c.astype(jnp.float32), C)
+        den += inter * jnp.einsum("blhk,bhk->blh",
+                                  q_c.astype(jnp.float32), n)
+        h_c = num / jnp.maximum(jnp.abs(den),
+                                jnp.exp(-m_t))[..., None]
+        # state update to end of chunk.
+        gs = btot[:, None, :] - b + li                  # (B, L, H)
+        m_state = jnp.maximum(btot + m, jnp.max(gs, axis=1))
+        sc = jnp.exp(gs - m_state[:, None, :])
+        C_new = jnp.exp(btot + m - m_state)[..., None, None] * C + \
+            jnp.einsum("blh,blhv,blhk->bhvk", sc, v_c.astype(jnp.float32),
+                       k_c.astype(jnp.float32))
+        n_new = jnp.exp(btot + m - m_state)[..., None] * n + \
+            jnp.einsum("blh,blhk->bhk", sc, k_c.astype(jnp.float32))
+        return (C_new, n_new, m_state), h_c.astype(q.dtype)
+
+    (C, n, m), hs = jax.lax.scan(
+        jax.checkpoint(step), state, (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, hh, dh)
+    return h, (C, n, m)
+
+
+def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
+                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    d_in, hh, dh = mlstm_dims(cfg)
+    x = lshard(x, "batch", None, None)
+    h_in = rms_norm(x, p["norm"])
+    uz = dense(h_in, p["w_up"], cfg.quant)
+    u, z = jnp.split(uz, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    q = dense(uc, p["w_q"], cfg.quant).reshape(b, s, hh, dh) * dh ** -0.5
+    k = dense(uc, p["w_k"], cfg.quant).reshape(b, s, hh, dh) * dh ** -0.5
+    v = dense(u, p["w_v"], cfg.quant).reshape(b, s, hh, dh)
+    gates = (uc @ p["w_if"].astype(uc.dtype)) + p["b_if"].astype(uc.dtype)
+    i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    log_i = i_raw                                       # (B, S, H)
+    log_f = -jax.nn.softplus(-f_raw)                    # log sigmoid
+
+    if mode == "decode":
+        assert s == 1
+        state0 = (cache["C"], cache["n"], cache["m"])
+        state, h_t = mlstm_cell_step(
+            state0, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0])
+        valid = (jnp.broadcast_to(jnp.atleast_1d(pos), (b,)) >= 0)
+        state = tuple(
+            jnp.where(valid.reshape((b,) + (1,) * (new.ndim - 1)), new, old)
+            for new, old in zip(state, state0))
+        new_conv = jnp.where(valid[:, None, None], new_conv, cache["conv"])
+        h_seq = h_t[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "C": state[0], "n": state[1],
+                     "m": state[2]}
+    else:
+        state = (jnp.zeros((b, hh, dh, dh), jnp.float32),
+                 jnp.zeros((b, hh, dh), jnp.float32),
+                 jnp.zeros((b, hh), jnp.float32))
+        h_seq, state = _mlstm_chunked(q, k, v, log_i, log_f, state,
+                                      cfg.ssm_chunk)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "C": state[0], "n": state[1],
+                         "m": state[2]}
+
+    h_seq = rms_norm(h_seq.reshape(b, s, d_in), p["out_norm"])
+    h_seq = h_seq * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + dense(h_seq, p["w_down"], cfg.quant), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    h, dh = slstm_dims(cfg)
+    f_glu = (4 * d) // 3
+    return {
+        "norm": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+        "w_x": ParamSpec((d, 4 * d), ("embed", "ffn"), quantize=True),
+        "r": ParamSpec((h, dh, 4 * dh), ("heads", None, None), scale=0.02),
+        "b": ParamSpec((4 * d,), ("ffn",), init="zeros"),
+        "out_norm": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+        "ffn_norm": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+        "w_glu_gate": ParamSpec((d, f_glu), ("embed", "ffn"), quantize=True),
+        "w_glu_up": ParamSpec((d, f_glu), ("embed", "ffn"), quantize=True),
+        "w_glu_down": ParamSpec((f_glu, d), ("ffn", "embed"), quantize=True),
+    }
+
+
+def slstm_cache_spec(cfg, batch: int):
+    h, dh = slstm_dims(cfg)
+    ax = ("cache_batch", "heads", None)
+    return {
+        "c": ParamSpec((batch, h, dh), ax, init="zeros", dtype=jnp.float32),
+        "n": ParamSpec((batch, h, dh), ax, init="zeros", dtype=jnp.float32),
+        "h": ParamSpec((batch, h, dh), ax, init="zeros", dtype=jnp.float32),
+        "m": ParamSpec((batch, h, dh), ax, init="zeros", dtype=jnp.float32),
+    }
+
+
+def slstm_step(state, wx_t, r):
+    """One sLSTM step.  wx_t: (B, H, 4*dh) input contribution,
+    r: (H, dh, 4*dh) per-head recurrence.  state: (c, n, h, m)."""
+    c, n, h, m = state
+    raw = wx_t + jnp.einsum("bhd,hdk->bhk", h, r)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(raw, 4, axis=-1)
+    log_i = i_raw
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, log_i)
+    ip = jnp.exp(log_i - m_new)
+    fp = jnp.exp(log_f + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(z_raw)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def apply_slstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
+                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    hh, dh = slstm_dims(cfg)
+    x = lshard(x, "batch", None, None)
+    h_in = rms_norm(x, p["norm"])
+    wx = dense(h_in, p["w_x"], cfg.quant) + p["b"].astype(x.dtype)
+    wx = wx.reshape(b, s, hh, 4 * dh).astype(jnp.float32)
+
+    if cache is not None and mode == "decode":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((b, hh, dh), jnp.float32)
+        state = (z, z, z, z)
+
+    if mode == "decode":
+        assert s == 1
+        state0 = state
+        state = slstm_step(state, wx[:, 0], p["r"].astype(jnp.float32))
+        valid = (jnp.broadcast_to(jnp.atleast_1d(pos), (b,)) >= 0)
+        state = tuple(jnp.where(valid[:, None, None], new, old)
+                      for new, old in zip(state, state0))
+        h_seq = state[2][:, None]
+        new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                     "m": state[3]}
+    else:
+        def step(st, w_t):
+            st = slstm_step(st, w_t, p["r"].astype(jnp.float32))
+            return st, st[2]
+        state, h_seq = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+        h_seq = jnp.moveaxis(h_seq, 0, 1)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                         "m": state[3]}
+
+    h_seq = rms_norm(h_seq.reshape(b, s, d).astype(x.dtype), p["out_norm"])
+    x = x + h_seq
+    # post GLU feed-forward (projection factor 4/3), second residual.
+    h2 = rms_norm(x, p["ffn_norm"])
+    g = dense(h2, p["w_glu_gate"], cfg.quant)
+    u = dense(h2, p["w_glu_up"], cfg.quant)
+    hf = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return x + dense(hf, p["w_glu_down"], cfg.quant), new_cache

@@ -1,0 +1,2 @@
+"""Serving runtime: batched prefill/decode engine with quantized weights."""
+from repro.serve.engine import Request, ServeConfig, ServingEngine  # noqa: F401

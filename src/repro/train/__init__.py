@@ -1,0 +1,6 @@
+"""Training runtime: optimizer, step builders, fault-tolerant loop."""
+from repro.train.optim import AdamWConfig, OptState, adamw_update, init_opt_state  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    StepOptions, TrainState, abstract_train_state, init_train_state,
+    lm_loss, make_decode_step, make_prefill_step, make_train_step,
+)

@@ -1,0 +1,114 @@
+"""AdamW in pure JAX (no optax in this environment) + LR schedules.
+
+State layout (every leaf sharded exactly like its parameter, so optimizer
+memory follows the ZeRO-3-style 2D parameter sharding):
+
+  master — f32 master weights (params themselves stay bf16 so forward-pass
+           all-gathers move half the bytes; the paper makes the same
+           reduced-precision trade on its FP SIMD path, C2)
+  m, v   — f32 Adam moments
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    master: Any
+    m: Any
+    v: Any
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> OptState:
+    # copy=True: an f32 param must not alias its master (donation safety).
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return OptState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                    m=zeros(params), v=zeros(params))
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    master=f32(abstract_params), m=f32(abstract_params),
+                    v=f32(abstract_params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt: OptState, param_dtype):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p32, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        p32 = p32 - lr * (u + cfg.weight_decay * p32)
+        return p32, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(opt.master)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    out = [upd(g, p, m, v) for g, p, m, v in
+           zip(flat_g, flat_p, flat_m, flat_v)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    def to_param(p32, g):
+        # live params keep their declared dtype (norms stay f32 while the
+        # bulk is bf16).  f32 leaves are copied so the live param never
+        # aliases the master buffer (donation would otherwise see the same
+        # buffer twice).
+        if g.dtype == jnp.float32:
+            return jnp.copy(p32)
+        return p32.astype(g.dtype)
+
+    new_params = jax.tree.map(to_param, new_master, grads)
+    new_opt = OptState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,132 @@
+"""Train / prefill / decode step builders — the functions the launcher jits.
+
+``make_train_step`` closes over (ArchConfig, AdamWConfig, options) and
+returns ``step(state, batch) -> (state, metrics)`` with:
+
+  * masked cross-entropy on vocab-sharded logits (loss math stays on the
+    sharded layout; logsumexp/gather reduce via SPMD collectives),
+  * MoE auxiliary load-balance loss,
+  * optional microbatch gradient accumulation (scan over microbatches),
+  * optional int8 error-feedback gradient compression at the reduction
+    boundary (repro.distributed.compression),
+  * AdamW with f32 master/moments sharded like the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import compress_grads, init_error_feedback
+from repro.distributed.sharding import lshard
+from repro.models import forward
+from repro.models.config import ArchConfig
+from repro.train.optim import (AdamWConfig, OptState, abstract_opt_state,
+                               adamw_update, init_opt_state)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef: Any          # error-feedback buffers (None when compression off)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    microbatches: int = 1
+    grad_compress_bits: int = 0      # 0 = off, 8 = int8 EF compression
+
+
+def init_train_state(params, opts: StepOptions = StepOptions()) -> TrainState:
+    ef = init_error_feedback(params) if opts.grad_compress_bits else None
+    return TrainState(params=params, opt=init_opt_state(params), ef=ef)
+
+
+def abstract_train_state(abstract_params,
+                         opts: StepOptions = StepOptions()) -> TrainState:
+    ef = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        abstract_params) if opts.grad_compress_bits else None
+    return TrainState(params=abstract_params,
+                      opt=abstract_opt_state(abstract_params), ef=ef)
+
+
+def lm_loss(params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Masked next-token cross entropy + MoE aux loss.
+
+    batch['inputs']: (B, S) int32 tokens or (B, S, D) embeds.
+    batch['labels']: (B, S) int32; negative = masked position.
+    """
+    logits, _, aux = forward(params, batch["inputs"], cfg, mode="train")
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(
+        lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    n_tok = jnp.maximum(mask.sum(), 1.0)
+    xent = jnp.sum((lse - ll) * mask) / n_tok
+    loss = xent + cfg.aux_loss_weight * aux
+    return loss, {"xent": xent, "aux": aux, "tokens": n_tok}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    opts: StepOptions = StepOptions()):
+    grad_fn = jax.value_and_grad(lm_loss, has_aux=True)
+
+    def compute_grads(params, batch):
+        if opts.microbatches <= 1:
+            (loss, aux), grads = grad_fn(params, batch, cfg)
+            return loss, aux, grads
+
+        def micro(carry, mb):
+            acc, _ = carry
+            (loss, aux), g = grad_fn(params, mb, cfg)
+            acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return (acc, loss), (loss, aux)
+
+        split = lambda x: x.reshape(
+            opts.microbatches, x.shape[0] // opts.microbatches, *x.shape[1:])
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gacc, loss), (_, auxs) = jax.lax.scan(
+            micro, (zero, jnp.float32(0)), mbs)
+        grads = jax.tree.map(lambda g: g / opts.microbatches, gacc)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return loss, aux, grads
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, aux, grads = compute_grads(state.params, batch)
+        ef = state.ef
+        if opts.grad_compress_bits:
+            grads, ef = compress_grads(grads, ef, opts.grad_compress_bits)
+        params, opt, om = adamw_update(opt_cfg, grads, state.opt, cfg.dtype)
+        metrics = {"loss": loss, **aux, **om}
+        return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps.
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, inputs, cache):
+        logits, cache, _ = forward(params, inputs, cfg, cache=cache,
+                                   mode="prefill")
+        return logits[:, -1, :], cache
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, cache, token, pos):
+        """token: (B, 1) ids or (B, 1, D) embeds; pos: scalar int32."""
+        logits, cache, _ = forward(params, token, cfg, cache=cache,
+                                   mode="decode", pos=pos)
+        return logits[:, -1, :], cache
+    return decode

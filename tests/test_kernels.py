@@ -1,0 +1,91 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and operand formats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantConfig
+from repro.core.tiling import plan_matmul_tiles
+from repro.kernels import prepare_weight, quantized_matmul
+from repro.kernels.ops import PackedWeight
+
+FORMATS_INT = [(8, 8), (8, 4), (8, 2), (4, 4), (4, 2), (2, 2)]
+FORMATS_WO = [8, 4, 2]
+SHAPES = [(16, 256, 128), (100, 512, 384), (1, 256, 256), (33, 1024, 100)]
+
+
+@pytest.mark.parametrize("a_bits,w_bits", FORMATS_INT)
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_int_kernel_matches_ref(a_bits, w_bits, m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + k + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+    cfg = QuantConfig(mode="int", a_bits=a_bits, w_bits=w_bits)
+    pw = prepare_weight(w, cfg)
+    yk = quantized_matmul(x, pw, cfg, use_kernel=True, interpret=True)
+    yr = quantized_matmul(x, pw, cfg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=0,
+                               atol=0)   # same integer math -> bit exact
+
+
+@pytest.mark.parametrize("w_bits", FORMATS_WO)
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wo_kernel_matches_ref(w_bits, m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(w_bits))
+    x = jax.random.normal(kx, (m, k), dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+    cfg = QuantConfig(mode="wo", w_bits=w_bits)
+    pw = prepare_weight(w, cfg)
+    yk = quantized_matmul(x, pw, cfg, use_kernel=True, interpret=True)
+    yr = quantized_matmul(x, pw, cfg, use_kernel=False)
+    np.testing.assert_allclose(
+        np.asarray(yk, np.float32), np.asarray(yr, np.float32),
+        rtol=2e-2, atol=1e-2)
+
+
+def test_int_path_accuracy_ordering():
+    """Narrower formats lose monotonically more accuracy vs fp32."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (64, 512), jnp.float32)
+    w = jax.random.normal(kw, (512, 256), jnp.float32) * 0.05
+    ref = x @ w
+    errs = []
+    for a, wb in [(8, 8), (8, 4), (4, 4), (4, 2)]:
+        cfg = QuantConfig(mode="int", a_bits=a, w_bits=wb)
+        y = quantized_matmul(x, prepare_weight(w, cfg), cfg,
+                             use_kernel=False)
+        errs.append(float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref)))
+    assert errs == sorted(errs), errs
+    assert errs[0] < 0.02
+
+
+def test_batched_inputs_and_padding():
+    cfg = QuantConfig(mode="wo", w_bits=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 300), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (300, 130), jnp.float32)
+    pw = prepare_weight(w, cfg)
+    y = quantized_matmul(x, pw, cfg, use_kernel=True, interpret=True)
+    assert y.shape == (2, 7, 130)
+    yr = quantized_matmul(x, pw, cfg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-2,
+                               atol=1e-2)
+
+
+def test_tiling_plans_fit_budget():
+    for m, k, n in [(8, 4096, 4096), (4096, 4096, 4096), (256, 512, 128)]:
+        for xb, wb in [(8, 2), (16, 4), (8, 8)]:
+            plan = plan_matmul_tiles(m, k, n, x_bits=xb, w_bits=wb,
+                                     vmem_budget=32 << 20)
+            assert plan.vmem_bytes <= 32 << 20
+            assert plan.bn % 128 == 0 and plan.bk % 128 == 0
+
+
+def test_packed_weight_density():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 256), jnp.float32)
+    sizes = {}
+    for wb in (8, 4, 2):
+        pw = prepare_weight(w, QuantConfig(mode="wo", w_bits=wb))
+        sizes[wb] = pw.packed.size
+    assert sizes[4] == sizes[8] // 2 and sizes[2] == sizes[8] // 4

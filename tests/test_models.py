@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests (reduced configs) + semantic checks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, all_archs, get_config, reduce_config, \
+    shape_applicable
+from repro.models import (ArchConfig, forward, init_cache, init_params,
+                          param_count)
+from repro.train import init_train_state, make_train_step
+from repro.train.optim import AdamWConfig
+
+ARCHS = all_archs()
+
+
+def _inputs(cfg, key, b, s):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    inp = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    logits, _, aux = forward(params, inp, cfg, mode="train")
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    # one full train step
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(warmup_steps=1)))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                cfg.vocab_size)
+    state, metrics = step(state, {"inputs": inp, "labels": labels})
+    assert jnp.isfinite(metrics["loss"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_prefill_decode_consistency(arch):
+    cfg = reduce_config(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    inp = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    full, _, _ = forward(params, inp, cfg, mode="train")
+    cache = init_cache(cfg, b, s - 1)
+    _, cache, _ = forward(params, inp[:, :s - 1], cfg, cache=cache,
+                          mode="prefill")
+    dec, _, _ = forward(params, inp[:, s - 1:], cfg, cache=cache,
+                        mode="decode", pos=s - 1)
+    a = full[:, -1].astype(jnp.float32)
+    d = dec[:, 0].astype(jnp.float32)
+    rel = float(jnp.abs(a - d).max() / (jnp.abs(a).max() + 1e-6))
+    assert rel < 3e-2, rel
+
+
+def test_exact_configs_match_published_sizes():
+    expected = {   # billions, tolerance band
+        "qwen2.5-3b": (2.8, 3.6), "qwen3-8b": (7.5, 8.6),
+        "yi-34b": (33, 36), "chameleon-34b": (32, 36),
+        "deepseek-v2-lite-16b": (14.5, 16.5),
+        "granite-moe-1b-a400m": (1.1, 1.5), "musicgen-medium": (1.1, 1.6),
+        "stablelm-3b": (2.5, 3.1), "zamba2-7b": (5, 8),
+        "xlstm-350m": (0.25, 0.6),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = param_count(get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_long_500k_applicability_matches_design():
+    subq = {a for a in ARCHS if get_config(a).sub_quadratic}
+    assert subq == {"xlstm-350m", "zamba2-7b"}
+    for a in ARCHS:
+        assert shape_applicable(get_config(a), "long_500k") == (a in subq)
+
+
+def test_vector_pos_freezes_inactive_slots():
+    cfg = reduce_config(get_config("zamba2-7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    inp = _inputs(cfg, jax.random.PRNGKey(1), b, s)
+    cache = init_cache(cfg, b, s)
+    _, cache, _ = forward(params, inp, cfg, cache=cache, mode="prefill")
+    pos = jnp.asarray([s, -1], jnp.int32)
+    tok = _inputs(cfg, jax.random.PRNGKey(2), b, 1)
+    _, cache2, _ = forward(params, tok, cfg, cache=cache, mode="decode",
+                           pos=pos)
+    for a, b2 in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+        if a.ndim >= 2 and a.shape[1] == 2:      # (stack, B, ...)
+            assert bool(jnp.array_equal(a[:, 1], b2[:, 1]))

@@ -1,0 +1,67 @@
+"""Hypothesis property tests on the quantization/packing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack, pack_factor, packed_shape, unpack
+from repro.core.quant import (compute_scale, dequantize, fake_quant, qmax,
+                              qmin, quantize, quantize_activation)
+
+bits_st = st.sampled_from([2, 4, 8])
+dims = st.integers(1, 6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=bits_st, rows=st.integers(1, 8), cols=st.integers(1, 8),
+       axis=st.sampled_from([0, 1]), data=st.data())
+def test_pack_unpack_roundtrip(bits, rows, cols, axis, data):
+    f = pack_factor(bits)
+    shape = (rows * f, cols) if axis == 0 else (rows, cols * f)
+    vals = data.draw(st.lists(
+        st.integers(qmin(bits), qmax(bits)),
+        min_size=shape[0] * shape[1], max_size=shape[0] * shape[1]))
+    q = jnp.asarray(vals, jnp.int8).reshape(shape)
+    p = pack(q, bits, axis=axis)
+    assert p.shape == packed_shape(shape, bits, axis)
+    u = unpack(p, bits, axis=axis)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=bits_st, n=st.integers(2, 64), seed=st.integers(0, 2**16))
+def test_quantize_bounds_and_error(bits, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, n), jnp.float32)
+    q, scale = quantize(x, bits, axis=-1)
+    assert int(jnp.max(q)) <= qmax(bits)
+    assert int(jnp.min(q)) >= qmin(bits)
+    xd = dequantize(q, scale)
+    # symmetric absmax quantization: |err| <= scale/2 elementwise
+    assert bool(jnp.all(jnp.abs(xd - x) <= scale / 2 + 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=bits_st, seed=st.integers(0, 2**16))
+def test_fake_quant_idempotent(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 16), jnp.float32)
+    y1 = fake_quant(x, bits, -1)
+    y2 = fake_quant(y1, bits, -1)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=bits_st, seed=st.integers(0, 2**16), scale=st.floats(0.01, 100.0))
+def test_quantize_scale_equivariance(bits, seed, scale):
+    """quantize(a*x) has integers equal to quantize(x) (absmax symmetric)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32), jnp.float32)
+    q1, _ = quantize_activation(x, bits)
+    q2, _ = quantize_activation(x * scale, bits)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_ste_gradient_is_masked_identity():
+    x = jnp.asarray([[-100.0, -0.5, 0.0, 0.5, 100.0]])
+    g = jax.grad(lambda v: fake_quant(v, 8, -1).sum())(x)
+    # absmax scaling: everything is inside the representable range
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(g))

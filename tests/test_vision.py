@@ -1,0 +1,55 @@
+"""Quantized CNN path: conv correctness, Table VI sizes, QNN accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantConfig
+from repro.models import vision as V
+
+
+def test_im2col_conv_matches_lax_conv():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 12, 12, 5))
+    w = jax.random.normal(key, (3, 3, 5, 7)) * 0.2
+    y = V.conv2d_q(x, w, None, stride=2, pad=1)
+    ref = jax.lax.conv_general_dilated(
+        x, w, window_strides=(2, 2), padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_depthwise_matches_lax():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (2, 10, 10, 6))
+    w = jax.random.normal(key, (3, 3, 6)) * 0.2
+    y = V.depthwise_conv_q(x, w, stride=1, pad=1)
+    ref = jax.lax.conv_general_dilated(
+        x, w.reshape(3, 3, 1, 6), window_strides=(1, 1),
+        padding=((1, 1), (1, 1)), feature_group_count=6,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_w8a8_close_to_fp32():
+    key = jax.random.PRNGKey(0)
+    specs = V.resnet20_specs(base=8)
+    p = V.init_vision(specs, key)
+    x = jax.random.normal(key, (2, 16, 16, 3))
+    fp = V.resnet20_apply(p, x, None)
+    q = V.resnet20_apply(p, x, QuantConfig(mode="int", a_bits=8, w_bits=8,
+                                           use_kernel=False))
+    rel = float(jnp.linalg.norm(q - fp) / jnp.linalg.norm(fp))
+    assert rel < 0.05, rel
+
+
+def test_table6_memory_savings():
+    ms = V.mobilenet_specs(base=32)
+    b8 = V.model_bytes(ms, QuantConfig(mode="int", w_bits=8))
+    b4 = V.model_bytes(ms, QuantConfig(mode="int", w_bits=4))
+    assert abs((1 - b4 / b8) - 0.47) < 0.03      # paper: 47%
+    rs = V.resnet20_specs()
+    r8 = V.model_bytes(rs, QuantConfig(mode="int", w_bits=8))
+    r2 = V.model_bytes(rs, QuantConfig(mode="int", w_bits=2))
+    assert (1 - r2 / r8) > 0.6                   # paper: 63%-class
