@@ -1,0 +1,20 @@
+# One-keystroke entry points for builders.  `make test` is the tier-1
+# verify command from ROADMAP.md; `make smoke` skips the slow subprocess
+# distributed tests for a fast inner loop.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke bench-serve bench
+
+test:
+	$(PY) -m pytest -x -q
+
+smoke:
+	$(PY) -m pytest -x -q -k "not distributed"
+
+bench-serve:
+	$(PY) benchmarks/serve_throughput.py
+
+bench:
+	$(PY) benchmarks/run.py

@@ -1,0 +1,127 @@
+"""Serving throughput: per-token vs single-pass chunked prefill.
+
+Measures, on host CPU, what the chunked-prefill rework buys on the serving
+hot path (ROADMAP north-star: as fast as the hardware allows under heavy
+traffic):
+
+  * TTFT — time from admission to the first sampled token.  The seed path
+    paid one jitted decode dispatch per prompt token; the chunked path is
+    ONE ``mode='chunk'`` forward for the whole padded prompt (and one for
+    the whole admission wave when several slots are free).
+  * tokens/s — end-to-end generated-token throughput of a full ``run``.
+
+Swept over batch sizes and weight configs (bf16 vs packed w4), CSV via
+benchmarks/common.emit:  serve/<cfg>,<us>,<derived-metrics>.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.quant import QuantConfig
+from repro.models import ArchConfig, init_params
+from repro.models.model import quantize_for_serving
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.train.step import make_chunked_prefill_step, make_decode_step
+
+MAX_PROMPT = 64
+MAX_NEW = 8
+
+
+def _cfg(quant=None) -> ArchConfig:
+    return ArchConfig(name="thr", family="dense", n_layers=2, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+                      decode_margin=32, quant=quant)
+
+
+def _prompts(n: int, length: int, vocab: int):
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (n, length), 0, vocab)
+    return [[int(t) for t in row] for row in toks]
+
+
+def _per_token_prefill_us(eng: ServingEngine, prompt, iters: int = 3):
+    """TTFT of the seed strategy: prompt fed one token per decode tick."""
+    decode = jax.jit(make_decode_step(eng.cfg))
+    bsz = eng.sc.max_batch
+
+    def once():
+        cache = eng.cache
+        logits = None
+        for t, tok in enumerate(prompt):
+            pos_v = jnp.full((bsz,), -1, jnp.int32).at[0].set(t)
+            tok_b = jnp.zeros((bsz, 1), jnp.int32).at[0, 0].set(tok)
+            logits, cache = decode(eng.params, cache, tok_b, pos_v)
+        return jnp.argmax(logits[0])
+
+    jax.block_until_ready(once())               # compile
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(once())
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def _chunked_prefill_us(eng: ServingEngine, prompt, iters: int = 3):
+    """TTFT of the chunked strategy: one prefill dispatch."""
+    bsz, sp = eng.sc.max_batch, eng.sc.max_prompt
+    toks = jnp.zeros((bsz, sp), jnp.int32
+                     ).at[0, :len(prompt)].set(jnp.asarray(prompt))
+    lens = jnp.zeros((bsz,), jnp.int32).at[0].set(len(prompt))
+    # non-donating jit so the engine cache can be reused across iters.
+    prefill = jax.jit(make_chunked_prefill_step(eng.cfg))
+
+    def once():
+        logits, _ = prefill(eng.params, eng.cache, toks, lens)
+        return jnp.argmax(logits[0])
+
+    jax.block_until_ready(once())               # compile
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(once())
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def run():
+    quants = [("bf16", None),
+              ("w4", QuantConfig(mode="wo", w_bits=4, use_kernel=False))]
+    for tag, q in quants:
+        cfg = _cfg(q)
+        params = init_params(_cfg(None), jax.random.PRNGKey(0))
+        if q is not None:
+            params, _ = quantize_for_serving(cfg, params)
+        for bsz in (1, 2, 4):
+            sc = ServeConfig(max_batch=bsz, max_prompt=MAX_PROMPT,
+                             max_new_tokens=MAX_NEW)
+            prompts = _prompts(2 * bsz, MAX_PROMPT, cfg.vocab_size)
+
+            eng = ServingEngine(cfg, params, sc)
+            us_tok = _per_token_prefill_us(eng, prompts[0])
+            us_chk = _chunked_prefill_us(eng, prompts[0])
+            emit(f"serve/ttft_{tag}_b{bsz}", us_chk,
+                 f"per_token_us={us_tok:.0f};chunked_us={us_chk:.0f};"
+                 f"speedup={us_tok / us_chk:.1f}x")
+
+            eng = ServingEngine(cfg, params, sc)
+            reqs = [Request(i, p) for i, p in enumerate(prompts)]
+            t0 = time.perf_counter()
+            out = eng.run(reqs)
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(r.out_tokens) for r in out)
+            emit(f"serve/run_{tag}_b{bsz}", dt * 1e6,
+                 f"requests={len(out)};gen_tokens={n_tok};"
+                 f"tok_per_s={n_tok / dt:.1f}")
+
+
+if __name__ == "__main__":
+    run()

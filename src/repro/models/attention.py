@@ -28,8 +28,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import current_mesh, lshard, make_spec
-from repro.models.common import ParamSpec, dense, rms_norm, rope
+from repro.distributed.sharding import (current_mesh, lshard, make_spec,
+                                        shard_map)
+from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
+                                 dense, rms_norm, rope)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -182,14 +184,14 @@ def sdpa(q, k, v, *, kv_valid) -> jax.Array:
     def local_fn(q_l, k_l, v_l):
         idx = 0
         for ax in seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         s_loc = q_l.shape[1]
         q0 = (idx * s_loc).astype(jnp.int32)
         kf = jax.lax.all_gather(k_l, seq_axes, axis=1, tiled=True)
         vf = jax.lax.all_gather(v_l, seq_axes, axis=1, tiled=True)
         return _chunked_attention_local(q_l, kf, vf, q0, kv_valid)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh, in_specs=(qkv_spec, qkv_spec, qkv_spec),
         out_specs=qkv_spec, check_vma=False)(q, k, v)
 
@@ -209,13 +211,35 @@ def decode_sdpa(q, k_cache, v_cache, *, kv_valid) -> jax.Array:
     def local_fn(q_l, k_l, v_l):
         idx = 0
         for ax in seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         k0 = (idx * k_l.shape[1]).astype(jnp.int32)
         return _decode_attention_local(q_l, k_l, v_l, k0, kv_valid, seq_axes)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh, in_specs=(q_spec, c_spec, c_spec),
         out_specs=q_spec, check_vma=False)(q, k_cache, v_cache)
+
+
+def cache_fill(cache: dict, k_new, v_new, lengths) -> dict:
+    """Write a whole prompt chunk into rows [0, len) of each slot's cache.
+
+    k_new/v_new: (B, S, KV, dh) chunk keys/values; ``lengths``: (B,) valid
+    token counts per slot (0 = slot not being admitted -> no write).  The
+    write is a pad-and-select, so it is elementwise over the cache buffer
+    and lowers correctly under any cache sharding without a shard_map.
+    Rows >= len keep their old contents (they are masked by kv_valid at
+    decode time), so admission never perturbs another slot's region.
+    """
+    cap, s = cache["k"].shape[1], k_new.shape[1]
+    len_b = chunk_lengths(lengths, cache["k"].shape[0])
+    mask = chunk_valid_mask(len_b, cap)[:, :, None, None]  # (B, cap, 1, 1)
+    pad = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+
+    def put(buf, val):
+        out = jnp.where(mask, jnp.pad(val.astype(buf.dtype), pad), buf)
+        return lshard(out, "cache_batch", "cache_seq", "kv_heads", None)
+
+    return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
 
 
 def cache_update(cache: dict, k_new, v_new, index) -> dict:
@@ -249,11 +273,11 @@ def cache_update(cache: dict, k_new, v_new, index) -> dict:
     def local_fn(kb, vb, kn, vn):
         idx = 0
         for ax in seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         k0 = idx * kb.shape[1]
         return write_local(kb, kn, k0), write_local(vb, vn, k0)
 
-    k2, v2 = jax.shard_map(
+    k2, v2 = shard_map(
         local_fn, mesh=mesh, in_specs=(c_spec, c_spec, n_spec, n_spec),
         out_specs=(c_spec, c_spec), check_vma=False)(
             cache["k"], cache["v"], k_new, v_new)
@@ -264,8 +288,11 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                     mode: str, pos: jax.Array) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer: QKV proj, RoPE, SDPA, out proj.
 
-    mode: 'train' (no cache), 'prefill' (emit cache), 'decode' (use cache).
-    pos: scalar int32 — first position of ``x`` in the sequence.
+    mode: 'train' (no cache), 'prefill' (emit cache), 'decode' (use cache),
+    'chunk' (single-pass chunked prefill into an existing slot'd cache).
+    pos: scalar int32 — first position of ``x`` in the sequence; in 'chunk'
+    mode a (B,) vector of valid prompt lengths (0 = inactive slot) for a
+    right-padded chunk whose tokens sit at positions [0, len).
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -278,9 +305,13 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
-    positions = jnp.atleast_1d(pos)[:, None] + \
-        jnp.arange(s, dtype=jnp.int32)[None, :]
-    positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
+    if mode == "chunk":
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    else:
+        positions = jnp.atleast_1d(pos)[:, None] + \
+            jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     q = lshard(q, "batch", "seq", "heads", None)
@@ -300,6 +331,12 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             "v": lshard(jnp.pad(v.astype(cache["v"].dtype), pad),
                         "cache_batch", "cache_seq", "kv_heads", None),
         }
+    elif mode == "chunk":
+        # one causal pass over the whole padded chunk; padded queries sit
+        # after every valid token so they never leak into valid outputs,
+        # and their own outputs are discarded by the caller.
+        o = sdpa(q, k, v, kv_valid=jnp.int32(s))
+        new_cache = cache_fill(cache, k, v, pos)
     elif mode == "decode":
         assert s == 1
         new_cache = cache_update(cache, k, v, pos)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.distributed.sharding import lshard
 from repro.models import mla, moe, ssm, xlstm
 from repro.models.attention import apply_attention, attn_specs, kv_cache_spec
-from repro.models.common import ParamSpec, dense, layer_norm, rms_norm
+from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
+                                 dense, layer_norm, rms_norm)
 
 
 def norm_specs(cfg) -> dict:
@@ -64,6 +65,14 @@ def _attn_block_specs(cfg, ffn: str) -> dict:
     return s
 
 
+def _chunk_token_mask(x, mode, pos):
+    """(B, S) valid-token mask in chunked-prefill mode, else None."""
+    if mode != "chunk":
+        return None
+    b, s = x.shape[:2]
+    return chunk_valid_mask(chunk_lengths(pos, b), s)
+
+
 def _apply_attn_block(p, x, cfg, cache, mode, pos, ffn: str):
     x = lshard(x, "batch", "seq", None)
     a, new_cache = apply_attention(
@@ -72,7 +81,8 @@ def _apply_attn_block(p, x, cfg, cache, mode, pos, ffn: str):
     x = x + a
     h = apply_norm(p["ln2"], x, cfg)
     if ffn == "moe":
-        y, aux = moe.moe_ffn(p["ffn"], h, cfg)
+        y, aux = moe.moe_ffn(p["ffn"], h, cfg,
+                             token_mask=_chunk_token_mask(x, mode, pos))
     else:
         y, aux = apply_mlp(p["ffn"], h, cfg), jnp.float32(0)
     x = lshard(x + y, "batch", "seq", None)
@@ -94,7 +104,8 @@ def _apply_mla_block(p, x, cfg, cache, mode, pos, ffn: str):
     x = x + a
     h = apply_norm(p["ln2"], x, cfg)
     if ffn == "moe":
-        y, aux = moe.moe_ffn(p["ffn"], h, cfg)
+        y, aux = moe.moe_ffn(p["ffn"], h, cfg,
+                             token_mask=_chunk_token_mask(x, mode, pos))
     else:
         y, aux = apply_mlp(p["ffn"], h, cfg), jnp.float32(0)
     x = lshard(x + y, "batch", "seq", None)

@@ -135,6 +135,18 @@ def dense(x: jax.Array, w, quant: Optional[QuantConfig] = None,
     return y
 
 
+def chunk_lengths(pos, batch: int) -> jax.Array:
+    """Per-slot valid lengths from a mode='chunk' ``pos`` ((B,) or scalar)."""
+    return jnp.broadcast_to(jnp.atleast_1d(pos), (batch,))
+
+
+def chunk_valid_mask(len_b: jax.Array, seq: int) -> jax.Array:
+    """(B, S) True at valid (non-padding) positions of a right-padded
+    chunk whose per-slot valid counts are ``len_b``.  The single change
+    point for chunked-prefill padding semantics across all families."""
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] < len_b[:, None]
+
+
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     h = x.astype(jnp.float32)
     h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)

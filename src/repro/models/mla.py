@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
 from repro.models.attention import sdpa
-from repro.models.common import ParamSpec, dense, rms_norm, rope
+from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
+                                 dense, rms_norm, rope)
 
 
 def mla_dims(cfg):
@@ -65,16 +66,21 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
 
     q = dense(x, p["w_q"], cfg.quant).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    positions = jnp.atleast_1d(pos)[:, None] + \
-        jnp.arange(s, dtype=jnp.int32)[None, :]
-    positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
+    if mode == "chunk":
+        # chunked prefill: tokens sit at positions [0, len) per slot.
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    else:
+        positions = jnp.atleast_1d(pos)[:, None] + \
+            jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(jnp.maximum(positions, 0), (b, s))
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
     c_kv, k_r = _compress(p, x, cfg)
     k_rope = rope(k_r[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
 
     new_cache = None
-    if mode in ("train", "prefill"):
+    if mode in ("train", "prefill", "chunk"):
         # naive (expanded) form + shared context-parallel SDPA.
         k_nope = dense(c_kv, p["w_uk"], cfg.quant).reshape(b, s, h, dn)
         v = dense(c_kv, p["w_uv"], cfg.quant).reshape(b, s, h, dv)
@@ -91,6 +97,17 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             entry = jnp.pad(entry.astype(cache["ckv"].dtype),
                             ((0, 0), (0, cap - s), (0, 0)))
             new_cache = {"ckv": lshard(entry, "cache_batch", "cache_seq", None)}
+        elif mode == "chunk":
+            # masked chunk write into rows [0, len) of each slot's
+            # compressed cache; len == 0 slots keep their region untouched.
+            entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+            buf = cache["ckv"]
+            cap = buf.shape[1]
+            mask = chunk_valid_mask(chunk_lengths(pos, b), cap)[:, :, None]
+            entry = jnp.pad(entry.astype(buf.dtype),
+                            ((0, 0), (0, cap - s), (0, 0)))
+            buf = jnp.where(mask, entry, buf)
+            new_cache = {"ckv": lshard(buf, "cache_batch", "cache_seq", None)}
     elif mode == "decode":
         assert s == 1
         entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)

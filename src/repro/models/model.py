@@ -4,11 +4,16 @@ The block program (ArchConfig.pattern) is interpreted into lax.scan stages
 with stacked parameters, so compile time scales with the number of *distinct*
 block kinds, not the number of layers — mandatory for dry-running 34B/60L
 models on a 512-device host platform.  Caches thread through the scans as
-xs/ys.  One forward covers the three lowered entry points:
+xs/ys.  One forward covers the four lowered entry points:
 
   mode='train'    — no cache, remat per scan body
   mode='prefill'  — emits a cache sized ``capacity``
   mode='decode'   — consumes/updates the cache at position ``pos``
+  mode='chunk'    — single-pass chunked prefill into an *existing* slot'd
+                    cache: ``pos`` is a (B,) vector of valid prompt lengths
+                    for a right-padded chunk; slots with length 0 keep
+                    their cache/recurrent state bit-for-bit (batched
+                    admission never perturbs in-flight requests)
 """
 from __future__ import annotations
 

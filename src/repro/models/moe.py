@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.quant import fake_quant
-from repro.distributed.sharding import current_mesh, lshard, make_spec
+from repro.distributed.sharding import (current_mesh, lshard, make_spec,
+                                        shard_map)
 from repro.models.common import ParamSpec, dense
 
 
@@ -149,7 +150,7 @@ def _moe_shardmap(p, x, expert_idx, gate_vals, cap, cfg, mesh,
         # --- hierarchical global capacity slots -------------------------
         d_lin = 0
         for ax in tuple(dp_axes) + tuple(ep_axes):
-            d_lin = d_lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            d_lin = d_lin * mesh.shape[ax] + jax.lax.axis_index(ax)
         r_loc = _rank_in_group(ie)                       # local per-expert
         counts = jnp.zeros((e,), jnp.int32).at[ie].add(1)
         counts_all = jax.lax.all_gather(
@@ -198,7 +199,7 @@ def _moe_shardmap(p, x, expert_idx, gate_vals, cap, cfg, mesh,
         y = y_a.reshape(tl, k, d).sum(axis=1)
         return y.reshape(x_l.shape)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, i_spec, i_spec) + wio_spec,
         out_specs=x_spec, check_vma=False)(
@@ -225,8 +226,16 @@ def _ep_layout(cfg, b, s, cap, mesh):
     return (dp_axes, ep_axes) if ok else None
 
 
-def moe_ffn(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+def moe_ffn(p: dict, x: jax.Array, cfg,
+            token_mask: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    ``token_mask``: optional (B, S) bool — False positions (chunked-prefill
+    padding) are excluded from routing entirely: their expert index is the
+    OOB sentinel so they consume NO expert capacity (they must never
+    displace a valid token's slot), and their gates are zeroed.
+    """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     t = b * s
@@ -238,6 +247,10 @@ def moe_ffn(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
     gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (T, k)
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        tm = token_mask.reshape(t)
+        gate_vals = jnp.where(tm[:, None], gate_vals, 0.0)
+        expert_idx = jnp.where(tm[:, None], expert_idx, e)
 
     # load-balancing auxiliary loss (Switch-style).
     me = probs.mean(0)
@@ -247,7 +260,10 @@ def moe_ffn(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
 
     cap = _capacity(t, e, k, cfg.capacity_factor)
     a = t * k
-    layout = _ep_layout(cfg, b, s, cap, current_mesh())
+    # the EP shard_map path has no masked-dispatch support; the dense path
+    # is numerically identical, so masked (serving chunk) calls take it.
+    layout = None if token_mask is not None else \
+        _ep_layout(cfg, b, s, cap, current_mesh())
     if layout is not None:
         # slot assignment happens hierarchically inside the shard_map.
         y = _moe_shardmap(p, x, expert_idx.reshape(b, s, k),

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
-from repro.models.common import ParamSpec, dense, rms_norm
+from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
+                                 dense, rms_norm)
 
 
 def ssm_dims(cfg):
@@ -73,6 +74,24 @@ def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
     out = out + b[None, None, :]
     new_state = ext[:, -(k - 1):, :] if k > 1 else state
     return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_state
+
+
+def conv_state_from_chunk(u: jax.Array, k: int, lengths: jax.Array,
+                          old_state: jax.Array) -> jax.Array:
+    """Conv state after a right-padded chunk: the last K-1 *valid* inputs.
+
+    u: (B, S, C) chunk inputs (zero history before position 0);
+    ``lengths``: (B,) valid counts.  Rows with length 0 (slots not being
+    admitted) keep ``old_state`` so batched admission never perturbs an
+    in-flight slot's recurrence.
+    """
+    b = u.shape[0]
+    ext = jnp.concatenate(
+        [jnp.zeros((b, k - 1, u.shape[2]), u.dtype), u], axis=1)
+    idx = lengths[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    st = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+    active = (lengths > 0)[:, None, None]
+    return jnp.where(active, st.astype(old_state.dtype), old_state)
 
 
 def _ssd_chunked(xh, dt, a, b_in, c_in, h0, chunk: int):
@@ -156,6 +175,14 @@ def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     a_param = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    if mode == "chunk":
+        # chunked prefill: pos carries per-slot valid lengths.  dt = 0 at
+        # padded steps makes the SSD recurrence an exact identity there
+        # (decay exp(0)=1, zero injection), so the final state equals the
+        # state after each slot's true prompt length.
+        len_b = chunk_lengths(pos, b)
+        valid = chunk_valid_mask(len_b, s)                        # (B,S)
+        dt = jnp.where(valid[:, :, None], dt, 0.0)
     xh = xc.reshape(b, s, h, pdim)
 
     if mode == "decode":
@@ -180,6 +207,14 @@ def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         new_cache = None
         if mode == "prefill":
             new_cache = {"conv": new_conv, "ssm": h_final}
+        elif mode == "chunk":
+            active = (len_b > 0)
+            new_cache = {
+                "conv": conv_state_from_chunk(
+                    conv_in, p["conv_w"].shape[0], len_b, cache["conv"]),
+                "ssm": jnp.where(active[:, None, None, None], h_final,
+                                 cache["ssm"].astype(jnp.float32)),
+            }
 
     y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
     y = y.reshape(b, s, d_inner).astype(x.dtype)

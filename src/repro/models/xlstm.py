@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
-from repro.models.common import ParamSpec, dense, rms_norm
-from repro.models.ssm import _causal_conv
+from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
+                                 dense, rms_norm)
+from repro.models.ssm import _causal_conv, conv_state_from_chunk
 
 NEG = -1e30
 
@@ -163,6 +164,14 @@ def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
     log_i = i_raw                                       # (B, S, H)
     log_f = -jax.nn.softplus(-f_raw)                    # log sigmoid
+    if mode == "chunk":
+        # chunked prefill: pos carries per-slot valid lengths.  Padded
+        # steps get i=0 (log NEG) and f=1 (log 0), which makes the
+        # stabilized recurrence an exact identity there.
+        len_b = chunk_lengths(pos, b)
+        valid = chunk_valid_mask(len_b, s)[..., None]   # (B,S,1)
+        log_i = jnp.where(valid, log_i, NEG)
+        log_f = jnp.where(valid, log_f, 0.0)
 
     if mode == "decode":
         assert s == 1
@@ -188,6 +197,17 @@ def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         if mode == "prefill":
             new_cache = {"conv": new_conv, "C": state[0], "n": state[1],
                          "m": state[2]}
+        elif mode == "chunk":
+            active = (len_b > 0)
+            mix = lambda new, old: jnp.where(
+                active.reshape((b,) + (1,) * (new.ndim - 1)), new, old)
+            new_cache = {
+                "conv": conv_state_from_chunk(u, p["conv_w"].shape[0],
+                                              len_b, cache["conv"]),
+                "C": mix(state[0], cache["C"]),
+                "n": mix(state[1], cache["n"]),
+                "m": mix(state[2], cache["m"]),
+            }
 
     h_seq = rms_norm(h_seq.reshape(b, s, d_in), p["out_norm"])
     h_seq = h_seq * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
@@ -273,6 +293,29 @@ def apply_slstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         h_seq = state[2][:, None]
         new_cache = {"c": state[0], "n": state[1], "h": state[2],
                      "m": state[3]}
+    elif mode == "chunk":
+        # chunked prefill: pos carries per-slot valid lengths; padded steps
+        # (and slots with length 0) keep their state via a masked update.
+        len_b = chunk_lengths(pos, b)
+        valid = chunk_valid_mask(len_b, s)                      # (B, S)
+
+        def mstep(st, inp):
+            w_t, v_t = inp
+            new = slstm_step(st, w_t, p["r"].astype(jnp.float32))
+            new = tuple(jnp.where(v_t[:, None, None], nw, old)
+                        for nw, old in zip(new, st))
+            return new, new[2]
+
+        state, h_seq = jax.lax.scan(
+            mstep, state, (jnp.moveaxis(wx, 1, 0), jnp.moveaxis(valid, 1, 0)))
+        h_seq = jnp.moveaxis(h_seq, 0, 1)
+        active = (len_b > 0)[:, None, None]
+        new_cache = {
+            "c": jnp.where(active, state[0], cache["c"]),
+            "n": jnp.where(active, state[1], cache["n"]),
+            "h": jnp.where(active, state[2], cache["h"]),
+            "m": jnp.where(active, state[3], cache["m"]),
+        }
     else:
         def step(st, w_t):
             st = slstm_step(st, w_t, p["r"].astype(jnp.float32))

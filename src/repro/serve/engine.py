@@ -1,31 +1,45 @@
-"""Batched serving engine: continuous-batching-lite over a slot'd KV cache.
+"""Batched serving engine: chunked prefill + continuous-batching-lite decode.
 
-The engine owns a fixed pool of ``max_batch`` cache slots.  Requests are
-admitted into free slots (prompt -> prefill), and one jitted decode step
-advances every active slot per tick; finished slots (EOS or max tokens) are
-released and refilled — the standard continuous-batching serving shape,
-sized down to this container.
+The engine owns a fixed pool of ``max_batch`` cache slots.  Admission is a
+**single-pass chunked prefill**: every pending request that fits a free slot
+is packed into one right-padded ``(max_batch, max_prompt)`` token chunk with
+a per-slot length vector, and ONE jitted forward (``mode='chunk'``) writes
+each admitted slot's KV/recurrent cache region and returns the post-prompt
+logits for all of them — O(1) dispatch round-trips per admission wave
+instead of the O(prompt_len) per-token ticks the seed engine paid.  Prefill
+is compute-bound (Shaheen Table 4/6), so it runs as one large offload —
+the same shape as the paper's cluster offloads — while slots whose length
+is 0 in the chunk keep their cache and recurrent state bit-for-bit, so
+admission never perturbs in-flight requests mid-decode.
+
+Steady state is unchanged: one jitted decode step advances every active
+slot per tick; finished slots (EOS or max tokens) are released and refilled
+by the next admission wave.  ``run`` returns completed requests in
+completion order.
 
 Two Shaheen touches:
   * weights can be served PACKED sub-byte (quantize_for_serving) — decode
     is weight-bandwidth-bound, exactly where the paper's formats pay;
   * the slot table is guarded by the software IOTLB (core/iotlb): every
-    slot acquire/release goes through a programmed window, so a buggy
-    client cannot write another request's cache region (graceful fault
-    containment, §III-C2).
+    admission checks the FULL region the request will ever write (prompt
+    chunk + decode tail) against the slot's programmed window, so an
+    oversized prompt faults before any cache write.  In strict mode the
+    fault raises (host interrupt); in non-strict mode it is recorded and
+    the request is rejected — graceful fault containment, §III-C2 — and a
+    neighboring slot's cache is never touched either way.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.iotlb import Iotlb, Window
-from repro.models import forward, init_cache
+from repro.core.iotlb import Iotlb, IotlbFault, Window
+from repro.models import init_cache
 from repro.models.config import ArchConfig
-from repro.train.step import make_decode_step
+from repro.train.step import make_chunked_prefill_step, make_decode_step
 
 
 @dataclasses.dataclass
@@ -36,6 +50,7 @@ class ServeConfig:
     temperature: float = 0.0        # 0 = greedy
     eos_id: int = -1                # -1 = never
     seed: int = 0
+    strict_iotlb: bool = True       # False: record fault, reject admission
 
 
 @dataclasses.dataclass
@@ -44,6 +59,7 @@ class Request:
     prompt: List[int]
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    failed: bool = False            # rejected by IOTLB containment
 
 
 class ServingEngine:
@@ -53,13 +69,14 @@ class ServingEngine:
         self.sc = serve_cfg
         cap_prompt = serve_cfg.max_prompt + serve_cfg.max_new_tokens
         self.cache = init_cache(cfg, serve_cfg.max_batch, cap_prompt)
-        self.capacity = None
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
-        self._prefill_cache_len = 0
+        self._prefill = jax.jit(make_chunked_prefill_step(cfg),
+                                donate_argnums=1)
         self.slots: List[Optional[Request]] = [None] * serve_cfg.max_batch
         self.positions = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
         self.last_token = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
         self.key = jax.random.PRNGKey(serve_cfg.seed)
+        self.completed: List[Request] = []
         # software IOTLB guarding the slot table (one window per slot).
         self.iotlb = Iotlb()
         for i in range(serve_cfg.max_batch):
@@ -69,41 +86,93 @@ class ServingEngine:
         self._slot_span = cap_prompt
 
     # -- admission ----------------------------------------------------------
-    def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _reject(self, req: Request) -> None:
+        if not req.done:            # idempotent: retried rejects are no-ops
+            req.failed = True
+            req.done = True
+            self.completed.append(req)
+
+    def _admissible(self, slot: int, req: Request) -> bool:
+        """IOTLB check covering the request's full cache write: the prompt
+        chunk plus the decode tail.  A faulting request is always marked
+        failed and appended to ``completed`` (so its client gets a signal)
+        BEFORE the strict raise; non-strict just records + rejects.  Either
+        way no cache region is written."""
+        if not req.prompt:
+            # an empty prompt has nothing to prefill (and length 0 is the
+            # chunk pass's inactive-slot sentinel): reject cleanly.
+            self._reject(req)
+            return False
+        span = len(req.prompt) + self.sc.max_new_tokens
+        ok = self.iotlb.translate(slot * self._slot_span, span, write=True,
+                                  strict=False)
+        if ok is None:
+            self._reject(req)
+            if self.sc.strict_iotlb:
+                f = self.iotlb.faults[-1]
+                raise IotlbFault(f.kind, f"request {req.rid}: range "
+                                 f"[{f.start}, {f.start + f.length}) "
+                                 f"write={f.write}")
+            return False
+        return True
+
+    def admit_many(self, pending: List[Request]) -> int:
+        """Admit as many pending requests as there are free slots, in ONE
+        chunked-prefill dispatch.  Pops admitted (and rejected) requests
+        off ``pending``; returns the number admitted."""
+        placed: List[tuple] = []        # (slot, request) vetted this wave
+        try:
+            for slot in self._free_slots():
+                while pending:
+                    req = pending.pop(0)
+                    if req.done:        # already rejected/finished earlier
+                        continue
+                    if self._admissible(slot, req):
+                        placed.append((slot, req))
+                        break
+                else:
+                    break
+        except IotlbFault:
+            # strict fault mid-wave: no slot was mutated yet (the faulting
+            # request is already marked failed + completed) — put the
+            # already-vetted requests back so a caller that catches the
+            # fault loses neither requests nor engine consistency.
+            for _, req in reversed(placed):
+                pending.insert(0, req)
+            raise
+        if not placed:
+            return 0
+        bsz, sp = self.sc.max_batch, self.sc.max_prompt
+        toks = jnp.zeros((bsz, sp), jnp.int32)
+        lens = jnp.zeros((bsz,), jnp.int32)
+        for slot, req in placed:
+            self.slots[slot] = req
+            p = req.prompt
+            toks = toks.at[slot, :len(p)].set(jnp.asarray(p, jnp.int32))
+            lens = lens.at[slot].set(len(p))
+        logits, self.cache = self._prefill(self.params, self.cache, toks,
+                                           lens)
+        firsts = self._sample(logits)
+        for slot, req in placed:
+            first = int(firsts[slot])
+            self.positions = self.positions.at[slot].set(len(req.prompt))
+            self.last_token = self.last_token.at[slot].set(first)
+            req.out_tokens.append(first)    # the post-prompt prediction
+            if first == self.sc.eos_id or \
+                    len(req.out_tokens) >= self.sc.max_new_tokens:
+                self._finish(slot)
+        return len(placed)
 
     def admit(self, req: Request) -> bool:
-        slot = self._free_slot()
-        if slot is None:
-            return False
-        # IOTLB check: the prompt must fit this slot's window.
-        self.iotlb.translate(slot * self._slot_span, len(req.prompt),
-                             write=True)
-        self.slots[slot] = req
-        # per-slot prefill: feed prompt tokens through decode ticks with a
-        # position vector that advances ONLY this slot (pos=-1 freezes the
-        # caches/recurrent state of every other slot, so admission never
-        # perturbs in-flight requests).
-        logits = None
-        for t, tok in enumerate(req.prompt):
-            pos_v = jnp.full((self.sc.max_batch,), -1, jnp.int32
-                             ).at[slot].set(t)
-            tok_b = jnp.zeros((self.sc.max_batch, 1), jnp.int32
-                              ).at[slot, 0].set(tok)
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              tok_b, pos_v)
-        self.positions = self.positions.at[slot].set(len(req.prompt))
-        first = int(self._sample(logits[slot:slot + 1])[0])
-        self.last_token = self.last_token.at[slot].set(first)
-        req.out_tokens.append(first)        # the post-prompt prediction
-        if first == self.sc.eos_id or \
-                len(req.out_tokens) >= self.sc.max_new_tokens:
-            req.done = True
-            self.slots[slot] = None
-        return True
+        """Single-request admission (compat shim over the batched path).
+
+        Returns True iff the request was admitted into a slot.  False can
+        mean either no slot is free (retry later) or the request was
+        rejected — check ``req.done``/``req.failed`` before retrying."""
+        return self.admit_many([req]) == 1
 
     def _sample(self, logits):
         logits = logits.astype(jnp.float32)
@@ -111,6 +180,12 @@ class ServingEngine:
             return jnp.argmax(logits, axis=-1)
         self.key, k = jax.random.split(self.key)
         return jax.random.categorical(k, logits / self.sc.temperature)
+
+    def _finish(self, slot: int):
+        req = self.slots[slot]
+        req.done = True
+        self.completed.append(req)
+        self.slots[slot] = None     # release slot (window stays mapped)
 
     # -- steady-state decode tick -------------------------------------------
     def step(self):
@@ -134,15 +209,15 @@ class ServingEngine:
             req.out_tokens.append(tok)
             if tok == self.sc.eos_id or \
                     len(req.out_tokens) >= self.sc.max_new_tokens:
-                req.done = True
-                self.slots[i] = None   # release slot (window stays mapped)
+                self._finish(i)
 
     def run(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests`` to completion.  Returns the requests finished
+        during this call, in completion order (rejected requests appear
+        with ``failed=True`` and no output tokens)."""
+        start = len(self.completed)
         pending = list(requests)
-        done: List[Request] = []
         while pending or any(s is not None for s in self.slots):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+            self.admit_many(pending)
             self.step()
-            done.extend(r for r in requests if r.done and r not in done)
-        return requests
+        return self.completed[start:]

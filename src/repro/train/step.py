@@ -130,3 +130,23 @@ def make_decode_step(cfg: ArchConfig):
                                    mode="decode", pos=pos)
         return logits[:, -1, :], cache
     return decode
+
+
+def make_chunked_prefill_step(cfg: ArchConfig):
+    """Single-pass chunked prefill for the serving engine.
+
+    Consumes a whole right-padded prompt chunk in ONE forward instead of
+    O(prompt_len) per-token decode dispatches — prefill is compute-bound
+    (Shaheen Table 4/6), so it should be one large offload, not many tiny
+    ones.  Returns the logits at each slot's last valid token (the
+    post-prompt prediction) plus the chunk-filled cache.
+    """
+    def prefill(params, cache, tokens, lengths):
+        """tokens: (B, S) right-padded ids; lengths: (B,) valid counts
+        (0 = slot not being admitted — its cache region is untouched)."""
+        logits, cache, _ = forward(params, tokens, cfg, cache=cache,
+                                   mode="chunk", pos=lengths)
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+        return last[:, 0, :], cache
+    return prefill

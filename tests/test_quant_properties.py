@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the quantization/packing invariants."""
+"""Hypothesis property tests on the quantization/packing invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+module skips cleanly when it is absent so tier-1 collection never breaks.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.packing import pack, pack_factor, packed_shape, unpack
 from repro.core.quant import (compute_scale, dequantize, fake_quant, qmax,

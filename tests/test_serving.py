@@ -13,6 +13,39 @@ CFG = ArchConfig(name="srv", family="dense", n_layers=2, d_model=64,
                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
                  decode_margin=32)
 
+# one reduced config per cache-carrying model family (f32 so the oracle
+# argmax comparison is free of bf16 tie noise).
+FAMILY_CFGS = {
+    "dense": CFG.with_(dtype=jnp.float32),
+    "moe": ArchConfig(
+        name="srv_moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=0, vocab_size=100, n_experts=4, top_k=2,
+        d_ff_expert=64, capacity_factor=8.0, decode_margin=32,
+        dtype=jnp.float32),
+    "mla": ArchConfig(
+        name="srv_mla", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, kv_lora_rank=32,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, decode_margin=32,
+        pattern=(("scan", "mla_mlp", 2),), dtype=jnp.float32),
+    "ssm": ArchConfig(
+        name="srv_ssm", family="ssm", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, ssm_state=16,
+        ssm_headdim=32, ssm_chunk=8, decode_margin=32,
+        pattern=(("scan", "mamba", 2),), dtype=jnp.float32),
+    "xlstm": ArchConfig(
+        name="srv_xlstm", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, ssm_chunk=8,
+        decode_margin=32, pattern=(("scan", "mlstm", 1),
+                                   ("scan", "slstm", 1)),
+        dtype=jnp.float32),
+    "hybrid": ArchConfig(
+        name="srv_hyb", family="hybrid", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=100, ssm_state=16,
+        ssm_headdim=32, ssm_chunk=8, decode_margin=32,
+        pattern=(("group", (("mamba", 1), ("shared_attn", 1)), 2),),
+        dtype=jnp.float32),
+}
+
 
 def _oracle(params, cfg, prompt, n):
     toks = list(prompt)
@@ -45,6 +78,134 @@ def test_engine_packed_weights_w8():
         max_batch=2, max_prompt=16, max_new_tokens=4)).run(
         [Request(0, [5, 7, 11])])
     assert len(out[0].out_tokens) == 4
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CFGS))
+def test_chunked_prefill_matches_oracle_all_families(family):
+    """Chunked prefill == teacher-forced oracle, token for token, with
+    mixed prompt lengths and slot reuse after release (4 reqs, 2 slots)."""
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reqs = [Request(0, [5, 7, 11]), Request(1, [3, 1, 4, 1, 5, 9]),
+            Request(2, [2, 7]), Request(3, [9, 8, 7, 6, 5, 4, 3, 2])]
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=3))
+    out = eng.run(reqs)
+    assert len(out) == len(reqs)
+    for r in out:
+        assert r.done and not r.failed
+        assert r.out_tokens == _oracle(params, cfg, r.prompt, 3), \
+            (family, r.rid)
+
+
+def test_admission_wave_is_single_prefill_dispatch():
+    """All free slots are admitted in ONE chunked-prefill call."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=4, max_prompt=16, max_new_tokens=2))
+    calls = []
+    orig = eng._prefill
+    eng._prefill = lambda *a: (calls.append(1), orig(*a))[1]
+    out = eng.run([Request(i, [2 + i, 3, 5]) for i in range(4)])
+    assert len(calls) == 1          # 4 admissions, one dispatch
+    assert all(r.done and len(r.out_tokens) == 2 for r in out)
+
+
+def test_run_returns_completion_order():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=4))
+    reqs = [Request(0, [5, 7, 11]), Request(1, [3, 1, 4]), Request(2, [2, 7])]
+    out = eng.run(reqs)
+    assert len(out) == 3 and {r.rid for r in out} == {0, 1, 2}
+    # the late-admitted request (no slot free at t=0) finishes last.
+    assert out[-1].rid == 2
+
+
+def test_sampled_decode_deterministic_under_seed():
+    """temperature=0 is greedy (oracle tests); sampled decode is
+    reproducible bit-for-bit under a fixed engine seed."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+
+    def go():
+        eng = ServingEngine(CFG, params, ServeConfig(
+            max_batch=2, max_prompt=16, max_new_tokens=5, temperature=0.8,
+            seed=123))
+        out = eng.run([Request(0, [5, 7, 11]), Request(1, [3, 1, 4])])
+        return {r.rid: r.out_tokens for r in out}
+
+    assert go() == go()
+
+
+def test_moe_chunk_prefill_padding_invariant_at_tight_capacity():
+    """Padding tokens must not consume expert capacity: the same prompts
+    produce identical outputs whether the chunk carries 16 or 64 columns
+    of padding, at the DEFAULT capacity factor."""
+    cfg = FAMILY_CFGS["moe"].with_(capacity_factor=1.25)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reqs = lambda: [Request(0, [5, 7, 11, 2]), Request(1, [3, 1, 4])]
+
+    def go(max_prompt):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            max_batch=2, max_prompt=max_prompt, max_new_tokens=3))
+        return {r.rid: r.out_tokens for r in eng.run(reqs())}
+
+    assert go(16) == go(64)
+
+
+def test_empty_prompt_rejected_cleanly():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=4))
+    out = eng.run([Request(0, []), Request(1, [5, 7, 3])])
+    empty = next(r for r in out if r.rid == 0)
+    assert empty.failed and empty.out_tokens == []
+    good = next(r for r in out if r.rid == 1)
+    assert not good.failed
+    assert good.out_tokens == _oracle(params, CFG, good.prompt, 4)
+
+
+def test_strict_fault_mid_wave_leaves_engine_consistent():
+    """A strict IOTLB fault during a multi-request wave must not leave
+    half-placed slots behind, and vetted requests go back to pending."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=4))
+    bad = Request(1, list(range(2, 16)))
+    pending = [Request(0, [5, 7, 3]), bad]
+    with pytest.raises(IotlbFault, match="request 1"):
+        eng.admit_many(pending)
+    assert all(s is None for s in eng.slots)       # nothing half-placed
+    assert [r.rid for r in pending] == [0]         # vetted req restored
+    # the faulting request got a terminal signal, not silence.
+    assert bad.failed and bad.done and bad in eng.completed
+    out = eng.run(pending)                         # engine still serves
+    assert out[0].out_tokens == _oracle(params, CFG, [5, 7, 3], 4)
+
+
+def test_engine_overlong_prompt_faults_strict():
+    """Prompt chunk + decode tail exceeding the slot window raises."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=4))
+    with pytest.raises(IotlbFault):
+        eng.admit(Request(0, list(range(2, 16))))   # 14 + 4 > 12 window
+
+
+def test_engine_overlong_prompt_rejected_nonstrict_no_corruption():
+    """Non-strict: fault recorded, request rejected, neighbor unharmed."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=4, strict_iotlb=False))
+    bad = Request(7, list(range(2, 22)))
+    good = Request(8, [5, 7, 3])
+    out = eng.run([bad, good])
+    bad_out = next(r for r in out if r.rid == 7)
+    assert bad_out.failed and bad_out.done and bad_out.out_tokens == []
+    assert eng.iotlb.faults and eng.iotlb.faults[-1].kind == "miss"
+    good_out = next(r for r in out if r.rid == 8)
+    assert not good_out.failed
+    assert good_out.out_tokens == _oracle(params, CFG, good.prompt, 4)
 
 
 def test_iotlb_permissions_and_containment():
