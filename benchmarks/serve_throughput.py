@@ -1,14 +1,19 @@
-"""Serving throughput: per-token vs single-pass chunked prefill.
+"""Serving throughput: chunked prefill TTFT + paged-KV capacity sharing.
 
-Measures, on host CPU, what the chunked-prefill rework buys on the serving
-hot path (ROADMAP north-star: as fast as the hardware allows under heavy
-traffic):
+Measures, on host CPU, what the serving rework buys on the hot path
+(ROADMAP north-star: as fast as the hardware allows under heavy traffic):
 
   * TTFT — time from admission to the first sampled token.  The seed path
     paid one jitted decode dispatch per prompt token; the chunked path is
     ONE ``mode='chunk'`` forward for the whole padded prompt (and one for
     the whole admission wave when several slots are free).
   * tokens/s — end-to-end generated-token throughput of a full ``run``.
+  * paged KV capacity — at the SAME cache-row budget, the paged engine
+    (global page pool + per-slot page tables) admits strictly more
+    concurrent mixed-length requests than the contiguous layout, whose
+    every slot statically owns ``max_prompt + max_new_tokens`` rows, while
+    emitting identical tokens.  Reports admitted concurrency and cache
+    capacity utilization (valid rows / rows reserved).
 
 Swept over batch sizes and weight configs (bf16 vs packed w4), CSV via
 benchmarks/common.emit:  serve/<cfg>,<us>,<derived-metrics>.
@@ -92,6 +97,68 @@ def _chunked_prefill_us(eng: ServingEngine, prompt, iters: int = 3):
     return sorted(times)[len(times) // 2] * 1e6
 
 
+def _mixed_prompts(vocab: int):
+    """Mixed short/long prompts: the workload where static contiguous
+    windows waste most of their reservation."""
+    lengths = [4, 6, 8, 12, 4, 8, 16, 6, 32, 4, 8, 48]
+    key = jax.random.PRNGKey(11)
+    out = []
+    for i, n in enumerate(lengths):
+        key, k = jax.random.split(key)
+        out.append([int(t) for t in jax.random.randint(k, (n,), 0, vocab)])
+    return out
+
+
+def _paged_capacity(cfg, params):
+    """Same pool budget, paged vs contiguous: concurrency + utilization.
+
+    Pool budget: 128 cache rows = 8 pages x 16 rows.  The contiguous
+    layout spends ``max_prompt + max_new_tokens`` = 72 rows per slot, so
+    128 rows fund exactly ONE slot; the paged engine funds up to 8 slots
+    whose pages are claimed at admission, grown on demand during decode,
+    and freed on completion.  Both engines must emit identical tokens."""
+    page_size, num_pages = 16, 8
+    pool_rows = page_size * num_pages
+    cap_per_slot = MAX_PROMPT + MAX_NEW                   # 72 rows
+    contig_slots = max(1, pool_rows // cap_per_slot)      # 1 slot
+    prompts = _mixed_prompts(cfg.vocab_size)
+
+    eng_c = ServingEngine(cfg, params, ServeConfig(
+        max_batch=contig_slots, max_prompt=MAX_PROMPT,
+        max_new_tokens=MAX_NEW, paged=False))
+    out_c = eng_c.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    toks_c = {r.rid: r.out_tokens for r in out_c}
+
+    eng_p = ServingEngine(cfg, params, ServeConfig(
+        max_batch=num_pages, max_prompt=MAX_PROMPT, max_new_tokens=MAX_NEW,
+        paged=True, page_size=page_size, num_pages=num_pages))
+    pending = [Request(100 + i, list(p)) for i, p in enumerate(prompts)]
+    rid0 = 100
+    used_rows = reserved_rows = ticks = 0
+    t0 = time.perf_counter()
+    while pending or any(s is not None for s in eng_p.slots):
+        eng_p.admit_many(pending)
+        used_rows += sum(int(eng_p.positions[i])
+                         for i, s in enumerate(eng_p.slots) if s is not None)
+        reserved_rows += eng_p.pages_in_use() * page_size
+        ticks += 1
+        eng_p.step()
+    dt = time.perf_counter() - t0
+    toks_p = {r.rid - rid0: r.out_tokens for r in eng_p.completed}
+
+    assert toks_p == toks_c, "paged tokens diverge from contiguous"
+    assert eng_p.peak_active > contig_slots, \
+        "paged engine admitted no more than the contiguous budget"
+    util = used_rows / max(reserved_rows, 1)
+    emit("serve/paged_concurrency", eng_p.peak_active,
+         f"pool_rows={pool_rows};contiguous_slots={contig_slots};"
+         f"paged_peak_concurrency={eng_p.peak_active};"
+         f"requests={len(prompts)};identical_tokens=1")
+    emit("serve/paged_utilization", util * 100,
+         f"valid_rows_over_reserved_pct={util * 100:.0f};"
+         f"ticks={ticks};run_us={dt * 1e6:.0f}")
+
+
 def run():
     quants = [("bf16", None),
               ("w4", QuantConfig(mode="wo", w_bits=4, use_kernel=False))]
@@ -101,8 +168,10 @@ def run():
         if q is not None:
             params, _ = quantize_for_serving(cfg, params)
         for bsz in (1, 2, 4):
+            # contiguous layout here: the TTFT probes time the contiguous
+            # step builders against the engine's own cache buffers.
             sc = ServeConfig(max_batch=bsz, max_prompt=MAX_PROMPT,
-                             max_new_tokens=MAX_NEW)
+                             max_new_tokens=MAX_NEW, paged=False)
             prompts = _prompts(2 * bsz, MAX_PROMPT, cfg.vocab_size)
 
             eng = ServingEngine(cfg, params, sc)
@@ -121,6 +190,8 @@ def run():
             emit(f"serve/run_{tag}_b{bsz}", dt * 1e6,
                  f"requests={len(out)};gen_tokens={n_tok};"
                  f"tok_per_s={n_tok / dt:.1f}")
+
+        _paged_capacity(cfg, params)
 
 
 if __name__ == "__main__":

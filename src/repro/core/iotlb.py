@@ -62,13 +62,20 @@ class Iotlb:
 
     # -- host-side programming (CVA6 writing the 32 entries) ---------------
     def program(self, window: Window) -> None:
+        # programming errors append to `faults` BEFORE raising, like every
+        # access-path fault, so host-side fault accounting stays complete.
         if len(self._windows) >= self._max and window.name not in self._windows:
+            self.faults.append(
+                FaultRecord("capacity", window.virt_base, window.size, True))
             raise IotlbFault("capacity", f"more than {self._max} entries")
         for other in self._windows.values():
             if other.name == window.name:
                 continue
             if (window.virt_base < other.virt_end
                     and other.virt_base < window.virt_end):
+                self.faults.append(
+                    FaultRecord("overlap", window.virt_base, window.size,
+                                True))
                 raise IotlbFault(
                     "overlap", f"{window.name} overlaps {other.name}")
         self._windows[window.name] = window

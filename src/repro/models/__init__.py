@@ -1,6 +1,7 @@
 """Model zoo: layers + block program interpreter for the assigned archs."""
 from repro.models.config import ArchConfig  # noqa: F401
 from repro.models.model import (  # noqa: F401
-    abstract_cache, abstract_params, cache_specs, forward, init_cache,
-    init_params, param_count, param_specs,
+    abstract_cache, abstract_paged_cache, abstract_params, cache_specs,
+    forward, init_cache, init_paged_cache, init_params, param_count,
+    param_specs,
 )

@@ -31,7 +31,8 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import (current_mesh, lshard, make_spec,
                                         shard_map)
 from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, rms_norm, rope)
+                                 dense, paged_gather, paged_scatter, rms_norm,
+                                 rope)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -62,6 +63,19 @@ def kv_cache_spec(cfg, batch: int, capacity: int):
     return {
         "k": ParamSpec((batch, capacity, kv, dh), ax, init="zeros"),
         "v": ParamSpec((batch, capacity, kv, dh), ax, init="zeros"),
+    }
+
+
+def paged_kv_cache_spec(cfg, num_pages: int, page_size: int):
+    """Paged layout: one global (num_pages, page_size, KV, dh) pool per
+    layer shared by every slot; a per-slot page table (held by the serving
+    engine, passed to ``forward`` as ``pages``) maps logical cache rows to
+    pool pages.  Recurrent families keep their per-slot fixed-size state."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    ax = ("cache_seq", None, "kv_heads", None)
+    return {
+        "k": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
+        "v": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
     }
 
 
@@ -285,14 +299,22 @@ def cache_update(cache: dict, k_new, v_new, index) -> dict:
 
 
 def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
-                    mode: str, pos: jax.Array) -> Tuple[jax.Array, Optional[dict]]:
+                    mode: str, pos: jax.Array,
+                    pages: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer: QKV proj, RoPE, SDPA, out proj.
 
     mode: 'train' (no cache), 'prefill' (emit cache), 'decode' (use cache),
     'chunk' (single-pass chunked prefill into an existing slot'd cache).
     pos: scalar int32 — first position of ``x`` in the sequence; in 'chunk'
     mode a (B,) vector of valid prompt lengths (0 = inactive slot) for a
-    right-padded chunk whose tokens sit at positions [0, len).
+    right-padded chunk whose tokens sit at positions [0, len); in 'decode'
+    mode a (B,) vector of per-slot positions (-1 = inactive slot).
+    pages: optional (B, P) int32 page table (paged KV cache, serving): the
+    cache is then a (num_pages, page_size, KV, dh) pool and chunk/decode
+    writes scatter through the table; decode gathers the slot's logical
+    window back before attention (bit-identical math to the contiguous
+    layout — only the storage addressing changes).
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -336,12 +358,35 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         # after every valid token so they never leak into valid outputs,
         # and their own outputs are discarded by the caller.
         o = sdpa(q, k, v, kv_valid=jnp.int32(s))
-        new_cache = cache_fill(cache, k, v, pos)
+        if pages is not None:
+            t = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+            ok = chunk_valid_mask(chunk_lengths(pos, b), s)
+            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
+                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
+        else:
+            new_cache = cache_fill(cache, k, v, pos)
     elif mode == "decode":
         assert s == 1
-        new_cache = cache_update(cache, k, v, pos)
-        o = decode_sdpa(q, new_cache["k"], new_cache["v"],
-                        kv_valid=pos + 1)
+        if pages is not None:
+            pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+            t = pos_b[:, None]
+            new_cache = {
+                "k": paged_scatter(cache["k"], pages, k, t, t >= 0),
+                "v": paged_scatter(cache["v"], pages, v, t, t >= 0)}
+            # gather the slot-ordered logical window; rows past kv_valid
+            # (incl. any unmapped page's garbage) are masked inside.  The
+            # gathered window is local-only (no seq-sharded flash-decoding
+            # combine): the pool does not seq-shard the way the contiguous
+            # cache does — sharding the page pool is a ROADMAP follow-on.
+            o = _decode_attention_local(
+                q, paged_gather(new_cache["k"], pages),
+                paged_gather(new_cache["v"], pages),
+                jnp.int32(0), pos_b + 1, ())
+        else:
+            new_cache = cache_update(cache, k, v, pos)
+            o = decode_sdpa(q, new_cache["k"], new_cache["v"],
+                            kv_valid=pos + 1)
     else:
         raise ValueError(mode)
     o = lshard(o, "batch", "seq", "heads", None)

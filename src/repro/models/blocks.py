@@ -1,9 +1,14 @@
 """Residual blocks: the units the LM's block program composes.
 
 Every block has the same interface:
-  specs(cfg)                          -> ParamSpec tree
-  apply(p, x, cfg, cache, mode, pos)  -> (x', new_cache, aux_loss)
-  cache_spec(cfg, batch, capacity)    -> ParamSpec tree or None
+  specs(cfg)                                 -> ParamSpec tree
+  apply(p, x, cfg, cache, mode, pos, pages)  -> (x', new_cache, aux_loss)
+  cache_spec(cfg, batch, capacity)           -> ParamSpec tree or None
+  paged_cache_spec(cfg, num_pages, page_size)-> ParamSpec tree or None
+
+``pages`` is the serving engine's (B, P) page table when the KV cache is
+paged (attention families only); recurrent families keep fixed-size
+per-slot state and ignore it.
 """
 from __future__ import annotations
 
@@ -14,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
 from repro.models import mla, moe, ssm, xlstm
-from repro.models.attention import apply_attention, attn_specs, kv_cache_spec
+from repro.models.attention import (apply_attention, attn_specs,
+                                     kv_cache_spec, paged_kv_cache_spec)
 from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
                                  dense, layer_norm, rms_norm)
 
@@ -73,11 +79,11 @@ def _chunk_token_mask(x, mode, pos):
     return chunk_valid_mask(chunk_lengths(pos, b), s)
 
 
-def _apply_attn_block(p, x, cfg, cache, mode, pos, ffn: str):
+def _apply_attn_block(p, x, cfg, cache, mode, pos, pages, ffn: str):
     x = lshard(x, "batch", "seq", None)
     a, new_cache = apply_attention(
         p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
-        cache=cache, mode=mode, pos=pos)
+        cache=cache, mode=mode, pos=pos, pages=pages)
     x = x + a
     h = apply_norm(p["ln2"], x, cfg)
     if ffn == "moe":
@@ -96,11 +102,11 @@ def _mla_block_specs(cfg, ffn: str) -> dict:
     return s
 
 
-def _apply_mla_block(p, x, cfg, cache, mode, pos, ffn: str):
+def _apply_mla_block(p, x, cfg, cache, mode, pos, pages, ffn: str):
     x = lshard(x, "batch", "seq", None)
     a, new_cache = mla.apply_mla(
         p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
-        cache=cache, mode=mode, pos=pos)
+        cache=cache, mode=mode, pos=pos, pages=pages)
     x = x + a
     h = apply_norm(p["ln2"], x, cfg)
     if ffn == "moe":
@@ -116,53 +122,63 @@ def _mamba_block_specs(cfg) -> dict:
     return {"ln": norm_specs(cfg), "mamba": ssm.mamba_specs(cfg)}
 
 
-def _apply_mamba_block(p, x, cfg, cache, mode, pos):
+def _apply_mamba_block(p, x, cfg, cache, mode, pos, pages):
+    del pages    # recurrent state is per-slot fixed size: paging bypassed
     y, new_cache = ssm.apply_mamba(
         p["mamba"], apply_norm(p["ln"], x, cfg), cfg,
         cache=cache, mode=mode, pos=pos)
     return x + y, new_cache, jnp.float32(0)
 
 
-def _apply_mlstm_block(p, x, cfg, cache, mode, pos):
+def _apply_mlstm_block(p, x, cfg, cache, mode, pos, pages):
+    del pages    # recurrent state is per-slot fixed size: paging bypassed
     y, new_cache = xlstm.apply_mlstm(p, x, cfg, cache=cache, mode=mode,
                                      pos=pos)
     return y, new_cache, jnp.float32(0)
 
 
-def _apply_slstm_block(p, x, cfg, cache, mode, pos):
+def _apply_slstm_block(p, x, cfg, cache, mode, pos, pages):
+    del pages    # recurrent state is per-slot fixed size: paging bypassed
     y, new_cache = xlstm.apply_slstm(p, x, cfg, cache=cache, mode=mode,
                                      pos=pos)
     return y, new_cache, jnp.float32(0)
 
 
 class BlockDef:
-    def __init__(self, specs, apply, cache_spec=None):
+    def __init__(self, specs, apply, cache_spec=None, paged_cache_spec=None):
         self.specs = specs
         self.apply = apply
         self.cache_spec = cache_spec or (lambda cfg, b, cap: None)
+        # None = family has no pageable cache (recurrent / cache-free):
+        # the paged layout falls back to its regular cache_spec.
+        self.paged_cache_spec = paged_cache_spec
 
 
 BLOCKS = {
     "attn_mlp": BlockDef(
         lambda cfg: _attn_block_specs(cfg, "mlp"),
-        lambda p, x, cfg, cache, mode, pos: _apply_attn_block(
-            p, x, cfg, cache, mode, pos, "mlp"),
-        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap)),
+        lambda p, x, cfg, cache, mode, pos, pages: _apply_attn_block(
+            p, x, cfg, cache, mode, pos, pages, "mlp"),
+        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap),
+        paged_kv_cache_spec),
     "attn_moe": BlockDef(
         lambda cfg: _attn_block_specs(cfg, "moe"),
-        lambda p, x, cfg, cache, mode, pos: _apply_attn_block(
-            p, x, cfg, cache, mode, pos, "moe"),
-        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap)),
+        lambda p, x, cfg, cache, mode, pos, pages: _apply_attn_block(
+            p, x, cfg, cache, mode, pos, pages, "moe"),
+        lambda cfg, b, cap: kv_cache_spec(cfg, b, cap),
+        paged_kv_cache_spec),
     "mla_mlp": BlockDef(
         lambda cfg: _mla_block_specs(cfg, "mlp"),
-        lambda p, x, cfg, cache, mode, pos: _apply_mla_block(
-            p, x, cfg, cache, mode, pos, "mlp"),
-        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap)),
+        lambda p, x, cfg, cache, mode, pos, pages: _apply_mla_block(
+            p, x, cfg, cache, mode, pos, pages, "mlp"),
+        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap),
+        mla.paged_mla_cache_spec),
     "mla_moe": BlockDef(
         lambda cfg: _mla_block_specs(cfg, "moe"),
-        lambda p, x, cfg, cache, mode, pos: _apply_mla_block(
-            p, x, cfg, cache, mode, pos, "moe"),
-        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap)),
+        lambda p, x, cfg, cache, mode, pos, pages: _apply_mla_block(
+            p, x, cfg, cache, mode, pos, pages, "moe"),
+        lambda cfg, b, cap: mla.mla_cache_spec(cfg, b, cap),
+        mla.paged_mla_cache_spec),
     "mamba": BlockDef(
         _mamba_block_specs, _apply_mamba_block,
         lambda cfg, b, cap: ssm.mamba_cache_spec(cfg, b)),

@@ -147,6 +147,47 @@ def chunk_valid_mask(len_b: jax.Array, seq: int) -> jax.Array:
     return jnp.arange(seq, dtype=jnp.int32)[None, :] < len_b[:, None]
 
 
+def paged_gather(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """Gather a slot's logical cache window out of a paged row pool.
+
+    ``pool``: (num_pages, page_size, *rest) physical pages shared by every
+    slot; ``pages``: (B, P) int32 per-slot page table (-1 = unmapped).
+    Returns (B, P*page_size, *rest) rows in logical order — row ``t`` of
+    slot ``b`` lives at physical row ``pages[b, t // page_size] * page_size
+    + t % page_size``.  Rows under unmapped entries are garbage (the index
+    clamps) and MUST be masked by the caller's validity predicate
+    (``kv_valid`` / ``kpos <= pos``), exactly as rows past the fill level
+    already are in the contiguous layout.
+    """
+    n, ps = pool.shape[:2]
+    flat = pool.reshape((n * ps,) + pool.shape[2:])
+    idx = jnp.maximum(pages, 0)[:, :, None] * ps + \
+        jnp.arange(ps, dtype=jnp.int32)[None, None, :]
+    return flat[idx.reshape(pages.shape[0], -1)]
+
+
+def paged_scatter(pool: jax.Array, pages: jax.Array, rows: jax.Array,
+                  t: jax.Array, valid: jax.Array) -> jax.Array:
+    """Scatter per-slot rows into a paged pool at logical positions.
+
+    ``pool``: (num_pages, page_size, *rest); ``pages``: (B, P) page table;
+    ``rows``: (B, S, *rest) values; ``t``: (B, S) int32 logical positions;
+    ``valid``: (B, S) bool.  Writes that are invalid, out of the slot's
+    logical window, or land on an unmapped (-1) page-table entry are
+    DROPPED — the software analogue of the IOTLB sinking an out-of-window
+    AXI write — so an inactive or padded slot never touches the pool.
+    """
+    n, ps = pool.shape[:2]
+    p = pages.shape[1]
+    flat = pool.reshape((n * ps,) + pool.shape[2:])
+    page = jnp.take_along_axis(pages, jnp.clip(t // ps, 0, p - 1), axis=1)
+    ok = valid & (page >= 0) & (t >= 0) & (t < p * ps)
+    dest = jnp.where(ok, page * ps + t % ps, n * ps)    # out of bounds = drop
+    flat = flat.at[dest.reshape(-1)].set(
+        rows.astype(pool.dtype).reshape((-1,) + rows.shape[2:]), mode="drop")
+    return flat.reshape(pool.shape)
+
+
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     h = x.astype(jnp.float32)
     h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)

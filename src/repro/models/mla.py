@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.distributed.sharding import lshard
 from repro.models.attention import sdpa
 from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, rms_norm, rope)
+                                 dense, paged_gather, paged_scatter, rms_norm,
+                                 rope)
 
 
 def mla_dims(cfg):
@@ -48,6 +49,17 @@ def mla_cache_spec(cfg, batch: int, capacity: int):
     }
 
 
+def paged_mla_cache_spec(cfg, num_pages: int, page_size: int):
+    """Paged layout for the compressed cache: a (num_pages, page_size,
+    r+dr) pool per layer, addressed through the engine's per-slot page
+    table (see attention.paged_kv_cache_spec)."""
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return {
+        "ckv": ParamSpec((num_pages, page_size, r + dr),
+                         ("cache_seq", None, None), init="zeros"),
+    }
+
+
 def _compress(p, x, cfg):
     """x -> (c_kv normalized (B,S,r), k_rope roped (B,S,dr))."""
     r = cfg.kv_lora_rank
@@ -57,7 +69,9 @@ def _compress(p, x, cfg):
 
 
 def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
-              mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+              mode: str, pos,
+              pages: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h = cfg.n_heads
     r = cfg.kv_lora_rank
@@ -101,26 +115,41 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             # masked chunk write into rows [0, len) of each slot's
             # compressed cache; len == 0 slots keep their region untouched.
             entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
-            buf = cache["ckv"]
-            cap = buf.shape[1]
-            mask = chunk_valid_mask(chunk_lengths(pos, b), cap)[:, :, None]
-            entry = jnp.pad(entry.astype(buf.dtype),
-                            ((0, 0), (0, cap - s), (0, 0)))
-            buf = jnp.where(mask, entry, buf)
-            new_cache = {"ckv": lshard(buf, "cache_batch", "cache_seq", None)}
+            if pages is not None:
+                t = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+                ok = chunk_valid_mask(chunk_lengths(pos, b), s)
+                new_cache = {"ckv": paged_scatter(cache["ckv"], pages,
+                                                  entry, t, ok)}
+            else:
+                buf = cache["ckv"]
+                cap = buf.shape[1]
+                mask = chunk_valid_mask(chunk_lengths(pos, b), cap)[:, :, None]
+                entry = jnp.pad(entry.astype(buf.dtype),
+                                ((0, 0), (0, cap - s), (0, 0)))
+                buf = jnp.where(mask, entry, buf)
+                new_cache = {"ckv": lshard(buf, "cache_batch", "cache_seq",
+                                           None)}
     elif mode == "decode":
         assert s == 1
         entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
-        buf = cache["ckv"]
         # per-slot write at `pos` (negative = inactive slot, no write).
         pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
-        inb = (pos_b >= 0) & (pos_b < buf.shape[1])
-        idx = jnp.clip(pos_b, 0, buf.shape[1] - 1)
-        rows = jnp.take_along_axis(buf, idx[:, None, None], axis=1)
-        new = jnp.where(inb[:, None, None], entry.astype(buf.dtype), rows)
-        buf = buf.at[jnp.arange(b), idx].set(new[:, 0])
-        buf = lshard(buf, "cache_batch", "cache_seq", None)
-        new_cache = {"ckv": buf}
+        if pages is not None:
+            pool = paged_scatter(cache["ckv"], pages, entry,
+                                 pos_b[:, None], (pos_b >= 0)[:, None])
+            new_cache = {"ckv": pool}
+            # slot-ordered logical window; rows past `pos` are masked below.
+            buf = paged_gather(pool, pages)
+        else:
+            buf = cache["ckv"]
+            inb = (pos_b >= 0) & (pos_b < buf.shape[1])
+            idx = jnp.clip(pos_b, 0, buf.shape[1] - 1)
+            rows = jnp.take_along_axis(buf, idx[:, None, None], axis=1)
+            new = jnp.where(inb[:, None, None], entry.astype(buf.dtype), rows)
+            buf = buf.at[jnp.arange(b), idx].set(new[:, 0])
+            buf = lshard(buf, "cache_batch", "cache_seq", None)
+            new_cache = {"ckv": buf}
         c_all, kr_all = buf[..., :r], buf[..., r:]
         # absorbed queries: q_c = q_nope @ W_UK^T per head -> (B,1,H,r)
         w_uk = p["w_uk"].reshape(r, h, dn)

@@ -14,6 +14,18 @@ xs/ys.  One forward covers the four lowered entry points:
                     for a right-padded chunk; slots with length 0 keep
                     their cache/recurrent state bit-for-bit (batched
                     admission never perturbs in-flight requests)
+
+Cache layouts (serving): the contiguous layout gives every slot a private
+(B, capacity, ...) region; the PAGED layout (``init_paged_cache``) replaces
+it with a global (num_pages, page_size, ...) pool per attention/MLA layer
+plus a per-slot page table ``pages`` (B, P) passed to ``forward`` — logical
+cache row ``t`` of slot ``b`` lives at physical row ``pages[b, t //
+page_size] * page_size + t % page_size``.  The table is shared by every
+layer (each layer owns its own pool array), chunk/decode writes scatter
+through it, and decode gathers the slot's logical window back before
+attention, so paging changes storage addressing only — the math (and its
+outputs) is bit-identical to the contiguous layout.  Recurrent families
+(SSM/xLSTM) keep fixed-size per-slot state and bypass paging.
 """
 from __future__ import annotations
 
@@ -74,18 +86,28 @@ def param_specs(cfg: ArchConfig) -> dict:
     return specs
 
 
-def cache_specs(cfg: ArchConfig, batch: int, capacity: int) -> list:
+def cache_specs(cfg: ArchConfig, batch: int, capacity: int, *,
+                num_pages: Optional[int] = None,
+                page_size: Optional[int] = None) -> list:
+    """Cache ParamSpec tree; pass ``num_pages``/``page_size`` for the paged
+    layout (pageable families get a pool, the rest keep per-slot state)."""
+    def spec_for(kind):
+        block = BLOCKS[kind]
+        if num_pages is not None and block.paged_cache_spec is not None:
+            return block.paged_cache_spec(cfg, num_pages, page_size)
+        return block.cache_spec(cfg, batch, capacity)
+
     stages = []
     for entry in cfg.pattern:
         if entry[0] == "scan":
             _, kind, count = entry
-            cs = BLOCKS[kind].cache_spec(cfg, batch, capacity)
+            cs = spec_for(kind)
             stages.append(None if cs is None else stack_specs(cs, count))
         else:
             _, group, repeats = entry
             st = {}
             for j, kind in enumerate(_linear_inner(group)):
-                cs = BLOCKS[kind].cache_spec(cfg, batch, capacity)
+                cs = spec_for(kind)
                 if cs is not None:
                     st[f"b{j}"] = stack_specs(cs, repeats)
             stages.append(st)
@@ -107,7 +129,7 @@ def _remat(fn, cfg, mode):
 
 
 def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
-                      shared):
+                      pages, shared):
     block = BLOCKS[kind]
     if kind == "shared_attn":
         stage_p = None   # body uses `shared`
@@ -117,7 +139,7 @@ def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
         p_i, c_i = xs
         if kind == "shared_attn":
             p_i = shared
-        h, c_new, a = block.apply(p_i, h, cfg, c_i, mode, pos)
+        h, c_new, a = block.apply(p_i, h, cfg, c_i, mode, pos, pages)
         return (h, aux + a), c_new
 
     (x, aux), c_out = jax.lax.scan(
@@ -126,7 +148,8 @@ def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
     return x, c_out, aux
 
 
-def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, shared):
+def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, pages,
+                       shared):
     kinds = _linear_inner(group)
 
     def body(carry, xs):
@@ -136,7 +159,8 @@ def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, shared):
         for j, kind in enumerate(kinds):
             p_j = shared if kind == "shared_attn" else p_map[f"b{j}"]
             c_j = None if c_map is None else c_map.get(f"b{j}")
-            h, c_new, a = BLOCKS[kind].apply(p_j, h, cfg, c_j, mode, pos)
+            h, c_new, a = BLOCKS[kind].apply(p_j, h, cfg, c_j, mode, pos,
+                                             pages)
             aux = aux + a
             if c_new is not None:
                 new_c[f"b{j}"] = c_new
@@ -149,9 +173,15 @@ def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, shared):
 
 def forward(params: dict, inputs: jax.Array, cfg: ArchConfig, *,
             cache: Optional[list] = None, mode: str = "train",
-            pos: Any = 0) -> Tuple[jax.Array, Optional[list], jax.Array]:
-    """Returns (logits (B, S, padded_vocab), new_cache, aux_loss)."""
+            pos: Any = 0, pages: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[list], jax.Array]:
+    """Returns (logits (B, S, padded_vocab), new_cache, aux_loss).
+
+    ``pages``: optional (B, P) int32 per-slot page table when ``cache``
+    uses the paged layout (see module docstring); None = contiguous."""
     pos = jnp.asarray(pos, jnp.int32)
+    if pages is not None:
+        pages = jnp.asarray(pages, jnp.int32)
     if cfg.input_mode == "tokens":
         x = embed_lookup(params["embed"], inputs)
     else:
@@ -167,10 +197,10 @@ def forward(params: dict, inputs: jax.Array, cfg: ArchConfig, *,
         if entry[0] == "scan":
             x, c2, aux = _apply_scan_stage(
                 entry[1], entry[2], stage_p, x, cfg, stage_c, mode, pos,
-                shared)
+                pages, shared)
         else:
             x, c2, aux = _apply_group_stage(
-                entry[1], stage_p, x, cfg, stage_c, mode, pos, shared)
+                entry[1], stage_p, x, cfg, stage_c, mode, pos, pages, shared)
         new_cache.append(c2)
         aux_total = aux_total + aux
 
@@ -201,6 +231,22 @@ def init_cache(cfg: ArchConfig, batch: int, prompt_len: int):
 def abstract_cache(cfg: ArchConfig, batch: int, prompt_len: int):
     cap = cache_capacity(cfg, prompt_len)
     return common.abstract(cache_specs(cfg, batch, cap), cfg.dtype)
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
+                     page_size: int):
+    """Paged serving cache: per-layer (num_pages, page_size, ...) pools for
+    attention/MLA, per-slot fixed-size state for recurrent families."""
+    specs = cache_specs(cfg, batch, 0, num_pages=num_pages,
+                        page_size=page_size)
+    return common.materialize(specs, jax.random.PRNGKey(0), cfg.dtype)
+
+
+def abstract_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
+                         page_size: int):
+    return common.abstract(
+        cache_specs(cfg, batch, 0, num_pages=num_pages,
+                    page_size=page_size), cfg.dtype)
 
 
 def param_count(cfg: ArchConfig) -> int:

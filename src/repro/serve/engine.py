@@ -1,4 +1,4 @@
-"""Batched serving engine: chunked prefill + continuous-batching-lite decode.
+"""Batched serving engine: chunked prefill + paged-KV continuous batching.
 
 The engine owns a fixed pool of ``max_batch`` cache slots.  Admission is a
 **single-pass chunked prefill**: every pending request that fits a free slot
@@ -15,18 +15,41 @@ admission never perturbs in-flight requests mid-decode.
 Steady state is unchanged: one jitted decode step advances every active
 slot per tick; finished slots (EOS or max tokens) are released and refilled
 by the next admission wave.  ``run`` returns completed requests in
-completion order.
+completion order.  All per-tick staging (active mask, positions, token
+buffers) is built host-side in numpy and shipped in one transfer — never
+one ``.at[i].set`` dispatch per slot.
+
+Paged KV cache (default, ``ServeConfig.paged``): instead of every slot
+statically owning a contiguous ``max_prompt + max_new_tokens`` cache
+window, attention/MLA layers share a global page pool of ``num_pages``
+pages x ``page_size`` rows, and each slot holds a page table of
+``pages_per_slot = ceil((max_prompt + max_new_tokens) / page_size)``
+entries (-1 = unmapped).  Logical cache row ``t`` of slot ``b`` lives at
+physical row ``page_table[b, t // page_size] * page_size + t % page_size``;
+the same table drives every layer.  Pages are CLAIMED at admission for the
+prompt plus the first decode row, GROWN on demand as decode crosses each
+page boundary, and FREED when the request completes — so short requests
+stop hoarding the long-request budget and the same pool admits strictly
+more concurrent requests than the contiguous layout (see
+benchmarks/serve_throughput.py).  By default admission also RESERVES (in
+accounting only) each request's worst-case growth so the pool can never
+exhaust mid-decode; ``reserve_decode_pages=False`` overcommits instead,
+and a growth that finds the pool empty becomes a capacity fault.
+Recurrent families (SSM/xLSTM) keep fixed-size per-slot state and bypass
+paging.
 
 Two Shaheen touches:
   * weights can be served PACKED sub-byte (quantize_for_serving) — decode
     is weight-bandwidth-bound, exactly where the paper's formats pay;
-  * the slot table is guarded by the software IOTLB (core/iotlb): every
-    admission checks the FULL region the request will ever write (prompt
-    chunk + decode tail) against the slot's programmed window, so an
-    oversized prompt faults before any cache write.  In strict mode the
-    fault raises (host interrupt); in non-strict mode it is recorded and
-    the request is rejected — graceful fault containment, §III-C2 — and a
-    neighboring slot's cache is never touched either way.
+  * the slot table is guarded by the software IOTLB (core/iotlb),
+    reprogrammed at PAGE granularity in paged mode: each slot's windows
+    map exactly its allocated pages, so an out-of-budget access faults at
+    the page boundary instead of somewhere inside a whole-slot window,
+    and ``admit_many`` checks prompt-page + first-decode-page coverage
+    before any cache mutation.  In strict mode a fault raises (host
+    interrupt); in non-strict mode it is recorded and the request is
+    rejected — graceful fault containment, §III-C2 — and a neighboring
+    slot's pages are never touched either way.
 """
 from __future__ import annotations
 
@@ -35,11 +58,14 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.iotlb import Iotlb, IotlbFault, Window
-from repro.models import init_cache
+from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
+from repro.models import init_cache, init_paged_cache
 from repro.models.config import ArchConfig
-from repro.train.step import make_chunked_prefill_step, make_decode_step
+from repro.train.step import (make_chunked_prefill_step, make_decode_step,
+                              make_paged_chunked_prefill_step,
+                              make_paged_decode_step)
 
 
 @dataclasses.dataclass
@@ -51,6 +77,18 @@ class ServeConfig:
     eos_id: int = -1                # -1 = never
     seed: int = 0
     strict_iotlb: bool = True       # False: record fault, reject admission
+    paged: bool = True              # page the KV cache (attention families)
+    page_size: int = 16             # cache rows per page
+    num_pages: Optional[int] = None  # pool pages; None = one full window
+    #                                  per slot (contiguous-equivalent)
+    reserve_decode_pages: bool = True
+    # True: admission ACCOUNTS for every in-flight request's worst-case
+    #   decode growth (pages still materialize lazily at page boundaries,
+    #   and early EOS releases the whole reservation), so the pool can
+    #   never exhaust mid-decode and every admitted request completes.
+    # False: overcommit — admission claims only prompt + first-decode
+    #   pages and growth races the pool; exhaustion mid-decode is a
+    #   capacity fault that terminates the request (strict mode raises).
 
 
 @dataclasses.dataclass
@@ -61,29 +99,112 @@ class Request:
     done: bool = False
     failed: bool = False            # rejected by IOTLB containment
 
+_DEFER = "defer"                    # admission verdict: retry after frees
+
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
+        bsz = serve_cfg.max_batch
         cap_prompt = serve_cfg.max_prompt + serve_cfg.max_new_tokens
-        self.cache = init_cache(cfg, serve_cfg.max_batch, cap_prompt)
-        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
-        self._prefill = jax.jit(make_chunked_prefill_step(cfg),
-                                donate_argnums=1)
-        self.slots: List[Optional[Request]] = [None] * serve_cfg.max_batch
-        self.positions = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
-        self.last_token = jnp.zeros((serve_cfg.max_batch,), jnp.int32)
+        if serve_cfg.paged:
+            ps = serve_cfg.page_size
+            self.pages_per_slot = -(-cap_prompt // ps)
+            self._slot_span = self.pages_per_slot * ps
+            self.num_pages = (serve_cfg.num_pages
+                              if serve_cfg.num_pages is not None
+                              else bsz * self.pages_per_slot)
+            self.cache = init_paged_cache(cfg, bsz, self.num_pages, ps)
+            self._decode = jax.jit(make_paged_decode_step(cfg),
+                                   donate_argnums=1)
+            self._prefill = jax.jit(make_paged_chunked_prefill_step(cfg),
+                                    donate_argnums=1)
+            # page allocator: free physical pages + per-slot page tables.
+            self.page_table = np.full((bsz, self.pages_per_slot), -1,
+                                      np.int32)
+            self._free_pages: List[int] = list(range(self.num_pages))
+            # per-slot worst-case pages still to be grown (reservation
+            # accounting; stays 0 when reserve_decode_pages is off).
+            self._growth_due = np.zeros((bsz,), np.int32)
+            # page-granular IOTLB: one window per MAPPED page, programmed
+            # at allocation and evicted at release, so the guarded region
+            # is exactly the slot's allocated pages.  Deliberate deviation
+            # from the silicon block: entry capacity is sized to the page
+            # pool rather than Shaheen's 32 entries — a >32-page pool
+            # would need an entry-eviction/refill policy to stay
+            # hardware-faithful (ROADMAP follow-on).
+            self.iotlb = Iotlb(max_entries=self.num_pages)
+        else:
+            self.cache = init_cache(cfg, bsz, cap_prompt)
+            self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
+            self._prefill = jax.jit(make_chunked_prefill_step(cfg),
+                                    donate_argnums=1)
+            self._slot_span = cap_prompt
+            # whole-slot windows (one per slot), mapped once.
+            self.iotlb = Iotlb()
+            for i in range(bsz):
+                self.iotlb.program(Window(
+                    name=f"slot{i}", virt_base=i * cap_prompt,
+                    size=cap_prompt, phys_base=i * cap_prompt,
+                    readable=True, writable=True))
+        self.slots: List[Optional[Request]] = [None] * bsz
+        self.positions = np.zeros((bsz,), np.int32)
+        self.last_token = np.zeros((bsz,), np.int32)
         self.key = jax.random.PRNGKey(serve_cfg.seed)
         self.completed: List[Request] = []
-        # software IOTLB guarding the slot table (one window per slot).
-        self.iotlb = Iotlb()
-        for i in range(serve_cfg.max_batch):
-            self.iotlb.program(Window(
-                name=f"slot{i}", virt_base=i * cap_prompt, size=cap_prompt,
-                phys_base=i * cap_prompt, readable=True, writable=True))
-        self._slot_span = cap_prompt
+        self.peak_active = 0        # high-water concurrency (benchmarks)
+
+    # -- page allocator -----------------------------------------------------
+    def _alloc_page(self, slot: int, j: int) -> bool:
+        """Map logical page ``j`` of ``slot`` to a free physical page and
+        program the matching IOTLB window.  False = pool exhausted."""
+        if not self._free_pages:
+            return False
+        phys = self._free_pages.pop(0)
+        self.page_table[slot, j] = phys
+        ps = self.sc.page_size
+        self.iotlb.program(Window(
+            name=f"slot{slot}p{j}",
+            virt_base=slot * self._slot_span + j * ps, size=ps,
+            phys_base=phys * ps, readable=True, writable=True))
+        return True
+
+    def _release_pages(self, slot: int) -> None:
+        """Return a slot's pages (and any unrealized reservation) to the
+        pool and evict their windows."""
+        for j, phys in enumerate(self.page_table[slot]):
+            if phys >= 0:
+                self.iotlb.evict(f"slot{slot}p{j}")
+                self._free_pages.append(int(phys))
+        self.page_table[slot] = -1
+        self._growth_due[slot] = 0
+
+    def _max_pages(self, req: Request) -> int:
+        """Pages covering every cache row the request could ever write:
+        prompt rows [0, len) plus decode writes up to row
+        len + max_new_tokens - 2 (the last sampled token is never cached)."""
+        last_row = len(req.prompt) - 1
+        if self.sc.max_new_tokens >= 2:
+            last_row = len(req.prompt) + self.sc.max_new_tokens - 2
+        return last_row // self.sc.page_size + 1
+
+    def _claim_count(self, req: Request) -> int:
+        """Pages claimed at admission: the prompt's rows, plus the first
+        decode write row (row len(prompt)) — the latter only when a decode
+        tick will actually happen (max_new_tokens >= 2; the prefill's own
+        sampled token is never cached)."""
+        last_row = len(req.prompt) - 1
+        if self.sc.max_new_tokens >= 2:
+            last_row = len(req.prompt)
+        return last_row // self.sc.page_size + 1
+
+    def _pages_dev(self) -> jax.Array:
+        return jnp.asarray(self.page_table)
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free_pages)
 
     # -- admission ----------------------------------------------------------
     def _free_slots(self) -> List[int]:
@@ -95,71 +216,131 @@ class ServingEngine:
             req.done = True
             self.completed.append(req)
 
-    def _admissible(self, slot: int, req: Request) -> bool:
-        """IOTLB check covering the request's full cache write: the prompt
-        chunk plus the decode tail.  A faulting request is always marked
-        failed and appended to ``completed`` (so its client gets a signal)
-        BEFORE the strict raise; non-strict just records + rejects.  Either
-        way no cache region is written."""
+    def _fault_reject(self, req: Request, kind: str, start: int,
+                      length: int) -> None:
+        """Record the fault, reject the request, and raise when strict —
+        the request always gets a terminal signal BEFORE the raise."""
+        self.iotlb.faults.append(FaultRecord(kind, start, length, True))
+        self._reject(req)
+        if self.sc.strict_iotlb:
+            raise IotlbFault(kind, f"request {req.rid}: range "
+                             f"[{start}, {start + length}) write=True")
+
+    def _admissible(self, slot: int, req: Request):
+        """Vet a request for ``slot``: True (admit), False (rejected), or
+        _DEFER (transient page exhaustion — retry after completions free
+        pages).  No cache region is written either way."""
         if not req.prompt:
             # an empty prompt has nothing to prefill (and length 0 is the
             # chunk pass's inactive-slot sentinel): reject cleanly.
             self._reject(req)
             return False
         span = len(req.prompt) + self.sc.max_new_tokens
-        ok = self.iotlb.translate(slot * self._slot_span, span, write=True,
-                                  strict=False)
-        if ok is None:
-            self._reject(req)
-            if self.sc.strict_iotlb:
-                f = self.iotlb.faults[-1]
-                raise IotlbFault(f.kind, f"request {req.rid}: range "
-                                 f"[{f.start}, {f.start + f.length}) "
-                                 f"write={f.write}")
+        if not self.sc.paged:
+            ok = self.iotlb.translate(slot * self._slot_span, span,
+                                      write=True, strict=False)
+            if ok is None:
+                self._reject(req)
+                if self.sc.strict_iotlb:
+                    f = self.iotlb.faults[-1]
+                    raise IotlbFault(f.kind, f"request {req.rid}: range "
+                                     f"[{f.start}, {f.start + f.length}) "
+                                     f"write={f.write}")
+                return False
+            return True
+        # paged: the request's full logical extent must fit the slot's
+        # page-table window AND the prompt must fit the prefill chunk.
+        base = slot * self._slot_span
+        if span > self._slot_span or len(req.prompt) > self.sc.max_prompt:
+            self._fault_reject(req, "miss", base, span)
             return False
+        needed = self._claim_count(req)
+        demand = (self._max_pages(req) if self.sc.reserve_decode_pages
+                  else needed)
+        if demand > self.num_pages:
+            # can never fit, even with the whole pool free.
+            self._fault_reject(req, "capacity", base,
+                               demand * self.sc.page_size)
+            return False
+        if demand + int(self._growth_due.sum()) > len(self._free_pages):
+            return _DEFER           # pages will come back on completion
         return True
+
+    def _claim_pages(self, slot: int, req: Request) -> None:
+        """Claim the prompt's pages plus the first decode page, then check
+        coverage through the IOTLB page windows BEFORE any cache write."""
+        ps = self.sc.page_size
+        needed = self._claim_count(req)
+        for j in range(needed):
+            claimed = self._alloc_page(slot, j)
+            assert claimed, "free-page count was vetted in _admissible"
+        if self.sc.reserve_decode_pages:
+            self._growth_due[slot] = self._max_pages(req) - needed
+        for j in range(needed):
+            v = slot * self._slot_span + j * ps
+            if self.iotlb.translate(v, ps, write=True, strict=False) is None:
+                raise IotlbFault(     # pragma: no cover - defensive
+                    "miss", f"request {req.rid}: page {j} not covered")
 
     def admit_many(self, pending: List[Request]) -> int:
         """Admit as many pending requests as there are free slots, in ONE
         chunked-prefill dispatch.  Pops admitted (and rejected) requests
-        off ``pending``; returns the number admitted."""
+        off ``pending``; returns the number admitted.  A request that only
+        fails on TRANSIENT page exhaustion stays at the head of ``pending``
+        and the wave stops — it retries once completions free pages."""
         placed: List[tuple] = []        # (slot, request) vetted this wave
         try:
             for slot in self._free_slots():
-                while pending:
+                got = None
+                while pending and got is None:
                     req = pending.pop(0)
                     if req.done:        # already rejected/finished earlier
                         continue
-                    if self._admissible(slot, req):
-                        placed.append((slot, req))
+                    verdict = self._admissible(slot, req)
+                    if verdict is _DEFER:
+                        pending.insert(0, req)
                         break
-                else:
-                    break
+                    if verdict:
+                        got = req
+                if got is None:
+                    break               # out of requests, or deferred
+                if self.sc.paged:
+                    self._claim_pages(slot, got)
+                placed.append((slot, got))
         except IotlbFault:
             # strict fault mid-wave: no slot was mutated yet (the faulting
             # request is already marked failed + completed) — put the
-            # already-vetted requests back so a caller that catches the
-            # fault loses neither requests nor engine consistency.
-            for _, req in reversed(placed):
+            # already-vetted requests back (and release any pages they
+            # claimed) so a caller that catches the fault loses neither
+            # requests nor engine consistency.
+            for slot, req in reversed(placed):
+                if self.sc.paged:
+                    self._release_pages(slot)
                 pending.insert(0, req)
             raise
         if not placed:
             return 0
         bsz, sp = self.sc.max_batch, self.sc.max_prompt
-        toks = jnp.zeros((bsz, sp), jnp.int32)
-        lens = jnp.zeros((bsz,), jnp.int32)
+        toks_np = np.zeros((bsz, sp), np.int32)
+        lens_np = np.zeros((bsz,), np.int32)
         for slot, req in placed:
             self.slots[slot] = req
-            p = req.prompt
-            toks = toks.at[slot, :len(p)].set(jnp.asarray(p, jnp.int32))
-            lens = lens.at[slot].set(len(p))
-        logits, self.cache = self._prefill(self.params, self.cache, toks,
-                                           lens)
-        firsts = self._sample(logits)
+            toks_np[slot, :len(req.prompt)] = req.prompt
+            lens_np[slot] = len(req.prompt)
+        self.peak_active = max(
+            self.peak_active, sum(s is not None for s in self.slots))
+        toks, lens = jnp.asarray(toks_np), jnp.asarray(lens_np)
+        if self.sc.paged:
+            logits, self.cache = self._prefill(self.params, self.cache,
+                                               toks, lens, self._pages_dev())
+        else:
+            logits, self.cache = self._prefill(self.params, self.cache,
+                                               toks, lens)
+        firsts = np.asarray(self._sample(logits))
         for slot, req in placed:
             first = int(firsts[slot])
-            self.positions = self.positions.at[slot].set(len(req.prompt))
-            self.last_token = self.last_token.at[slot].set(first)
+            self.positions[slot] = len(req.prompt)
+            self.last_token[slot] = first
             req.out_tokens.append(first)    # the post-prompt prediction
             if first == self.sc.eos_id or \
                     len(req.out_tokens) >= self.sc.max_new_tokens:
@@ -185,24 +366,67 @@ class ServingEngine:
         req = self.slots[slot]
         req.done = True
         self.completed.append(req)
-        self.slots[slot] = None     # release slot (window stays mapped)
+        self.slots[slot] = None     # release slot
+        if self.sc.paged:
+            self._release_pages(slot)   # pages return to the shared pool
 
     # -- steady-state decode tick -------------------------------------------
+    def _grow_pages(self, active: List[int]) -> None:
+        """Map the page covering each active slot's next write row (decode
+        crosses a page boundary every ``page_size`` ticks).  Exhaustion
+        mid-decode — reachable only when ``reserve_decode_pages`` is off
+        (overcommit) — is a capacity fault: the request is terminated with
+        its partial output (``failed=True``), and strict mode raises."""
+        ps = self.sc.page_size
+        for i in active:
+            wr = int(self.positions[i])     # this tick's cache write row
+            j = wr // ps
+            if self.page_table[i, j] < 0 and self._alloc_page(i, j):
+                # a reserved page materialized: shrink the reservation.
+                self._growth_due[i] = max(0, int(self._growth_due[i]) - 1)
+            elif self.page_table[i, j] < 0:
+                self.iotlb.faults.append(FaultRecord(
+                    "capacity", i * self._slot_span + wr, 1, True))
+                req = self.slots[i]
+                req.failed = True
+                self._finish(i)
+                if self.sc.strict_iotlb:
+                    raise IotlbFault(
+                        "capacity", f"request {req.rid}: page pool "
+                        f"exhausted growing row {wr}")
+                continue
+            # page-granular write check for this tick's row: a row past
+            # the slot's mapped pages faults AT THE PAGE BOUNDARY here
+            # rather than silently landing inside a whole-slot window.
+            self.iotlb.translate(i * self._slot_span + wr, 1, write=True,
+                                 strict=self.sc.strict_iotlb)
+
     def step(self):
         """One decode tick for all active slots (per-slot positions)."""
+        if self.sc.paged:
+            self._grow_pages(
+                [i for i, s in enumerate(self.slots) if s is not None])
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return
-        toks = self.last_token[:, None]
-        mask = jnp.zeros((self.sc.max_batch,), bool)
-        for i in active:
-            mask = mask.at[i].set(True)
-        pos_v = jnp.where(mask, self.positions, -1).astype(jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, toks,
-                                          pos_v)
-        nxt = self._sample(logits)
-        self.last_token = jnp.where(mask, nxt, self.last_token)
-        self.positions = jnp.where(mask, self.positions + 1, self.positions)
+        # host-side staging: ONE mask/position build + one transfer per
+        # tick, not one .at[i].set dispatch per active slot.
+        mask_np = np.zeros((self.sc.max_batch,), bool)
+        mask_np[active] = True
+        toks = jnp.asarray(self.last_token[:, None])
+        pos_v = jnp.asarray(np.where(mask_np, self.positions, -1)
+                            .astype(np.int32))
+        if self.sc.paged:
+            logits, self.cache = self._decode(self.params, self.cache, toks,
+                                              pos_v, self._pages_dev())
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, toks,
+                                              pos_v)
+        nxt = np.asarray(self._sample(logits))
+        self.last_token = np.where(mask_np, nxt,
+                                   self.last_token).astype(np.int32)
+        self.positions = np.where(mask_np, self.positions + 1,
+                                  self.positions).astype(np.int32)
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])

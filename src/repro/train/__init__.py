@@ -2,5 +2,7 @@
 from repro.train.optim import AdamWConfig, OptState, adamw_update, init_opt_state  # noqa: F401
 from repro.train.step import (  # noqa: F401
     StepOptions, TrainState, abstract_train_state, init_train_state,
-    lm_loss, make_decode_step, make_prefill_step, make_train_step,
+    lm_loss, make_chunked_prefill_step, make_decode_step,
+    make_paged_chunked_prefill_step, make_paged_decode_step,
+    make_prefill_step, make_train_step,
 )

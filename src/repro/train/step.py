@@ -81,23 +81,30 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
             (loss, aux), grads = grad_fn(params, batch, cfg)
             return loss, aux, grads
 
-        def micro(carry, mb):
-            acc, _ = carry
+        def micro(acc, mb):
             (loss, aux), g = grad_fn(params, mb, cfg)
             acc = jax.tree.map(
                 lambda a, x: a + x.astype(jnp.float32), acc, g)
-            return (acc, loss), (loss, aux)
+            return acc, (loss, aux)
 
         split = lambda x: x.reshape(
             opts.microbatches, x.shape[0] // opts.microbatches, *x.shape[1:])
         mbs = jax.tree.map(split, batch)
         zero = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (gacc, loss), (_, auxs) = jax.lax.scan(
-            micro, (zero, jnp.float32(0)), mbs)
+        gacc, (losses, auxs) = jax.lax.scan(micro, zero, mbs)
         grads = jax.tree.map(lambda g: g / opts.microbatches, gacc)
-        aux = jax.tree.map(lambda a: a[-1], auxs)
-        return loss, aux, grads
+        # metrics cover EVERY microbatch (not just the last one scanned):
+        # `loss` averages the per-microbatch losses — exactly the objective
+        # the accumulated gradient optimizes — `xent` is token-weighted so
+        # it equals the whole-batch cross entropy, `tokens` sums, and any
+        # other auxiliary is the plain mean.
+        n_tok = auxs["tokens"]
+        w = n_tok / jnp.maximum(n_tok.sum(), 1.0)
+        aux = {k: (jnp.sum(v * w) if k == "xent"
+                   else v.sum() if k == "tokens" else jnp.mean(v))
+               for k, v in auxs.items()}
+        return jnp.mean(losses), aux, grads
 
     def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         loss, aux, grads = compute_grads(state.params, batch)
@@ -125,7 +132,11 @@ def make_prefill_step(cfg: ArchConfig):
 
 def make_decode_step(cfg: ArchConfig):
     def decode(params, cache, token, pos):
-        """token: (B, 1) ids or (B, 1, D) embeds; pos: scalar int32."""
+        """token: (B, 1) ids or (B, 1, D) embeds.
+
+        pos: scalar int32, or — as the serving engine passes it — a (B,)
+        int32 vector of per-slot positions where -1 marks an inactive slot
+        (no cache write; that row's logits are garbage and ignored)."""
         logits, cache, _ = forward(params, token, cfg, cache=cache,
                                    mode="decode", pos=pos)
         return logits[:, -1, :], cache
@@ -146,6 +157,28 @@ def make_chunked_prefill_step(cfg: ArchConfig):
         (0 = slot not being admitted — its cache region is untouched)."""
         logits, cache, _ = forward(params, tokens, cfg, cache=cache,
                                    mode="chunk", pos=lengths)
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+        return last[:, 0, :], cache
+    return prefill
+
+
+def make_paged_decode_step(cfg: ArchConfig):
+    """Decode against a PAGED cache (models.init_paged_cache): the extra
+    ``pages`` (B, P) argument is the engine's per-slot page table mapping
+    logical cache rows to pool pages; -1 entries are unmapped."""
+    def decode(params, cache, token, pos, pages):
+        logits, cache, _ = forward(params, token, cfg, cache=cache,
+                                   mode="decode", pos=pos, pages=pages)
+        return logits[:, -1, :], cache
+    return decode
+
+
+def make_paged_chunked_prefill_step(cfg: ArchConfig):
+    """Chunked prefill into a PAGED cache; see make_paged_decode_step."""
+    def prefill(params, cache, tokens, lengths, pages):
+        logits, cache, _ = forward(params, tokens, cfg, cache=cache,
+                                   mode="chunk", pos=lengths, pages=pages)
         last = jnp.take_along_axis(
             logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
         return last[:, 0, :], cache

@@ -1,0 +1,254 @@
+"""Paged KV cache vs the contiguous-cache oracle, and the page allocator.
+
+The paged layout changes storage ADDRESSING only: chunked prefill and
+decode must produce bit-identical logits to the contiguous layout (GQA and
+MLA), and the engine's page allocator must reject page-exhausted
+admissions (strict raise / non-strict record), defer transiently-starved
+ones, grow on demand at page boundaries, and reuse pages after release.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.iotlb import IotlbFault
+from repro.models import (ArchConfig, forward, init_cache, init_paged_cache,
+                          init_params)
+from repro.serve import Request, ServeConfig, ServingEngine
+
+GQA = ArchConfig(name="pg", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+MLA = ArchConfig(name="pg_mla", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                 kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                 v_head_dim=16, decode_margin=32,
+                 pattern=(("scan", "mla_mlp", 2),), dtype=jnp.float32)
+
+
+# -- forward-level: bit-exact logits against the contiguous layout ----------
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+def test_paged_chunk_and_decode_logits_bit_exact(cfg):
+    """Chunk prefill + several decode steps through a PERMUTED page table
+    produce bit-identical logits to the contiguous cache.
+
+    page_size * pages_per_slot is pinned to the contiguous capacity (256)
+    so both layouts reduce over the same attention-window length: the
+    masked rows are exact zeros under either layout, and with equal window
+    lengths the reduction tree is identical too, making the comparison
+    bitwise.  (With differing window lengths the values still agree, but
+    only to reduction-order rounding, ~1e-7 — see the engine-level test.)
+    """
+    b, sp, ps, n_pages = 2, 8, 32, 16
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, sp), 0,
+                              cfg.vocab_size)
+    lens = jnp.asarray([5, 8], jnp.int32)
+
+    cache_c = init_cache(cfg, b, sp)        # capacity rounds to 256 rows
+    cache_p = init_paged_cache(cfg, b, n_pages, ps)   # 8 * 32 = 256 rows
+    # non-identity mapping: logical order != physical order.
+    pages = jnp.asarray([[5, 2, 7, 0, 9, 12, 15, 10],
+                         [1, 6, 3, 4, 13, 8, 11, 14]], jnp.int32)
+
+    lg_c, cache_c, _ = forward(params, toks, cfg, cache=cache_c,
+                               mode="chunk", pos=lens)
+    lg_p, cache_p, _ = forward(params, toks, cfg, cache=cache_p,
+                               mode="chunk", pos=lens, pages=pages)
+    np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+
+    pos = np.asarray(lens)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    for _ in range(3):
+        pv = jnp.asarray(pos, jnp.int32)
+        lg_c, cache_c, _ = forward(params, tok, cfg, cache=cache_c,
+                                   mode="decode", pos=pv)
+        lg_p, cache_p, _ = forward(params, tok, cfg, cache=cache_p,
+                                   mode="decode", pos=pv, pages=pages)
+        np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+        tok = jnp.argmax(lg_c[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_paged_chunk_inactive_slot_pool_untouched():
+    """A slot admitted with length 0 (and -1 pos at decode) must not write
+    a single pool row — batched admission never perturbs neighbors."""
+    cfg = GQA
+    b, sp, ps = 2, 8, 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_paged_cache(cfg, b, 8, ps)
+    pages = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, sp), 0, 100)
+
+    def slot1_rows(cache_tree):
+        # every GQA cache leaf is a stacked pool (layers, pages, ps, KV,
+        # dh); slot 1 owns physical pages 4..7.
+        return [np.asarray(leaf)[:, 4:8] for leaf in
+                jax.tree.leaves(cache_tree)]
+
+    _, c1, _ = forward(params, toks, cfg, cache=cache, mode="chunk",
+                       pos=jnp.asarray([6, 3], jnp.int32), pages=pages)
+    # refill slot 0 only; slot 1 inactive (len 0) — its pages keep c1 rows.
+    _, c2, _ = forward(params, toks, cfg, cache=c1, mode="chunk",
+                       pos=jnp.asarray([6, 0], jnp.int32), pages=pages)
+    for b1, b2 in zip(slot1_rows(c1), slot1_rows(c2)):
+        np.testing.assert_array_equal(b1, b2)
+    # decode with slot 1 inactive (-1): no write through its pages.
+    _, c3, _ = forward(params, jnp.asarray([[1], [2]], jnp.int32), cfg,
+                       cache=c2, mode="decode",
+                       pos=jnp.asarray([6, -1], jnp.int32), pages=pages)
+    for b2, b3 in zip(slot1_rows(c2), slot1_rows(c3)):
+        np.testing.assert_array_equal(b2, b3)
+
+
+# -- engine-level: paged engine == contiguous engine ------------------------
+
+def _run_tokens(cfg, params, sc, prompts):
+    eng = ServingEngine(cfg, params, sc)
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    return {r.rid: r.out_tokens for r in out}, eng
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+def test_paged_engine_matches_contiguous_engine(cfg):
+    """Greedy tokens are identical between the paged engine (small pages,
+    mixed prompt lengths, slot reuse, on-demand growth) and the contiguous
+    engine on the same request set."""
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5, 7, 11], [3, 1, 4, 1, 5, 9, 2, 6], [2, 7],
+               [9, 8, 7, 6, 5]]
+    base = dict(max_batch=2, max_prompt=16, max_new_tokens=5)
+    got_c, _ = _run_tokens(cfg, params, ServeConfig(paged=False, **base),
+                           prompts)
+    got_p, eng = _run_tokens(cfg, params,
+                             ServeConfig(paged=True, page_size=4, **base),
+                             prompts)
+    assert got_p == got_c
+    # every page returned to the pool after completion.
+    assert len(eng._free_pages) == eng.num_pages
+    assert (eng.page_table == -1).all()
+
+
+# -- page allocator behavior ------------------------------------------------
+
+def test_page_exhaustion_admission_strict_raises():
+    """A request needing more pages than the WHOLE pool is a capacity
+    fault at admission: recorded, rejected, and raised in strict mode."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=4, page_size=4,
+        num_pages=2))
+    bad = Request(3, list(range(2, 12)))       # 10 rows -> 3 pages > 2
+    with pytest.raises(IotlbFault, match="request 3"):
+        eng.admit(bad)
+    assert bad.failed and bad.done
+    assert eng.iotlb.faults[-1].kind == "capacity"
+    assert len(eng._free_pages) == eng.num_pages   # nothing leaked
+
+
+def test_page_exhaustion_admission_nonstrict_records_and_rejects():
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=4, page_size=4,
+        num_pages=2, strict_iotlb=False))
+    bad = Request(3, list(range(2, 12)))
+    good = Request(4, [5, 7, 3])
+    out = eng.run([bad, good])
+    bad_out = next(r for r in out if r.rid == 3)
+    assert bad_out.failed and bad_out.out_tokens == []
+    assert any(f.kind == "capacity" for f in eng.iotlb.faults)
+    good_out = next(r for r in out if r.rid == 4)
+    assert not good_out.failed and len(good_out.out_tokens) == 4
+
+
+def test_transient_exhaustion_defers_then_reuses_released_pages():
+    """Two requests that can't hold pages simultaneously: the second is
+    DEFERRED (no fault) and admitted after the first releases — the same
+    physical pages get reused."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=4, page_size=4,
+        num_pages=3))
+    # each request: 6-row prompt -> 2 pages + growth to 3 pages max; the
+    # 3-page pool fits exactly one at a time.
+    reqs = [Request(0, [5, 7, 11, 2, 9, 4]), Request(1, [3, 1, 4, 1, 5, 9])]
+    out = eng.run(list(reqs))
+    assert len(out) == 2
+    assert all(not r.failed and len(r.out_tokens) == 4 for r in out)
+    assert not eng.iotlb.faults                    # deferral is NOT a fault
+    assert eng.peak_active == 1                    # never co-resident
+    assert len(eng._free_pages) == eng.num_pages   # all pages came back
+
+
+def test_decode_grows_pages_on_demand_across_boundaries():
+    """Decode crossing page boundaries allocates pages lazily — admission
+    claims only prompt + first-decode pages."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=10, page_size=4))
+    pending = [Request(0, [5, 7, 3])]
+    eng.admit_many(pending)
+    assert eng.pages_in_use() == 1          # 3 prompt rows + first decode
+    while any(s is not None for s in eng.slots):
+        eng.step()
+    # rows 0..11 were written -> 3 pages grown in by the end, then freed.
+    assert len(eng._free_pages) == eng.num_pages
+    req = eng.completed[-1]
+    assert not req.failed and len(req.out_tokens) == 10
+
+
+def test_mid_decode_exhaustion_faults_at_page_boundary():
+    """Overcommit mode (reserve_decode_pages=False): pool exhausted while
+    growing a decode page is a capacity fault recorded at the faulting
+    row; non-strict terminates the request with its partial output,
+    strict raises."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    sc = dict(max_batch=1, max_prompt=8, max_new_tokens=8, page_size=4,
+              num_pages=1, reserve_decode_pages=False)
+    eng = ServingEngine(GQA, params, ServeConfig(strict_iotlb=False, **sc))
+    out = eng.run([Request(0, [5, 7, 3])])       # needs page 1 at row 4
+    assert out[0].failed and 0 < len(out[0].out_tokens) < 8
+    assert eng.iotlb.faults[-1].kind == "capacity"
+
+    eng = ServingEngine(GQA, params, ServeConfig(strict_iotlb=True, **sc))
+    with pytest.raises(IotlbFault, match="exhausted"):
+        eng.run([Request(0, [5, 7, 3])])
+
+    # with reservation accounting (the default) the same request is
+    # rejected UP FRONT — the pool can never exhaust mid-decode.
+    eng = ServingEngine(GQA, params, ServeConfig(
+        strict_iotlb=False, **{**sc, "reserve_decode_pages": True}))
+    out = eng.run([Request(0, [5, 7, 3])])
+    assert out[0].failed and out[0].out_tokens == []
+    assert eng.iotlb.faults[-1].kind == "capacity"
+
+
+def test_single_token_request_claims_no_decode_page():
+    """Regression: with max_new_tokens=1 no decode tick ever writes the
+    cache, so a page-aligned prompt must claim exactly its prompt pages —
+    admission vetting and claiming must agree even at a 1-page pool."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=16, max_new_tokens=1, page_size=16,
+        num_pages=1))
+    out = eng.run([Request(0, list(range(2, 18)))])     # 16 rows = 1 page
+    assert not out[0].failed and len(out[0].out_tokens) == 1
+    assert len(eng._free_pages) == eng.num_pages
+
+
+def test_paged_iotlb_windows_map_exactly_allocated_pages():
+    """The IOTLB guards page-granular windows: rows inside an allocated
+    page translate, the row just past the last allocated page misses."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=4, page_size=4))
+    eng.admit_many([Request(0, [5, 7, 3])])      # slot 0: 1 page (rows 0-3)
+    base = 0 * eng._slot_span
+    assert eng.iotlb.translate(base, 4, write=True, strict=False) is not None
+    assert eng.iotlb.translate(base + 4, 1, write=True,
+                               strict=False) is None    # page 1 unmapped
+    assert eng.iotlb.faults[-1].kind == "miss"
+    # neighbors' logical windows are not mapped either.
+    assert eng.iotlb.translate(eng._slot_span, 1, write=True,
+                               strict=False) is None

@@ -221,8 +221,12 @@ def test_iotlb_permissions_and_containment():
     # graceful containment: non-strict records the fault, returns None
     assert tlb.translate(130, 8, write=True, strict=False) is None
     assert tlb.faults[-1].kind == "miss"
+    n_faults = len(tlb.faults)
     with pytest.raises(IotlbFault):                # overlap rejected
         tlb.program(Window("b", virt_base=32, size=64, phys_base=3000))
+    # programming faults are accounted like every other fault path.
+    assert len(tlb.faults) == n_faults + 1
+    assert tlb.faults[-1].kind == "overlap"
 
 
 def test_iotlb_capacity_is_32_entries():
@@ -232,3 +236,6 @@ def test_iotlb_capacity_is_32_entries():
                            phys_base=i * 10))
     with pytest.raises(IotlbFault):
         tlb.program(Window("w33", virt_base=330, size=10, phys_base=330))
+    # the capacity fault is recorded before the raise (host accounting).
+    assert tlb.faults and tlb.faults[-1].kind == "capacity"
+    assert tlb.faults[-1].start == 330

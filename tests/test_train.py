@@ -49,6 +49,32 @@ def test_microbatched_grads_match_full_batch():
                                float(m2["grad_norm"]), rtol=1e-3)
 
 
+def test_microbatched_metrics_match_single_batch():
+    """Regression: accumulated-step metrics must cover EVERY microbatch —
+    the seed reported only the LAST one scanned.  On identical data,
+    microbatches=1 and microbatches=4 must log the same xent/loss (xent is
+    token-weighted, so it equals the whole-batch cross entropy) and the
+    summed token count."""
+    cfg32 = CFG.with_(dtype=jnp.float32)
+    params = init_params(cfg32, jax.random.PRNGKey(0))
+    batch = _batch()
+    s1 = jax.jit(make_train_step(cfg32, AdamWConfig()))
+    s4 = jax.jit(make_train_step(cfg32, AdamWConfig(),
+                                 StepOptions(microbatches=4)))
+    _, m1 = s1(init_train_state(params), batch)
+    _, m4 = s4(init_train_state(params, StepOptions(microbatches=4)), batch)
+    assert float(m1["tokens"]) == float(m4["tokens"])
+    np.testing.assert_allclose(float(m1["xent"]), float(m4["xent"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    # and the per-microbatch losses genuinely differ, so a last-only
+    # report could not have passed by luck.
+    mb = {k: v.reshape(4, 2, *v.shape[1:]) for k, v in batch.items()}
+    last = lm_loss(params, jax.tree.map(lambda x: x[-1], mb), cfg32)[0]
+    assert abs(float(last) - float(m4["loss"])) > 1e-4
+
+
 def test_grad_compression_converges_close_to_exact():
     batch = _batch()
     opt = AdamWConfig(lr_peak=5e-3, warmup_steps=2, total_steps=30)
