@@ -5,13 +5,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench-serve bench
+.PHONY: test smoke bench-smoke bench-serve bench
 
 test:
 	$(PY) -m pytest -x -q
 
 smoke:
 	$(PY) -m pytest -x -q -k "not distributed"
+
+# tiny end-to-end pass of every serving-benchmark section (CI): asserts
+# the benchmark itself still runs, so it cannot silently rot.
+bench-smoke:
+	$(PY) benchmarks/serve_throughput.py --smoke
 
 bench-serve:
 	$(PY) benchmarks/serve_throughput.py

@@ -14,9 +14,16 @@ Measures, on host CPU, what the serving rework buys on the hot path
     every slot statically owns ``max_prompt + max_new_tokens`` rows, while
     emitting identical tokens.  Reports admitted concurrency and cache
     capacity utilization (valid rows / rows reserved).
+  * continuous batching — staggered arrivals of mixed long+short prompts
+    (long ones exceed the chunk budget and fill via RESUMABLE prefill,
+    interleaved with decode); TTFT p50/p95 and tokens/s, and the same
+    overcommitted pool driven with preemption='swap' vs 'terminate':
+    swap sustains strictly higher concurrency with ZERO lost requests.
 
 Swept over batch sizes and weight configs (bf16 vs packed w4), CSV via
 benchmarks/common.emit:  serve/<cfg>,<us>,<derived-metrics>.
+``--smoke`` runs a tiny configuration end-to-end (CI: make bench-smoke)
+and asserts every section still completes, so this file cannot rot.
 """
 from __future__ import annotations
 
@@ -159,14 +166,123 @@ def _paged_capacity(cfg, params):
          f"ticks={ticks};run_us={dt * 1e6:.0f}")
 
 
-def run():
-    quants = [("bf16", None),
-              ("w4", QuantConfig(mode="wo", w_bits=4, use_kernel=False))]
+def _staggered_prompts(vocab: int, n: int, chunk: int):
+    """Mixed workload for the continuous-batching section: half short
+    prompts, half LONG ones that exceed the prefill chunk budget and can
+    only be served via resumable chunked prefill."""
+    key = jax.random.PRNGKey(23)
+    out = []
+    for i in range(n):
+        key, k = jax.random.split(key)
+        ln = 4 + (i % 3) * 2 if i % 2 == 0 else chunk + 8 + (i % 3) * chunk
+        out.append([int(t) for t in jax.random.randint(k, (ln,), 0, vocab)])
+    return out
+
+
+def _drive_staggered(cfg, params, sc, prompts, per_tick: int = 2):
+    """Tick the engine by hand, injecting ``per_tick`` arrivals per tick;
+    returns (per-request TTFT list, stats dict)."""
+    eng = ServingEngine(cfg, params, sc)
+    eng.warmup()        # TTFT must measure serving, not XLA compilation
+    reqs = [Request(i, list(p)) for i, p in enumerate(prompts)]
+    pending, made = [], 0
+    t_arrive, t_first = {}, {}
+    ticks = 0
+    t0 = time.perf_counter()
+    while made < len(reqs) or pending or eng.sched.active() \
+            or eng.sched.swapped:
+        now = time.perf_counter()
+        while made < len(reqs) and made < (ticks + 1) * per_tick:
+            pending.append(reqs[made])
+            t_arrive[made] = now
+            made += 1
+        eng.admit_many(pending)
+        eng.step()
+        now = time.perf_counter()
+        for r in reqs:
+            if r.rid not in t_first and r.out_tokens:
+                t_first[r.rid] = now
+        ticks += 1
+    dt = time.perf_counter() - t0
+    done = [r for r in reqs if r.done and not r.failed]
+    ttft = sorted(t_first[r.rid] - t_arrive[r.rid] for r in done
+                  if r.rid in t_first)
+    return ttft, {
+        "eng": eng, "ticks": ticks, "run_s": dt,
+        "completed": len(done),
+        "failed": sum(r.failed for r in reqs),
+        "gen_tokens": sum(len(r.out_tokens) for r in done),
+        "sustained": eng.active_ticks / max(ticks, 1),
+    }
+
+
+def _continuous_batching(cfg, params, n_requests: int = 12):
+    """Staggered arrivals against a deliberately OVERCOMMITTED pool: the
+    worst-case growth of the admitted set exceeds the pool, so decode
+    must either preempt (swap) or kill requests (terminate).  Asserts
+    swap loses nothing and sustains strictly more concurrency."""
+    chunk, page_size, max_new = 16, 8, 16
+    prompts = _staggered_prompts(cfg.vocab_size, n_requests, chunk)
+    longest = max(len(p) for p in prompts)
+    max_seq = longest + max_new
+    # pool: enough to ADMIT aggressively under overcommit, far short of
+    # everyone's worst case.
+    num_pages = max(2 * (-(-max_seq // page_size)), 3 * n_requests // 2)
+    base = dict(max_batch=6, max_prompt=chunk, max_new_tokens=max_new,
+                max_seq=max_seq, page_size=page_size, num_pages=num_pages,
+                reserve_decode_pages=False)
+
+    ttft, swap = _drive_staggered(
+        cfg, params, ServeConfig(preemption="swap", **base), prompts)
+    _, term = _drive_staggered(
+        cfg, params, ServeConfig(preemption="terminate",
+                                 strict_iotlb=False, **base), prompts)
+
+    assert swap["failed"] == 0, "preemption must lose no request"
+    assert swap["completed"] == len(prompts)
+    assert term["failed"] > 0, "termination at this pool should be lossy"
+    assert swap["sustained"] > term["sustained"], \
+        "swap must sustain strictly higher concurrency than termination"
+    eng = swap["eng"]
+    p50 = ttft[len(ttft) // 2] * 1e6
+    p95 = ttft[min(len(ttft) - 1, int(len(ttft) * 0.95))] * 1e6
+    emit("serve/cb_ttft", p50,
+         f"ttft_p50_us={p50:.0f};ttft_p95_us={p95:.0f};"
+         f"requests={len(prompts)};long_prompts_gt_chunk="
+         f"{sum(len(p) > chunk for p in prompts)}")
+    emit("serve/cb_preemption", swap["sustained"],
+         f"sustained_concurrency_swap={swap['sustained']:.2f};"
+         f"sustained_concurrency_terminate={term['sustained']:.2f};"
+         f"completed_swap={swap['completed']};"
+         f"completed_terminate={term['completed']};"
+         f"failed_terminate={term['failed']};"
+         f"preemptions={eng.n_preemptions};swap_ins={eng.n_swap_ins};"
+         f"tok_per_s={swap['gen_tokens'] / swap['run_s']:.1f}")
+
+
+def run(smoke: bool = False):
+    quants = [("bf16", None)] if smoke else \
+        [("bf16", None),
+         ("w4", QuantConfig(mode="wo", w_bits=4, use_kernel=False))]
     for tag, q in quants:
         cfg = _cfg(q)
         params = init_params(_cfg(None), jax.random.PRNGKey(0))
         if q is not None:
             params, _ = quantize_for_serving(cfg, params)
+        if smoke:
+            # tiny end-to-end pass of every section: one batch size, one
+            # timing iter, few requests — asserts the benchmark still runs.
+            eng = ServingEngine(cfg, params, ServeConfig(
+                max_batch=1, max_prompt=MAX_PROMPT,
+                max_new_tokens=MAX_NEW, paged=False))
+            prompt = _prompts(1, 16, cfg.vocab_size)[0]
+            us_tok = _per_token_prefill_us(eng, prompt, iters=1)
+            us_chk = _chunked_prefill_us(eng, prompt, iters=1)
+            emit(f"serve/smoke_ttft_{tag}", us_chk,
+                 f"per_token_us={us_tok:.0f};smoke=1")
+            _paged_capacity(cfg, params)
+            _continuous_batching(cfg, params, n_requests=6)
+            continue
         for bsz in (1, 2, 4):
             # contiguous layout here: the TTFT probes time the contiguous
             # step builders against the engine's own cache buffers.
@@ -192,7 +308,8 @@ def run():
                  f"tok_per_s={n_tok / dt:.1f}")
 
         _paged_capacity(cfg, params)
+        _continuous_batching(cfg, params)
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:])

@@ -16,6 +16,7 @@ containment behaviour of the hardware block.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 MAX_ENTRIES = 32   # matches the silicon block
@@ -110,3 +111,98 @@ class Iotlb:
     @property
     def windows(self) -> Tuple[Window, ...]:
         return tuple(self._windows.values())
+
+
+@dataclasses.dataclass
+class RefillRecord:
+    """One TLB refill, FaultRecord-style: which backing window was walked
+    in and which resident entry (if any) it displaced."""
+    name: str
+    start: int
+    length: int
+    evicted: Optional[str]
+
+
+@dataclasses.dataclass
+class TlbStats:
+    hits: int = 0
+    refills: int = 0
+    evictions: int = 0
+
+
+class PagedIotlb:
+    """Hardware-faithful IOTLB: 32 resident entries as an LRU TLB over a
+    host-memory page table.
+
+    Shaheen's block holds only 32 entries, so a page pool larger than 32
+    pages cannot map every page at once.  The host keeps the FULL mapping
+    (``map``/``unmap`` — the page table, in host DRAM), and the 32 silicon
+    entries cache its hottest windows: a translate that misses the
+    resident set but hits the page table EVICTS the least-recently-used
+    entry and REFILLS it from the table (counted in ``stats`` and logged
+    FaultRecord-style in ``refill_log``); a translate that misses the
+    table itself is a real fault — recorded, and raised when strict,
+    exactly like :class:`Iotlb`.
+    """
+
+    def __init__(self, max_entries: int = MAX_ENTRIES):
+        self.max_entries = max_entries
+        # the backing page table lives in host memory, so its capacity is
+        # unbounded; programming/translation/fault semantics are Iotlb's.
+        self._table = Iotlb(max_entries=1 << 62)
+        self._resident: "OrderedDict[str, None]" = OrderedDict()
+        self.refill_log: List[RefillRecord] = []
+        self.stats = TlbStats()
+
+    @property
+    def faults(self) -> List[FaultRecord]:
+        return self._table.faults
+
+    # -- host-side page-table programming ----------------------------------
+    def map(self, window: Window) -> None:
+        """Enter a window into the backing page table (NOT the TLB: it
+        becomes resident on first touch).  Overlaps fault like Iotlb."""
+        self._table.program(window)
+
+    def unmap(self, name: str) -> None:
+        self._table.evict(name)
+        self._resident.pop(name, None)
+
+    # -- accelerator-side access path --------------------------------------
+    def translate(self, start: int, length: int, *, write: bool,
+                  strict: bool = True) -> Optional[Tuple[int, int]]:
+        # ONE walk of the backing table (this is the per-row hot path);
+        # fault recording stays Iotlb's single implementation.
+        table = self._table
+        w = next((x for x in table._windows.values()
+                  if x.contains(start, length)), None)
+        if w is None:
+            return table._fault("miss", start, length, write, strict)
+        # residency is accounted BEFORE the permission check, as the
+        # silicon does: the walk refills the entry, then the access
+        # faults on permissions against the now-resident entry.
+        if w.name in self._resident:
+            self._resident.move_to_end(w.name)
+            self.stats.hits += 1
+        else:
+            evicted = None
+            if len(self._resident) >= self.max_entries:
+                evicted, _ = self._resident.popitem(last=False)
+                self.stats.evictions += 1
+            self._resident[w.name] = None
+            self.stats.refills += 1
+            self.refill_log.append(
+                RefillRecord(w.name, start, length, evicted))
+        if write and not w.writable:
+            return table._fault("wperm", start, length, write, strict)
+        if not write and not w.readable:
+            return table._fault("rperm", start, length, write, strict)
+        return (w.phys_base + (start - w.virt_base), length)
+
+    @property
+    def resident(self) -> Tuple[str, ...]:
+        return tuple(self._resident)
+
+    @property
+    def windows(self) -> Tuple[Window, ...]:
+        return tuple(self._table.windows)

@@ -30,9 +30,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (current_mesh, lshard, make_spec,
                                         shard_map)
-from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, paged_gather, paged_scatter, rms_norm,
-                                 rope)
+from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
+                                 chunk_valid_mask, contig_scatter, dense,
+                                 paged_gather, paged_scatter, rms_norm, rope)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -124,6 +124,37 @@ def _chunked_attention_local(q, k, v, q0, kv_valid):
     c0s = q0 + jnp.arange(nc, dtype=jnp.int32) * qc
     out = jax.lax.map(jax.checkpoint(chunk), (qr, c0s))
     return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, v.shape[-1])
+
+
+def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
+    """Causal attention of a RESUMED prefill chunk against the slot's full
+    cached window (history rows [0, q0) plus the chunk's own rows, which
+    the caller has already scattered into the cache).
+
+    q: (B, Sq, H, dh) chunk queries whose global positions are
+    ``q0[b] + i``; k_all/v_all: (B, Skv, KV, dh) the slot-ordered logical
+    window; q0/kv_valid: (B,) int32.  Rows at or past ``kv_valid[b]``
+    (including garbage under unmapped pages) are masked to exact zeros, so
+    the result is bitwise the single-pass chunk attention restricted to
+    the same key set — resuming changes WHERE keys are read from, never
+    what is summed.
+    """
+    b, sq, hq, dh = q.shape
+    skv, kv = k_all.shape[1], k_all.shape[2]
+    g = hq // kv
+    scale = dh ** -0.5
+    qx = q.reshape(b, sq, kv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", (qx * scale).astype(q.dtype), k_all,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    qpos = q0[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    mask = (kpos[None, None, :] <= qpos[:, :, None]) & \
+        (kpos[None, None, :] < kv_valid[:, None, None])
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v_all,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, v_all.shape[-1]).astype(q.dtype)
 
 
 def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes):
@@ -301,6 +332,7 @@ def cache_update(cache: dict, k_new, v_new, index) -> dict:
 def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                     mode: str, pos: jax.Array,
                     pages: Optional[jax.Array] = None,
+                    offset: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer: QKV proj, RoPE, SDPA, out proj.
 
@@ -315,6 +347,11 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     writes scatter through the table; decode gathers the slot's logical
     window back before attention (bit-identical math to the contiguous
     layout — only the storage addressing changes).
+    offset: optional (B,) int32 — RESUMABLE chunk mode: each slot's chunk
+    tokens sit at positions [offset, offset + len) and attend over the
+    already-cached history rows [0, offset) too, so a prompt longer than
+    one chunk fills across several dispatches (continuous batching).
+    None keeps the single-pass chunk path (tokens at [0, len)).
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -327,7 +364,11 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
-    if mode == "chunk":
+    off_b = None
+    if mode == "chunk" and offset is not None:
+        off_b = broadcast_offset(offset, b)
+        positions = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    elif mode == "chunk":
         positions = jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
     else:
@@ -353,6 +394,25 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             "v": lshard(jnp.pad(v.astype(cache["v"].dtype), pad),
                         "cache_batch", "cache_seq", "kv_heads", None),
         }
+    elif mode == "chunk" and off_b is not None:
+        # resumable chunk: scatter the chunk's K/V at rows
+        # [offset, offset + len), then attend the chunk queries over the
+        # slot's WHOLE cached window (history + this chunk) with absolute
+        # causal masking — the key set per query is exactly the
+        # single-pass one, so logits stay bit-identical.
+        len_b = chunk_lengths(pos, b)
+        ok = chunk_valid_mask(len_b, s)
+        t = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        if pages is not None:
+            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
+                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
+            kw = paged_gather(new_cache["k"], pages)
+            vw = paged_gather(new_cache["v"], pages)
+        else:
+            new_cache = {"k": contig_scatter(cache["k"], k, t, ok),
+                         "v": contig_scatter(cache["v"], v, t, ok)}
+            kw, vw = new_cache["k"], new_cache["v"]
+        o = _resume_attention_local(q, kw, vw, off_b, off_b + len_b)
     elif mode == "chunk":
         # one causal pass over the whole padded chunk; padded queries sit
         # after every valid token so they never leak into valid outputs,

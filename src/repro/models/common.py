@@ -147,6 +147,32 @@ def chunk_valid_mask(len_b: jax.Array, seq: int) -> jax.Array:
     return jnp.arange(seq, dtype=jnp.int32)[None, :] < len_b[:, None]
 
 
+def broadcast_offset(offset, batch: int) -> jax.Array:
+    """Per-slot start rows from a resumable-chunk ``offset`` ((B,) or
+    scalar) — the single change point for offset normalization across
+    all families."""
+    return jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(offset, jnp.int32)), (batch,))
+
+
+def contig_scatter(buf: jax.Array, rows: jax.Array, t: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """Scatter per-slot rows into a CONTIGUOUS (B, cap, *rest) cache at
+    logical positions ``t`` (B, S); the offset-write analogue of
+    :func:`paged_scatter` for resumable chunked prefill against unpaged
+    caches.  Invalid or out-of-window writes are DROPPED, so a padded or
+    inactive slot never touches the buffer.
+    """
+    bsz, cap = buf.shape[:2]
+    flat = buf.reshape((bsz * cap,) + buf.shape[2:])
+    ok = valid & (t >= 0) & (t < cap)
+    dest = jnp.where(
+        ok, jnp.arange(bsz, dtype=jnp.int32)[:, None] * cap + t, bsz * cap)
+    flat = flat.at[dest.reshape(-1)].set(
+        rows.astype(buf.dtype).reshape((-1,) + rows.shape[2:]), mode="drop")
+    return flat.reshape(buf.shape)
+
+
 def paged_gather(pool: jax.Array, pages: jax.Array) -> jax.Array:
     """Gather a slot's logical cache window out of a paged row pool.
 

@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
-from repro.models.attention import sdpa
-from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, paged_gather, paged_scatter, rms_norm,
-                                 rope)
+from repro.models.attention import _resume_attention_local, sdpa
+from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
+                                 chunk_valid_mask, contig_scatter, dense,
+                                 paged_gather, paged_scatter, rms_norm, rope)
 
 
 def mla_dims(cfg):
@@ -71,6 +71,7 @@ def _compress(p, x, cfg):
 def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
               mode: str, pos,
               pages: Optional[jax.Array] = None,
+              offset: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h = cfg.n_heads
@@ -80,7 +81,12 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
 
     q = dense(x, p["w_q"], cfg.quant).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    if mode == "chunk":
+    off_b = None
+    if mode == "chunk" and offset is not None:
+        # resumable chunk: tokens sit at [offset, offset + len) per slot.
+        off_b = broadcast_offset(offset, b)
+        positions = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    elif mode == "chunk":
         # chunked prefill: tokens sit at positions [0, len) per slot.
         positions = jnp.broadcast_to(
             jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
@@ -94,7 +100,33 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     k_rope = rope(k_r[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
 
     new_cache = None
-    if mode in ("train", "prefill", "chunk"):
+    if mode == "chunk" and off_b is not None:
+        # resumable chunk: scatter the compressed entries at rows
+        # [offset, offset + len), then EXPAND the slot's whole cached
+        # window (history + this chunk) back through W_UK/W_UV and run the
+        # naive-form attention with absolute causal masking — the same key
+        # set per query as the single-pass chunk, read from the cache.
+        len_b = chunk_lengths(pos, b)
+        ok = chunk_valid_mask(len_b, s)
+        t = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+        if pages is not None:
+            new_cache = {"ckv": paged_scatter(cache["ckv"], pages, entry,
+                                              t, ok)}
+            buf = paged_gather(new_cache["ckv"], pages)
+        else:
+            new_cache = {"ckv": contig_scatter(cache["ckv"], entry, t, ok)}
+            buf = new_cache["ckv"]
+        w = buf.shape[1]
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        k_nope_w = dense(c_all, p["w_uk"], cfg.quant).reshape(b, w, h, dn)
+        v_w = dense(c_all, p["w_uv"], cfg.quant).reshape(b, w, h, dv)
+        k_full = jnp.concatenate(
+            [k_nope_w, jnp.broadcast_to(kr_all[:, :, None, :],
+                                        (b, w, h, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = _resume_attention_local(qq, k_full, v_w, off_b, off_b + len_b)
+    elif mode in ("train", "prefill", "chunk"):
         # naive (expanded) form + shared context-parallel SDPA.
         k_nope = dense(c_kv, p["w_uk"], cfg.quant).reshape(b, s, h, dn)
         v = dense(c_kv, p["w_uv"], cfg.quant).reshape(b, s, h, dv)

@@ -13,7 +13,13 @@ xs/ys.  One forward covers the four lowered entry points:
                     cache: ``pos`` is a (B,) vector of valid prompt lengths
                     for a right-padded chunk; slots with length 0 keep
                     their cache/recurrent state bit-for-bit (batched
-                    admission never perturbs in-flight requests)
+                    admission never perturbs in-flight requests).  With
+                    ``offset`` (a (B,) vector of start rows) the chunk is
+                    RESUMABLE: slot tokens sit at rows [offset, offset +
+                    len), attention families attend over the cached
+                    history [0, offset) too, and recurrent families resume
+                    their cached state — prompts longer than one chunk
+                    fill across several dispatches (continuous batching)
 
 Cache layouts (serving): the contiguous layout gives every slot a private
 (B, capacity, ...) region; the PAGED layout (``init_paged_cache``) replaces
@@ -129,7 +135,7 @@ def _remat(fn, cfg, mode):
 
 
 def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
-                      pages, shared):
+                      pages, offset, shared):
     block = BLOCKS[kind]
     if kind == "shared_attn":
         stage_p = None   # body uses `shared`
@@ -139,7 +145,8 @@ def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
         p_i, c_i = xs
         if kind == "shared_attn":
             p_i = shared
-        h, c_new, a = block.apply(p_i, h, cfg, c_i, mode, pos, pages)
+        h, c_new, a = block.apply(p_i, h, cfg, c_i, mode, pos, pages,
+                                  offset)
         return (h, aux + a), c_new
 
     (x, aux), c_out = jax.lax.scan(
@@ -149,7 +156,7 @@ def _apply_scan_stage(kind, count, stage_p, x, cfg, stage_c, mode, pos,
 
 
 def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, pages,
-                       shared):
+                       offset, shared):
     kinds = _linear_inner(group)
 
     def body(carry, xs):
@@ -160,7 +167,7 @@ def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, pages,
             p_j = shared if kind == "shared_attn" else p_map[f"b{j}"]
             c_j = None if c_map is None else c_map.get(f"b{j}")
             h, c_new, a = BLOCKS[kind].apply(p_j, h, cfg, c_j, mode, pos,
-                                             pages)
+                                             pages, offset)
             aux = aux + a
             if c_new is not None:
                 new_c[f"b{j}"] = c_new
@@ -174,14 +181,19 @@ def _apply_group_stage(group, stage_p, x, cfg, stage_c, mode, pos, pages,
 def forward(params: dict, inputs: jax.Array, cfg: ArchConfig, *,
             cache: Optional[list] = None, mode: str = "train",
             pos: Any = 0, pages: Optional[jax.Array] = None,
+            offset: Optional[Any] = None,
             ) -> Tuple[jax.Array, Optional[list], jax.Array]:
     """Returns (logits (B, S, padded_vocab), new_cache, aux_loss).
 
     ``pages``: optional (B, P) int32 per-slot page table when ``cache``
-    uses the paged layout (see module docstring); None = contiguous."""
+    uses the paged layout (see module docstring); None = contiguous.
+    ``offset``: optional (B,) int32 start rows for a RESUMABLE chunk
+    (mode='chunk' only, see module docstring); None = single-pass."""
     pos = jnp.asarray(pos, jnp.int32)
     if pages is not None:
         pages = jnp.asarray(pages, jnp.int32)
+    if offset is not None:
+        offset = jnp.asarray(offset, jnp.int32)
     if cfg.input_mode == "tokens":
         x = embed_lookup(params["embed"], inputs)
     else:
@@ -197,10 +209,11 @@ def forward(params: dict, inputs: jax.Array, cfg: ArchConfig, *,
         if entry[0] == "scan":
             x, c2, aux = _apply_scan_stage(
                 entry[1], entry[2], stage_p, x, cfg, stage_c, mode, pos,
-                pages, shared)
+                pages, offset, shared)
         else:
             x, c2, aux = _apply_group_stage(
-                entry[1], stage_p, x, cfg, stage_c, mode, pos, pages, shared)
+                entry[1], stage_p, x, cfg, stage_c, mode, pos, pages,
+                offset, shared)
         new_cache.append(c2)
         aux_total = aux_total + aux
 

@@ -18,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
-from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, rms_norm)
+from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
+                                 chunk_valid_mask, dense, rms_norm)
 
 
 def ssm_dims(cfg):
@@ -77,17 +77,21 @@ def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
 
 
 def conv_state_from_chunk(u: jax.Array, k: int, lengths: jax.Array,
-                          old_state: jax.Array) -> jax.Array:
+                          old_state: jax.Array,
+                          history: Optional[jax.Array] = None) -> jax.Array:
     """Conv state after a right-padded chunk: the last K-1 *valid* inputs.
 
-    u: (B, S, C) chunk inputs (zero history before position 0);
-    ``lengths``: (B,) valid counts.  Rows with length 0 (slots not being
-    admitted) keep ``old_state`` so batched admission never perturbs an
-    in-flight slot's recurrence.
+    u: (B, S, C) chunk inputs; ``lengths``: (B,) valid counts.
+    ``history``: the (B, K-1, C) conv state BEFORE the chunk (resumable
+    prefill — a chunk shorter than K-1 keeps the tail of the previous
+    chunk's inputs); None means zero history (chunk starts at position 0).
+    Rows with length 0 (slots not being admitted) keep ``old_state`` so
+    batched admission never perturbs an in-flight slot's recurrence.
     """
     b = u.shape[0]
-    ext = jnp.concatenate(
-        [jnp.zeros((b, k - 1, u.shape[2]), u.dtype), u], axis=1)
+    if history is None:
+        history = jnp.zeros((b, k - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([history.astype(u.dtype), u], axis=1)
     idx = lengths[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
     st = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
     active = (lengths > 0)[:, None, None]
@@ -155,7 +159,9 @@ def _ssd_chunked(xh, dt, a, b_in, c_in, h0, chunk: int):
 
 
 def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
-                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+                mode: str, pos,
+                offset: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     d_inner, h, conv_ch = ssm_dims(cfg)
     n = cfg.ssm_state
@@ -168,6 +174,13 @@ def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     conv_in = jnp.concatenate([xr, bc], axis=-1)
 
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    resume = None
+    if mode == "chunk" and offset is not None:
+        # resumable chunk: slots with offset > 0 continue their recurrence
+        # from the cached conv/SSM state; offset == 0 slots start fresh.
+        resume = broadcast_offset(offset, b) > 0
+        conv_state = jnp.where(resume[:, None, None], cache["conv"],
+                               jnp.zeros_like(cache["conv"]))
     conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
                                       conv_state)
     xc, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
@@ -202,6 +215,9 @@ def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         new_cache = {"conv": new_conv, "ssm": h_new}
     else:
         h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+        if resume is not None:
+            h0 = jnp.where(resume[:, None, None, None],
+                           cache["ssm"].astype(jnp.float32), h0)
         a = dt * a_param[None, None, :]
         y, h_final = _ssd_chunked(xh, dt, a, b_in, c_in, h0, cfg.ssm_chunk)
         new_cache = None
@@ -211,7 +227,8 @@ def apply_mamba(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             active = (len_b > 0)
             new_cache = {
                 "conv": conv_state_from_chunk(
-                    conv_in, p["conv_w"].shape[0], len_b, cache["conv"]),
+                    conv_in, p["conv_w"].shape[0], len_b, cache["conv"],
+                    history=conv_state if resume is not None else None),
                 "ssm": jnp.where(active[:, None, None, None], h_final,
                                  cache["ssm"].astype(jnp.float32)),
             }

@@ -21,8 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lshard
-from repro.models.common import (ParamSpec, chunk_lengths, chunk_valid_mask,
-                                 dense, rms_norm)
+from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
+                                 chunk_valid_mask, dense, rms_norm)
 from repro.models.ssm import _causal_conv, conv_state_from_chunk
 
 NEG = -1e30
@@ -148,7 +148,9 @@ def _mlstm_chunked(q, k, v, log_i, log_f, state, chunk: int):
 
 
 def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
-                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+                mode: str, pos,
+                offset: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     d_in, hh, dh = mlstm_dims(cfg)
     x = lshard(x, "batch", None, None)
@@ -156,6 +158,13 @@ def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     uz = dense(h_in, p["w_up"], cfg.quant)
     u, z = jnp.split(uz, 2, axis=-1)
     conv_state = cache["conv"] if cache is not None and mode == "decode" else None
+    resume = None
+    if mode == "chunk" and offset is not None:
+        # resumable chunk: offset > 0 slots continue from the cached
+        # conv/matrix-memory state; offset == 0 slots start fresh.
+        resume = broadcast_offset(offset, b) > 0
+        conv_state = jnp.where(resume[:, None, None], cache["conv"],
+                               jnp.zeros_like(cache["conv"]))
     uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
     q = dense(uc, p["w_q"], cfg.quant).reshape(b, s, hh, dh) * dh ** -0.5
     k = dense(uc, p["w_k"], cfg.quant).reshape(b, s, hh, dh) * dh ** -0.5
@@ -191,6 +200,11 @@ def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         state = (jnp.zeros((b, hh, dh, dh), jnp.float32),
                  jnp.zeros((b, hh, dh), jnp.float32),
                  jnp.zeros((b, hh), jnp.float32))
+        if resume is not None:
+            pick = lambda new, old: jnp.where(
+                resume.reshape((b,) + (1,) * (new.ndim - 1)), old, new)
+            state = (pick(state[0], cache["C"]), pick(state[1], cache["n"]),
+                     pick(state[2], cache["m"]))
         h_seq, state = _mlstm_chunked(q, k, v, log_i, log_f, state,
                                       cfg.ssm_chunk)
         new_cache = None
@@ -202,8 +216,9 @@ def apply_mlstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             mix = lambda new, old: jnp.where(
                 active.reshape((b,) + (1,) * (new.ndim - 1)), new, old)
             new_cache = {
-                "conv": conv_state_from_chunk(u, p["conv_w"].shape[0],
-                                              len_b, cache["conv"]),
+                "conv": conv_state_from_chunk(
+                    u, p["conv_w"].shape[0], len_b, cache["conv"],
+                    history=conv_state if resume is not None else None),
                 "C": mix(state[0], cache["C"]),
                 "n": mix(state[1], cache["n"]),
                 "m": mix(state[2], cache["m"]),
@@ -269,7 +284,9 @@ def slstm_step(state, wx_t, r):
 
 
 def apply_slstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
-                mode: str, pos) -> Tuple[jax.Array, Optional[dict]]:
+                mode: str, pos,
+                offset: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     hh, dh = slstm_dims(cfg)
     x = lshard(x, "batch", None, None)
@@ -282,6 +299,12 @@ def apply_slstm(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     else:
         z = jnp.zeros((b, hh, dh), jnp.float32)
         state = (z, z, z, z)
+        if mode == "chunk" and offset is not None:
+            # resumable chunk: offset > 0 slots continue from cached state.
+            resume = (broadcast_offset(offset, b) > 0)[:, None, None]
+            state = tuple(
+                jnp.where(resume, cache[key], zero)
+                for key, zero in zip(("c", "n", "h", "m"), state))
 
     if mode == "decode":
         assert s == 1

@@ -1,2 +1,29 @@
-"""Serving runtime: batched prefill/decode engine with quantized weights."""
+"""Continuous-batching serving runtime, split scheduler/allocator/executor.
+
+The package is three modules with a one-way dependency chain and one
+concern each — the contract every change must preserve:
+
+  * :mod:`repro.serve.scheduler` — POLICY.  Owns request metadata per
+    slot, the swap queue, and every decision: admission order, which
+    prompt rows each slot prefills this tick (resumable chunked
+    prefill), which slots decode, who gets preempted (youngest first),
+    which resident prompt a new request may share a prefix with.  Never
+    touches pages or device state.
+  * :mod:`repro.serve.allocator` — ACCOUNTING.  Owns the physical page
+    pool: free list, refcounted per-slot page tables (prefix sharing),
+    copy-on-write barriers, worst-case growth reservations, and the
+    hardware-faithful 32-entry LRU IOTLB over the page table.  Never
+    decides policy and never touches device memory — COW hands the
+    engine (src, dst) physical copies to apply.
+  * :mod:`repro.serve.engine` — EXECUTION.  Owns params, the device
+    cache, and the two jitted steps (offset-aware chunked prefill +
+    decode).  Each tick it asks the scheduler WHAT to run, the allocator
+    WHERE it lives, stages host-side in numpy, and dispatches at most
+    one prefill and one decode.  Also moves swapped request state
+    device<->host, bit-for-bit.
+
+Every scheduling decision is pure addressing: logits are bit-identical
+to the single-pass, never-preempted, unshared execution of the same
+requests (tests/test_continuous_batching.py enforces this).
+"""
 from repro.serve.engine import Request, ServeConfig, ServingEngine  # noqa: F401

@@ -1,0 +1,125 @@
+"""Page allocator: refcounted page tables over a shared physical pool.
+
+This is the ACCOUNTING layer of the serving stack (scheduler = policy,
+engine = execution).  It owns
+
+  * the free list of physical pages and each slot's page table
+    (``page_table[slot, j]`` = physical page backing logical page ``j``,
+    -1 = unmapped),
+  * per-page REFCOUNTS — prefix sharing points several slots' tables at
+    the same physical page; a page returns to the free list only when its
+    last reference is released,
+  * copy-on-write (``privatize``): before a slot writes into a page it
+    shares, the allocator remaps it to a fresh page and hands the engine
+    a (src, dst) physical copy to apply to the device pools,
+  * reservation accounting for worst-case decode growth
+    (``growth_due``), and
+  * the hardware-faithful IOTLB: a :class:`~repro.core.iotlb.PagedIotlb`
+    whose 32 resident entries are an LRU TLB over the full page-table
+    mapping, so a pool larger than 32 pages refills entries on demand
+    instead of pretending the silicon block scales with the pool.
+
+Every method is pure host-side bookkeeping: the allocator never touches
+device memory.  The engine applies the (src, dst) copies it returns.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.iotlb import PagedIotlb, Window
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int, page_size: int, max_batch: int,
+                 pages_per_slot: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.slot_span = pages_per_slot * page_size
+        self.page_table = np.full((max_batch, pages_per_slot), -1, np.int32)
+        self.free_pages: List[int] = list(range(num_pages))
+        self.refcount = np.zeros((num_pages,), np.int32)
+        # per-slot worst-case pages still to be grown (reservation
+        # accounting; stays 0 under overcommit).
+        self.growth_due = np.zeros((max_batch,), np.int32)
+        self.iotlb = PagedIotlb()
+
+    # -- queries ------------------------------------------------------------
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self.free_pages)
+
+    def mapped_count(self, slot: int) -> int:
+        return int((self.page_table[slot] >= 0).sum())
+
+    def reserved_free(self) -> int:
+        """Free pages not spoken for by outstanding growth reservations."""
+        return len(self.free_pages) - int(self.growth_due.sum())
+
+    def _window(self, slot: int, j: int, phys: int) -> Window:
+        ps = self.page_size
+        return Window(name=f"slot{slot}p{j}",
+                      virt_base=slot * self.slot_span + j * ps, size=ps,
+                      phys_base=phys * ps, readable=True, writable=True)
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self, slot: int, j: int) -> bool:
+        """Map logical page ``j`` of ``slot`` to a free physical page and
+        enter the window into the IOTLB page table.  False = exhausted."""
+        if not self.free_pages:
+            return False
+        phys = self.free_pages.pop(0)
+        self.page_table[slot, j] = phys
+        self.refcount[phys] = 1
+        self.iotlb.map(self._window(slot, j, phys))
+        return True
+
+    def share(self, slot: int, j: int, phys: int) -> None:
+        """Point (slot, j) at an already-populated physical page (prefix
+        sharing): no copy, refcount up, own IOTLB window (the virtual
+        range is per-slot even when the physical page is shared)."""
+        assert self.refcount[phys] > 0, "sharing an unowned page"
+        self.page_table[slot, j] = phys
+        self.refcount[phys] += 1
+        self.iotlb.map(self._window(slot, j, phys))
+
+    def privatize(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write barrier: call before WRITING page ``j`` of
+        ``slot``.  A page shared with another slot (refcount > 1) is
+        remapped to a fresh physical page; returns (src, dst) physical
+        indices for the engine to copy on device, or None when the page
+        was already private.  The caller must have accounted one free
+        page for every shared page it intends to write."""
+        phys = int(self.page_table[slot, j])
+        if phys < 0 or self.refcount[phys] <= 1:
+            return None
+        assert self.free_pages, "COW page was not accounted at admission"
+        dst = self.free_pages.pop(0)
+        self.refcount[phys] -= 1
+        self.refcount[dst] = 1
+        self.page_table[slot, j] = dst
+        self.iotlb.unmap(f"slot{slot}p{j}")
+        self.iotlb.map(self._window(slot, j, dst))
+        return (phys, dst)
+
+    def release_slot(self, slot: int) -> None:
+        """Drop every reference ``slot`` holds (and its unrealized growth
+        reservation); pages with no remaining sharer return to the pool."""
+        for j, phys in enumerate(self.page_table[slot]):
+            if phys >= 0:
+                self.iotlb.unmap(f"slot{slot}p{j}")
+                p = int(phys)
+                self.refcount[p] -= 1
+                if self.refcount[p] == 0:
+                    self.free_pages.append(p)
+        self.page_table[slot] = -1
+        self.growth_due[slot] = 0
+
+    # -- access checks ------------------------------------------------------
+    def check_write(self, slot: int, row: int, length: int = 1, *,
+                    strict: bool) -> bool:
+        """Row-granular write check through the TLB (refills counted)."""
+        return self.iotlb.translate(
+            slot * self.slot_span + row, length, write=True,
+            strict=strict) is not None

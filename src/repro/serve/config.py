@@ -1,0 +1,118 @@
+"""Serving configuration + request record.
+
+``ServeConfig`` validates itself at construction (``__post_init__``) so a
+bad pool geometry fails loudly at the API surface with the offending
+field named, instead of deep inside the allocator ticks later.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_prompt: int = 64            # prefill CHUNK budget per dispatch
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    eos_id: int = -1                # -1 = never
+    seed: int = 0
+    strict_iotlb: bool = True       # False: record fault, reject admission
+    paged: bool = True              # page the KV cache (attention families)
+    page_size: int = 16             # cache rows per page
+    num_pages: Optional[int] = None  # pool pages; None = one full window
+    #                                  per slot (contiguous-equivalent)
+    pool_rows: Optional[int] = None  # alternative pool spec in cache ROWS;
+    #                                  page_size must divide it exactly
+    max_seq: Optional[int] = None   # per-slot row capacity (prompt+decode);
+    #                                  None = max_prompt + max_new_tokens.
+    #                                  Prompts longer than max_prompt (but
+    #                                  within max_seq - max_new_tokens) are
+    #                                  served via RESUMABLE chunked prefill.
+    reserve_decode_pages: bool = True
+    # True: admission ACCOUNTS for every in-flight request's worst-case
+    #   decode growth (pages still materialize lazily at page boundaries,
+    #   and early EOS releases the whole reservation), so the pool can
+    #   never exhaust mid-decode and every admitted request completes.
+    # False: overcommit — admission claims only prompt + first-decode
+    #   pages and growth races the pool; mid-decode exhaustion triggers
+    #   ``preemption``.
+    preemption: str = "swap"
+    # What overcommit does when growth finds the pool empty mid-decode:
+    #   "swap":      evict the youngest resident request's pages (and
+    #                recurrent state) to host memory and re-admit it later
+    #                bit-for-bit — no request is lost;
+    #   "terminate": the growing request dies with a capacity fault and
+    #                its partial output (the pre-PR behavior).
+    # Either way the fault path still fires when no victim can help.
+    prefix_sharing: bool = True
+    # Refcounted page tables: a new prompt sharing a whole-page prompt
+    # prefix with a resident request maps the resident's physical pages
+    # (copy-on-write at the first divergent page) and resumes prefill at
+    # the first unshared row.  Engages only for fully-paged models —
+    # recurrent state cannot be inherited — and is pure addressing:
+    # logits are unchanged.
+    record_logits: bool = False     # keep per-token logits on each Request
+
+    def __post_init__(self):
+        def bad(field, why):
+            raise ValueError(f"ServeConfig.{field} {why}")
+        if self.max_batch <= 0:
+            bad("max_batch", f"must be positive, got {self.max_batch}")
+        if self.max_prompt <= 0:
+            bad("max_prompt", f"must be positive, got {self.max_prompt}")
+        if self.max_new_tokens <= 0:
+            bad("max_new_tokens", "must be >= 1 (every request emits at "
+                f"least the post-prompt token), got {self.max_new_tokens}")
+        if self.temperature < 0:
+            bad("temperature", f"must be >= 0, got {self.temperature}")
+        if self.preemption not in ("swap", "terminate"):
+            bad("preemption", f"must be 'swap' or 'terminate', "
+                f"got {self.preemption!r}")
+        if not self.paged:
+            if self.max_seq is not None:
+                bad("max_seq", "is only honored by the paged engine "
+                    "(paged=True); the contiguous layout fixes slot "
+                    "capacity at max_prompt + max_new_tokens")
+            return
+        if self.page_size <= 0:
+            bad("page_size", f"must be positive, got {self.page_size}")
+        if self.num_pages is not None and self.num_pages <= 0:
+            bad("num_pages", f"must be positive, got {self.num_pages}")
+        if self.pool_rows is not None:
+            if self.num_pages is not None:
+                bad("pool_rows", "and num_pages are two spellings of the "
+                    "same pool — set only one")
+            if self.pool_rows <= 0:
+                bad("pool_rows", f"must be positive, got {self.pool_rows}")
+            if self.pool_rows % self.page_size:
+                bad("page_size", f"({self.page_size}) does not divide the "
+                    f"pool (pool_rows={self.pool_rows})")
+            self.num_pages = self.pool_rows // self.page_size
+        if self.max_seq is not None and \
+                self.max_seq < self.max_new_tokens + 1:
+            bad("max_seq", f"({self.max_seq}) cannot hold even a 1-token "
+                f"prompt plus max_new_tokens={self.max_new_tokens} rows")
+
+    @property
+    def slot_rows(self) -> int:
+        """Per-slot logical row capacity."""
+        if self.paged and self.max_seq is not None:
+            return self.max_seq
+        return self.max_prompt + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    failed: bool = False            # rejected by IOTLB containment
+    preempts: int = 0               # times swapped out mid-decode
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # per-emitted-token logits rows, populated when
+    # ServeConfig.record_logits (bit-exactness tests / debugging)

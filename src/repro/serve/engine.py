@@ -1,60 +1,50 @@
-"""Batched serving engine: chunked prefill + paged-KV continuous batching.
+"""Serving EXECUTOR: jitted dispatch + device data movement.
 
-The engine owns a fixed pool of ``max_batch`` cache slots.  Admission is a
-**single-pass chunked prefill**: every pending request that fits a free slot
-is packed into one right-padded ``(max_batch, max_prompt)`` token chunk with
-a per-slot length vector, and ONE jitted forward (``mode='chunk'``) writes
-each admitted slot's KV/recurrent cache region and returns the post-prompt
-logits for all of them — O(1) dispatch round-trips per admission wave
-instead of the O(prompt_len) per-token ticks the seed engine paid.  Prefill
-is compute-bound (Shaheen Table 4/6), so it runs as one large offload —
-the same shape as the paper's cluster offloads — while slots whose length
-is 0 in the chunk keep their cache and recurrent state bit-for-bit, so
-admission never perturbs in-flight requests mid-decode.
+The serving stack is three layers with one owner per concern:
 
-Steady state is unchanged: one jitted decode step advances every active
-slot per tick; finished slots (EOS or max tokens) are released and refilled
-by the next admission wave.  ``run`` returns completed requests in
-completion order.  All per-tick staging (active mask, positions, token
-buffers) is built host-side in numpy and shipped in one transfer — never
-one ``.at[i].set`` dispatch per slot.
+  * ``scheduler.py`` — POLICY.  Admission order, per-tick chunk budgets
+    (resumable prefill), preemption victims, prefix matching, the swap
+    queue.  Pure host logic over request metadata.
+  * ``allocator.py`` — ACCOUNTING.  The physical page pool: free list,
+    refcounted per-slot page tables, copy-on-write barriers, growth
+    reservations, and the 32-entry LRU IOTLB over the page table.
+  * ``engine.py`` (this file) — EXECUTION.  Owns params/cache/device
+    buffers and the two jitted steps (chunked prefill + decode); builds
+    per-tick staging host-side in numpy (one transfer per tick), applies
+    the allocator's page copies, moves swapped state device<->host, and
+    samples.  It consults the scheduler for WHAT to run and the allocator
+    for WHERE it lives, and never decides either itself.
 
-Paged KV cache (default, ``ServeConfig.paged``): instead of every slot
-statically owning a contiguous ``max_prompt + max_new_tokens`` cache
-window, attention/MLA layers share a global page pool of ``num_pages``
-pages x ``page_size`` rows, and each slot holds a page table of
-``pages_per_slot = ceil((max_prompt + max_new_tokens) / page_size)``
-entries (-1 = unmapped).  Logical cache row ``t`` of slot ``b`` lives at
-physical row ``page_table[b, t // page_size] * page_size + t % page_size``;
-the same table drives every layer.  Pages are CLAIMED at admission for the
-prompt plus the first decode row, GROWN on demand as decode crosses each
-page boundary, and FREED when the request completes — so short requests
-stop hoarding the long-request budget and the same pool admits strictly
-more concurrent requests than the contiguous layout (see
-benchmarks/serve_throughput.py).  By default admission also RESERVES (in
-accounting only) each request's worst-case growth so the pool can never
-exhaust mid-decode; ``reserve_decode_pages=False`` overcommits instead,
-and a growth that finds the pool empty becomes a capacity fault.
-Recurrent families (SSM/xLSTM) keep fixed-size per-slot state and bypass
-paging.
+Continuous batching: every engine tick is (at most) ONE chunked-prefill
+dispatch — covering freshly admitted slots AND slots resuming a prompt
+longer than one chunk, via the ``offset`` argument threaded through
+``forward`` — followed by ONE decode dispatch for the slots whose prompt
+is complete.  Prefill of the next wave therefore overlaps decode of the
+current one, and a long prompt never stalls the tick loop.
 
-Two Shaheen touches:
-  * weights can be served PACKED sub-byte (quantize_for_serving) — decode
-    is weight-bandwidth-bound, exactly where the paper's formats pay;
-  * the slot table is guarded by the software IOTLB (core/iotlb),
-    reprogrammed at PAGE granularity in paged mode: each slot's windows
-    map exactly its allocated pages, so an out-of-budget access faults at
-    the page boundary instead of somewhere inside a whole-slot window,
-    and ``admit_many`` checks prompt-page + first-decode-page coverage
-    before any cache mutation.  In strict mode a fault raises (host
-    interrupt); in non-strict mode it is recorded and the request is
-    rejected — graceful fault containment, §III-C2 — and a neighboring
-    slot's pages are never touched either way.
+Preemption (overcommit mode): when decode growth finds the pool empty,
+the scheduler picks the youngest resident request, the engine snapshots
+its pages and recurrent state to host memory, the allocator releases its
+pages, and the request re-enters through the swap queue bit-for-bit —
+``reserve_decode_pages=False`` stops being lossy under load.
+
+Prefix sharing: refcounted page tables let a new prompt map a resident
+request's physical pages for their common whole-page prompt prefix
+(copy-on-write at the first divergent page) and resume prefill at the
+first unshared row — admission cost scales with the UNSHARED suffix.
+
+Two Shaheen touches survive every layer: weights can be served PACKED
+sub-byte (quantize_for_serving) — decode is weight-bandwidth-bound,
+exactly where the paper's formats pay — and every cache write is guarded
+by the software IOTLB at page granularity, now hardware-faithfully
+capped at the silicon block's 32 entries (misses on mapped pages refill
+from the page table; misses on unmapped rows fault and contain, §III-C2).
+All scheduling is pure addressing: logits stay bit-identical to the
+single-pass, never-preempted, unshared path.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,42 +52,15 @@ import numpy as np
 
 from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
 from repro.models import init_cache, init_paged_cache
+from repro.models.common import is_spec_tree_leaf
 from repro.models.config import ArchConfig
+from repro.models.model import cache_specs
+from repro.serve.allocator import PageAllocator
+from repro.serve.config import Request, ServeConfig
+from repro.serve.scheduler import Scheduler, SwappedRequest
 from repro.train.step import (make_chunked_prefill_step, make_decode_step,
                               make_paged_chunked_prefill_step,
                               make_paged_decode_step)
-
-
-@dataclasses.dataclass
-class ServeConfig:
-    max_batch: int = 4
-    max_prompt: int = 64
-    max_new_tokens: int = 32
-    temperature: float = 0.0        # 0 = greedy
-    eos_id: int = -1                # -1 = never
-    seed: int = 0
-    strict_iotlb: bool = True       # False: record fault, reject admission
-    paged: bool = True              # page the KV cache (attention families)
-    page_size: int = 16             # cache rows per page
-    num_pages: Optional[int] = None  # pool pages; None = one full window
-    #                                  per slot (contiguous-equivalent)
-    reserve_decode_pages: bool = True
-    # True: admission ACCOUNTS for every in-flight request's worst-case
-    #   decode growth (pages still materialize lazily at page boundaries,
-    #   and early EOS releases the whole reservation), so the pool can
-    #   never exhaust mid-decode and every admitted request completes.
-    # False: overcommit — admission claims only prompt + first-decode
-    #   pages and growth races the pool; exhaustion mid-decode is a
-    #   capacity fault that terminates the request (strict mode raises).
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    failed: bool = False            # rejected by IOTLB containment
 
 _DEFER = "defer"                    # admission verdict: retry after frees
 
@@ -108,10 +71,10 @@ class ServingEngine:
         self.params = params
         self.sc = serve_cfg
         bsz = serve_cfg.max_batch
-        cap_prompt = serve_cfg.max_prompt + serve_cfg.max_new_tokens
+        cap = serve_cfg.slot_rows
         if serve_cfg.paged:
             ps = serve_cfg.page_size
-            self.pages_per_slot = -(-cap_prompt // ps)
+            self.pages_per_slot = -(-cap // ps)
             self._slot_span = self.pages_per_slot * ps
             self.num_pages = (serve_cfg.num_pages
                               if serve_cfg.num_pages is not None
@@ -121,66 +84,72 @@ class ServingEngine:
                                    donate_argnums=1)
             self._prefill = jax.jit(make_paged_chunked_prefill_step(cfg),
                                     donate_argnums=1)
-            # page allocator: free physical pages + per-slot page tables.
-            self.page_table = np.full((bsz, self.pages_per_slot), -1,
-                                      np.int32)
-            self._free_pages: List[int] = list(range(self.num_pages))
-            # per-slot worst-case pages still to be grown (reservation
-            # accounting; stays 0 when reserve_decode_pages is off).
-            self._growth_due = np.zeros((bsz,), np.int32)
-            # page-granular IOTLB: one window per MAPPED page, programmed
-            # at allocation and evicted at release, so the guarded region
-            # is exactly the slot's allocated pages.  Deliberate deviation
-            # from the silicon block: entry capacity is sized to the page
-            # pool rather than Shaheen's 32 entries — a >32-page pool
-            # would need an entry-eviction/refill policy to stay
-            # hardware-faithful (ROADMAP follow-on).
-            self.iotlb = Iotlb(max_entries=self.num_pages)
+            self.alloc = PageAllocator(self.num_pages, ps, bsz,
+                                       self.pages_per_slot)
+            # which cache leaves are shared page POOLS (axis 1 = pages)
+            # vs per-slot state (axis 1 = batch) — drives swap and COW.
+            specs = cache_specs(cfg, bsz, 0, num_pages=self.num_pages,
+                                page_size=ps)
+            flat_specs, _ = jax.tree.flatten(specs,
+                                             is_leaf=is_spec_tree_leaf)
+            self._pooled = [s.axes[1] == "cache_seq" for s in flat_specs]
+            # prefix sharing needs EVERY cache-carrying layer paged:
+            # recurrent state cannot be inherited from a sharer.
+            self._can_share = serve_cfg.prefix_sharing and \
+                all(self._pooled) and len(self._pooled) > 0
         else:
-            self.cache = init_cache(cfg, bsz, cap_prompt)
+            self.alloc = None
+            self._can_share = False
+            self.cache = init_cache(cfg, bsz, cap)
             self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
             self._prefill = jax.jit(make_chunked_prefill_step(cfg),
                                     donate_argnums=1)
-            self._slot_span = cap_prompt
+            self._slot_span = cap
             # whole-slot windows (one per slot), mapped once.
-            self.iotlb = Iotlb()
+            self._plain_iotlb = Iotlb()
             for i in range(bsz):
-                self.iotlb.program(Window(
-                    name=f"slot{i}", virt_base=i * cap_prompt,
-                    size=cap_prompt, phys_base=i * cap_prompt,
+                self._plain_iotlb.program(Window(
+                    name=f"slot{i}", virt_base=i * cap,
+                    size=cap, phys_base=i * cap,
                     readable=True, writable=True))
-        self.slots: List[Optional[Request]] = [None] * bsz
+        self.sched = Scheduler(bsz, serve_cfg.max_prompt)
         self.positions = np.zeros((bsz,), np.int32)
         self.last_token = np.zeros((bsz,), np.int32)
         self.key = jax.random.PRNGKey(serve_cfg.seed)
         self.completed: List[Request] = []
         self.peak_active = 0        # high-water concurrency (benchmarks)
+        self.active_ticks = 0       # sum of active slots over decode ticks
+        self.n_preemptions = 0
+        self.n_swap_ins = 0
+        self.n_cow_copies = 0
+        self.n_shared_admissions = 0
+        self._prefilled_since_step = False   # one prefill dispatch per tick
 
-    # -- page allocator -----------------------------------------------------
-    def _alloc_page(self, slot: int, j: int) -> bool:
-        """Map logical page ``j`` of ``slot`` to a free physical page and
-        program the matching IOTLB window.  False = pool exhausted."""
-        if not self._free_pages:
-            return False
-        phys = self._free_pages.pop(0)
-        self.page_table[slot, j] = phys
-        ps = self.sc.page_size
-        self.iotlb.program(Window(
-            name=f"slot{slot}p{j}",
-            virt_base=slot * self._slot_span + j * ps, size=ps,
-            phys_base=phys * ps, readable=True, writable=True))
-        return True
+    # -- compat views over the split layers ---------------------------------
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return self.sched.requests()
 
-    def _release_pages(self, slot: int) -> None:
-        """Return a slot's pages (and any unrealized reservation) to the
-        pool and evict their windows."""
-        for j, phys in enumerate(self.page_table[slot]):
-            if phys >= 0:
-                self.iotlb.evict(f"slot{slot}p{j}")
-                self._free_pages.append(int(phys))
-        self.page_table[slot] = -1
-        self._growth_due[slot] = 0
+    @property
+    def iotlb(self):
+        return self.alloc.iotlb if self.sc.paged else self._plain_iotlb
 
+    @property
+    def page_table(self) -> np.ndarray:
+        return self.alloc.page_table
+
+    @property
+    def _free_pages(self) -> List[int]:
+        return self.alloc.free_pages
+
+    @property
+    def _growth_due(self) -> np.ndarray:
+        return self.alloc.growth_due
+
+    def pages_in_use(self) -> int:
+        return self.alloc.pages_in_use()
+
+    # -- page demand --------------------------------------------------------
     def _max_pages(self, req: Request) -> int:
         """Pages covering every cache row the request could ever write:
         prompt rows [0, len) plus decode writes up to row
@@ -201,14 +170,11 @@ class ServingEngine:
         return last_row // self.sc.page_size + 1
 
     def _pages_dev(self) -> jax.Array:
-        return jnp.asarray(self.page_table)
-
-    def pages_in_use(self) -> int:
-        return self.num_pages - len(self._free_pages)
+        return jnp.asarray(self.alloc.page_table)
 
     # -- admission ----------------------------------------------------------
     def _free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
+        return self.sched.free_slots()
 
     def _reject(self, req: Request) -> None:
         if not req.done:            # idempotent: retried rejects are no-ops
@@ -227,14 +193,17 @@ class ServingEngine:
                              f"[{start}, {start + length}) write=True")
 
     def _admissible(self, slot: int, req: Request):
-        """Vet a request for ``slot``: True (admit), False (rejected), or
-        _DEFER (transient page exhaustion — retry after completions free
-        pages).  No cache region is written either way."""
+        """Vet a request for ``slot``: (verdict, share) where verdict is
+        True (admit), False (rejected), or _DEFER (transient page
+        exhaustion — retry after completions free pages) and ``share`` is
+        the (resident slot, rows) prefix-sharing plan (None, 0) when not
+        sharing.  No cache region is written either way."""
+        no_share = (None, 0)
         if not req.prompt:
             # an empty prompt has nothing to prefill (and length 0 is the
             # chunk pass's inactive-slot sentinel): reject cleanly.
             self._reject(req)
-            return False
+            return False, no_share
         span = len(req.prompt) + self.sc.max_new_tokens
         if not self.sc.paged:
             ok = self.iotlb.translate(slot * self._slot_span, span,
@@ -246,14 +215,15 @@ class ServingEngine:
                     raise IotlbFault(f.kind, f"request {req.rid}: range "
                                      f"[{f.start}, {f.start + f.length}) "
                                      f"write={f.write}")
-                return False
-            return True
+                return False, no_share
+            return True, no_share
         # paged: the request's full logical extent must fit the slot's
-        # page-table window AND the prompt must fit the prefill chunk.
+        # row capacity.  The prompt no longer has to fit ONE chunk —
+        # resumable prefill spreads it over several ticks.
         base = slot * self._slot_span
-        if span > self._slot_span or len(req.prompt) > self.sc.max_prompt:
+        if span > self.sc.slot_rows:
             self._fault_reject(req, "miss", base, span)
-            return False
+            return False, no_share
         needed = self._claim_count(req)
         demand = (self._max_pages(req) if self.sc.reserve_decode_pages
                   else needed)
@@ -261,42 +231,79 @@ class ServingEngine:
             # can never fit, even with the whole pool free.
             self._fault_reject(req, "capacity", base,
                                demand * self.sc.page_size)
-            return False
-        if demand + int(self._growth_due.sum()) > len(self._free_pages):
-            return _DEFER           # pages will come back on completion
-        return True
+            return False, no_share
+        if self.sched.swapped:
+            # preempted work drains first: fresh admissions would starve
+            # the swap queue of the very pages it is waiting for.
+            return _DEFER, no_share
+        share = (self.sched.shared_prefix(req.prompt, self.sc.page_size)
+                 if self._can_share else no_share)
+        demand -= (share[1] // self.sc.page_size)   # shared pages are free
+        if demand > self.alloc.reserved_free():
+            return _DEFER, no_share           # pages come back on completion
+        return True, share
 
-    def _claim_pages(self, slot: int, req: Request) -> None:
-        """Claim the prompt's pages plus the first decode page, then check
-        coverage through the IOTLB page windows BEFORE any cache write."""
+    def _claim_pages(self, slot: int, req: Request,
+                     share) -> Tuple[int, List[Tuple[int, int]]]:
+        """Claim the prompt's pages plus the first decode page.  With a
+        prefix-sharing plan, whole shared pages are refcount-mapped from
+        the resident slot and the divergent partial page is COW-copied;
+        returns (prefill start row, device page copies to apply)."""
         ps = self.sc.page_size
         needed = self._claim_count(req)
-        for j in range(needed):
-            claimed = self._alloc_page(slot, j)
+        copies: List[Tuple[int, int]] = []
+        start_row, start_j = 0, 0
+        src, rows = share
+        if src is not None and rows > 0:
+            nfull = rows // ps
+            for j in range(nfull):
+                self.alloc.share(slot, j, int(self.alloc.page_table[src, j]))
+            start_row, start_j = rows, nfull
+            if rows % ps:
+                # the divergent page: share it, then immediately hit the
+                # COW barrier — the copy carries the shared prefix rows
+                # this slot needs and the resumed prefill overwrites the
+                # rest.  Writes to either copy can no longer reach the
+                # other slot's logits.
+                self.alloc.share(slot, nfull,
+                                 int(self.alloc.page_table[src, nfull]))
+                cp = self.alloc.privatize(slot, nfull)
+                assert cp is not None
+                copies.append(cp)
+                start_j = nfull + 1
+            self.n_shared_admissions += 1
+        for j in range(start_j, needed):
+            claimed = self.alloc.alloc(slot, j)
             assert claimed, "free-page count was vetted in _admissible"
         if self.sc.reserve_decode_pages:
-            self._growth_due[slot] = self._max_pages(req) - needed
+            self.alloc.growth_due[slot] = self._max_pages(req) - needed
         for j in range(needed):
-            v = slot * self._slot_span + j * ps
-            if self.iotlb.translate(v, ps, write=True, strict=False) is None:
+            if not self.alloc.check_write(slot, j * ps, ps, strict=False):
                 raise IotlbFault(     # pragma: no cover - defensive
                     "miss", f"request {req.rid}: page {j} not covered")
+        return start_row, copies
 
     def admit_many(self, pending: List[Request]) -> int:
-        """Admit as many pending requests as there are free slots, in ONE
-        chunked-prefill dispatch.  Pops admitted (and rejected) requests
-        off ``pending``; returns the number admitted.  A request that only
-        fails on TRANSIENT page exhaustion stays at the head of ``pending``
-        and the wave stops — it retries once completions free pages."""
+        """Admit as many pending requests as there are free slots, then
+        run ONE chunked-prefill dispatch covering the new slots' first
+        chunks AND the next chunk of every slot still mid-prefill.  Pops
+        admitted (and rejected) requests off ``pending``; returns the
+        number admitted.  Swapped-out requests re-enter first.  A request
+        that only fails on TRANSIENT page exhaustion stays at the head of
+        ``pending`` and the wave stops — it retries once completions free
+        pages."""
+        if self.sc.paged:
+            self._swap_in_ready()
         placed: List[tuple] = []        # (slot, request) vetted this wave
+        copies: List[Tuple[int, int]] = []
         try:
             for slot in self._free_slots():
-                got = None
+                got, share = None, (None, 0)
                 while pending and got is None:
                     req = pending.pop(0)
                     if req.done:        # already rejected/finished earlier
                         continue
-                    verdict = self._admissible(slot, req)
+                    verdict, share = self._admissible(slot, req)
                     if verdict is _DEFER:
                         pending.insert(0, req)
                         break
@@ -304,8 +311,11 @@ class ServingEngine:
                         got = req
                 if got is None:
                     break               # out of requests, or deferred
+                start_row = 0
                 if self.sc.paged:
-                    self._claim_pages(slot, got)
+                    start_row, cps = self._claim_pages(slot, got, share)
+                    copies.extend(cps)
+                self.sched.place(slot, got, prefill_done=start_row)
                 placed.append((slot, got))
         except IotlbFault:
             # strict fault mid-wave: no slot was mutated yet (the faulting
@@ -315,37 +325,41 @@ class ServingEngine:
             # requests nor engine consistency.
             for slot, req in reversed(placed):
                 if self.sc.paged:
-                    self._release_pages(slot)
+                    self.alloc.release_slot(slot)
+                self.sched.release(slot)
                 pending.insert(0, req)
             raise
-        if not placed:
-            return 0
-        bsz, sp = self.sc.max_batch, self.sc.max_prompt
-        toks_np = np.zeros((bsz, sp), np.int32)
-        lens_np = np.zeros((bsz,), np.int32)
-        for slot, req in placed:
-            self.slots[slot] = req
-            toks_np[slot, :len(req.prompt)] = req.prompt
-            lens_np[slot] = len(req.prompt)
-        self.peak_active = max(
-            self.peak_active, sum(s is not None for s in self.slots))
-        toks, lens = jnp.asarray(toks_np), jnp.asarray(lens_np)
-        if self.sc.paged:
-            logits, self.cache = self._prefill(self.params, self.cache,
-                                               toks, lens, self._pages_dev())
-        else:
-            logits, self.cache = self._prefill(self.params, self.cache,
-                                               toks, lens)
-        firsts = np.asarray(self._sample(logits))
-        for slot, req in placed:
-            first = int(firsts[slot])
-            self.positions[slot] = len(req.prompt)
-            self.last_token[slot] = first
-            req.out_tokens.append(first)    # the post-prompt prediction
-            if first == self.sc.eos_id or \
-                    len(req.out_tokens) >= self.sc.max_new_tokens:
-                self._finish(slot)
+        if placed:
+            self.peak_active = max(self.peak_active,
+                                   len(self.sched.active()))
+            self._apply_copies(copies)
+            self._prefill_tick()    # new slots' first chunk + resumed ones
         return len(placed)
+
+    def warmup(self) -> None:
+        """Compile the jitted prefill (both traces: fresh and resumed)
+        and decode steps at their serving shapes with no-op dispatches —
+        zero lengths, every slot inactive, so no cache row is written and
+        nothing is admitted.  Benchmarks call this so TTFT measures
+        serving latency, not XLA compilation."""
+        bsz, sp = self.sc.max_batch, self.sc.max_prompt
+        z_tok = jnp.zeros((bsz, sp), jnp.int32)
+        z_len = jnp.zeros((bsz,), jnp.int32)
+        one = jnp.zeros((bsz, 1), jnp.int32)
+        inactive = jnp.full((bsz,), -1, jnp.int32)
+        if self.sc.paged:
+            _, self.cache = self._prefill(self.params, self.cache, z_tok,
+                                          z_len, self._pages_dev(), None)
+            _, self.cache = self._prefill(self.params, self.cache, z_tok,
+                                          z_len, self._pages_dev(), z_len)
+            lg, self.cache = self._decode(self.params, self.cache, one,
+                                          inactive, self._pages_dev())
+        else:
+            _, self.cache = self._prefill(self.params, self.cache, z_tok,
+                                          z_len)
+            lg, self.cache = self._decode(self.params, self.cache, one,
+                                          inactive)
+        jax.block_until_ready(lg)
 
     def admit(self, req: Request) -> bool:
         """Single-request admission (compat shim over the batched path).
@@ -355,6 +369,76 @@ class ServingEngine:
         rejected — check ``req.done``/``req.failed`` before retrying."""
         return self.admit_many([req]) == 1
 
+    # -- resumable chunked prefill ------------------------------------------
+    def _prefill_tick(self) -> None:
+        """ONE chunked-prefill dispatch for every slot owing prompt rows:
+        fresh admissions fill [0, chunk), resumed slots [done, done+chunk).
+        Slots whose prompt completes this tick sample their first token."""
+        work = self.sched.prefill_plan()
+        if not work:
+            return
+        self._prefilled_since_step = True
+        bsz, sp, ps = self.sc.max_batch, self.sc.max_prompt, self.sc.page_size
+        if self.sc.paged:
+            copies = []
+            for slot, off, toks in work:
+                # COW barrier + page-granular write coverage for the rows
+                # this chunk writes (TLB refills are counted, true misses
+                # fault before any cache mutation).
+                for j in range(off // ps, (off + len(toks) - 1) // ps + 1):
+                    cp = self.alloc.privatize(slot, j)
+                    if cp is not None:
+                        copies.append(cp)
+                    self.alloc.check_write(slot, j * ps, ps,
+                                           strict=self.sc.strict_iotlb)
+            self._apply_copies(copies)
+        toks_np = np.zeros((bsz, sp), np.int32)
+        lens_np = np.zeros((bsz,), np.int32)
+        offs_np = np.zeros((bsz,), np.int32)
+        for slot, off, toks in work:
+            toks_np[slot, :len(toks)] = toks
+            lens_np[slot] = len(toks)
+            offs_np[slot] = off
+        toks, lens = jnp.asarray(toks_np), jnp.asarray(lens_np)
+        if self.sc.paged:
+            # all-fresh waves (the common case) pass offsets=None — a
+            # separate trace of the same jitted step that keeps the
+            # single-pass chunk kernel instead of the full-window gather.
+            offs = jnp.asarray(offs_np) if offs_np.any() else None
+            logits, self.cache = self._prefill(
+                self.params, self.cache, toks, lens, self._pages_dev(),
+                offs)
+        else:
+            logits, self.cache = self._prefill(self.params, self.cache,
+                                               toks, lens)
+        # sample only when some prompt completes this tick: intermediate
+        # chunks discard their logits, and at temperature > 0 sampling
+        # consumes PRNG key state, so ticks that emit nothing must not
+        # burn splits.  (The engine-wide key still makes sampled streams
+        # depend on co-admission order in mixed waves; fully
+        # schedule-independent sampling needs per-request keys — the
+        # greedy path, which every equivalence test uses, is exact.)
+        finishes = any(
+            off + len(toks) >= len(self.sched.slots[slot].req.prompt)
+            for slot, off, toks in work)
+        firsts = np.asarray(self._sample(logits)) if finishes else None
+        lg_np = np.asarray(logits) if self.sc.record_logits else None
+        for slot, off, chunk_toks in work:
+            meta = self.sched.slots[slot]
+            meta.prefill_done = off + len(chunk_toks)
+            if not meta.prefilled:
+                continue            # more chunks to come; logits discarded
+            req = meta.req
+            first = int(firsts[slot])
+            self.positions[slot] = len(req.prompt)
+            self.last_token[slot] = first
+            req.out_tokens.append(first)    # the post-prompt prediction
+            if lg_np is not None:
+                req.logits.append(lg_np[slot].copy())
+            if first == self.sc.eos_id or \
+                    len(req.out_tokens) >= self.sc.max_new_tokens:
+                self._finish(slot)
+
     def _sample(self, logits):
         logits = logits.astype(jnp.float32)
         if self.sc.temperature <= 0:
@@ -363,50 +447,171 @@ class ServingEngine:
         return jax.random.categorical(k, logits / self.sc.temperature)
 
     def _finish(self, slot: int):
-        req = self.slots[slot]
+        req = self.sched.slots[slot].req
         req.done = True
         self.completed.append(req)
-        self.slots[slot] = None     # release slot
+        self.sched.release(slot)    # release slot
         if self.sc.paged:
-            self._release_pages(slot)   # pages return to the shared pool
+            self.alloc.release_slot(slot)   # refs return to the pool
+
+    # -- device <-> host page movement --------------------------------------
+    def _map_cache(self, fn_pool, fn_slot):
+        """Rebuild the cache pytree, applying ``fn_pool`` to shared page
+        pools and ``fn_slot`` to per-slot state leaves."""
+        flat, treedef = jax.tree.flatten(self.cache)
+        out = [fn_pool(leaf) if pooled else fn_slot(leaf)
+               for leaf, pooled in zip(flat, self._pooled)]
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
+        """Apply allocator COW copies (src phys -> dst phys) on device."""
+        if not copies:
+            return
+        src = jnp.asarray([c[0] for c in copies], jnp.int32)
+        dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+        self._map_cache(lambda leaf: leaf.at[:, dst].set(leaf[:, src]),
+                        lambda leaf: leaf)
+        self.n_cow_copies += len(copies)
+
+    def _swap_out(self, slot: int) -> None:
+        """Preempt ``slot``: snapshot its pages + recurrent state to host,
+        release its pages, and park it on the swap queue."""
+        meta = self.sched.slots[slot]
+        req = meta.req
+        n_mapped = self.alloc.mapped_count(slot)
+        phys = np.asarray(
+            [int(p) for p in self.alloc.page_table[slot, :n_mapped]])
+        flat, _ = jax.tree.flatten(self.cache)
+        pool_rows = [np.asarray(leaf[:, phys]) for leaf, pooled
+                     in zip(flat, self._pooled) if pooled]
+        slot_rows = [np.asarray(leaf[:, slot]) for leaf, pooled
+                     in zip(flat, self._pooled) if not pooled]
+        self.sched.swapped.append(SwappedRequest(
+            req=req, prefill_done=meta.prefill_done, order=meta.order,
+            pos=int(self.positions[slot]),
+            last_token=int(self.last_token[slot]),
+            n_pages=n_mapped, n_max=self._max_pages(req),
+            growth_due=int(self.alloc.growth_due[slot]),
+            pool_rows=pool_rows, slot_rows=slot_rows))
+        self.alloc.release_slot(slot)
+        self.sched.release(slot)
+        req.preempts += 1
+        self.n_preemptions += 1
+
+    def _swap_in(self, slot: int, sw: SwappedRequest) -> None:
+        """Re-admit a swapped request: fresh pages, exact bytes back."""
+        for j in range(sw.n_pages):
+            claimed = self.alloc.alloc(slot, j)
+            assert claimed, "swap-in pages were vetted in _swap_in_ready"
+        phys = jnp.asarray(
+            [int(p) for p in self.alloc.page_table[slot, :sw.n_pages]],
+            jnp.int32)
+        pool_it = iter(sw.pool_rows)
+        slot_it = iter(sw.slot_rows)
+        self._map_cache(
+            lambda leaf: leaf.at[:, phys].set(
+                jnp.asarray(next(pool_it), leaf.dtype)),
+            lambda leaf: leaf.at[:, slot].set(
+                jnp.asarray(next(slot_it), leaf.dtype)))
+        if self.sc.reserve_decode_pages:
+            self.alloc.growth_due[slot] = sw.growth_due
+        self.positions[slot] = sw.pos
+        self.last_token[slot] = sw.last_token
+        self.sched.place(slot, sw.req, prefill_done=sw.prefill_done,
+                         order=sw.order)
+        self.peak_active = max(self.peak_active, len(self.sched.active()))
+        self.n_swap_ins += 1
+
+    def _swap_in_ready(self) -> None:
+        """Re-admit swapped requests (FIFO) while slots and pages allow:
+        mapped pages to restore, plus one growth page of headroom so the
+        next decode tick makes progress instead of re-thrashing."""
+        while self.sched.swapped and self.sched.free_slots():
+            sw = self.sched.swapped[0]
+            need = sw.n_pages + (sw.growth_due if
+                                 self.sc.reserve_decode_pages
+                                 else int(sw.n_pages < sw.n_max))
+            if need > self.alloc.reserved_free():
+                break
+            self.sched.swapped.pop(0)
+            self._swap_in(self.sched.free_slots()[0], sw)
 
     # -- steady-state decode tick -------------------------------------------
     def _grow_pages(self, active: List[int]) -> None:
         """Map the page covering each active slot's next write row (decode
         crosses a page boundary every ``page_size`` ticks).  Exhaustion
         mid-decode — reachable only when ``reserve_decode_pages`` is off
-        (overcommit) — is a capacity fault: the request is terminated with
-        its partial output (``failed=True``), and strict mode raises."""
+        (overcommit) — triggers ``ServeConfig.preemption``: swap out the
+        youngest other resident request and retry, or (no viable victim /
+        preemption='terminate') a capacity fault that ends the request
+        with its partial output (strict mode raises)."""
         ps = self.sc.page_size
+        cow: List[Tuple[int, int]] = []
         for i in active:
+            meta = self.sched.slots[i]
+            if meta is None:        # swapped out by an earlier iteration
+                continue
             wr = int(self.positions[i])     # this tick's cache write row
             j = wr // ps
-            if self.page_table[i, j] < 0 and self._alloc_page(i, j):
-                # a reserved page materialized: shrink the reservation.
-                self._growth_due[i] = max(0, int(self._growth_due[i]) - 1)
-            elif self.page_table[i, j] < 0:
-                self.iotlb.faults.append(FaultRecord(
-                    "capacity", i * self._slot_span + wr, 1, True))
-                req = self.slots[i]
-                req.failed = True
-                self._finish(i)
-                if self.sc.strict_iotlb:
-                    raise IotlbFault(
-                        "capacity", f"request {req.rid}: page pool "
-                        f"exhausted growing row {wr}")
-                continue
+            if self.alloc.page_table[i, j] < 0:
+                grown = self.alloc.alloc(i, j)
+                while not grown and self.sc.preemption == "swap":
+                    v = self.sched.victim(exclude=i)
+                    if v is None or not self._swappable(v):
+                        break
+                    self._swap_out(v)
+                    grown = self.alloc.alloc(i, j)
+                if grown:
+                    # a reserved page materialized: shrink the reservation.
+                    self.alloc.growth_due[i] = max(
+                        0, int(self.alloc.growth_due[i]) - 1)
+                else:
+                    self.iotlb.faults.append(FaultRecord(
+                        "capacity", i * self._slot_span + wr, 1, True))
+                    req = meta.req
+                    req.failed = True
+                    self._finish(i)
+                    if self.sc.strict_iotlb:
+                        raise IotlbFault(
+                            "capacity", f"request {req.rid}: page pool "
+                            f"exhausted growing row {wr}")
+                    continue
+            else:
+                # COW barrier: decode never writes a page another slot
+                # still references.  (Unreachable by construction today —
+                # shared pages lie strictly inside both parties' prompt
+                # regions, decode writes at rows >= len(prompt) — kept as
+                # defense in depth; copies batch into one dispatch below.)
+                cp = self.alloc.privatize(i, j)
+                if cp is not None:
+                    cow.append(cp)
             # page-granular write check for this tick's row: a row past
             # the slot's mapped pages faults AT THE PAGE BOUNDARY here
             # rather than silently landing inside a whole-slot window.
-            self.iotlb.translate(i * self._slot_span + wr, 1, write=True,
-                                 strict=self.sc.strict_iotlb)
+            self.alloc.check_write(i, wr, 1, strict=self.sc.strict_iotlb)
+        self._apply_copies(cow)
+
+    def _swappable(self, slot: int) -> bool:
+        """A victim must be re-admittable later: its mapped pages (plus a
+        growth page if it is not fully grown) have to fit the pool."""
+        meta = self.sched.slots[slot]
+        n_mapped = self.alloc.mapped_count(slot)
+        return n_mapped + int(n_mapped < self._max_pages(meta.req)) \
+            <= self.num_pages
 
     def step(self):
-        """One decode tick for all active slots (per-slot positions)."""
+        """One engine tick: advance any unfinished prefill by one chunk
+        (unless this tick's admission wave already did), then one decode
+        step for every prompt-complete slot — at most ONE prefill and ONE
+        decode dispatch per tick."""
+        if self.sc.paged and self.sched.has_prefill_work() \
+                and not self._prefilled_since_step:
+            self._prefill_tick()
+        self._prefilled_since_step = False
         if self.sc.paged:
-            self._grow_pages(
-                [i for i, s in enumerate(self.slots) if s is not None])
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+            self._grow_pages(self.sched.decode_slots())
+        active = self.sched.decode_slots()
+        self.active_ticks += len(active)
         if not active:
             return
         # host-side staging: ONE mask/position build + one transfer per
@@ -423,14 +628,17 @@ class ServingEngine:
             logits, self.cache = self._decode(self.params, self.cache, toks,
                                               pos_v)
         nxt = np.asarray(self._sample(logits))
+        lg_np = np.asarray(logits) if self.sc.record_logits else None
         self.last_token = np.where(mask_np, nxt,
                                    self.last_token).astype(np.int32)
         self.positions = np.where(mask_np, self.positions + 1,
                                   self.positions).astype(np.int32)
         for i in active:
-            req = self.slots[i]
+            req = self.sched.slots[i].req
             tok = int(nxt[i])
             req.out_tokens.append(tok)
+            if lg_np is not None:
+                req.logits.append(lg_np[i].copy())
             if tok == self.sc.eos_id or \
                     len(req.out_tokens) >= self.sc.max_new_tokens:
                 self._finish(i)
@@ -441,7 +649,7 @@ class ServingEngine:
         with ``failed=True`` and no output tokens)."""
         start = len(self.completed)
         pending = list(requests)
-        while pending or any(s is not None for s in self.slots):
+        while pending or self.sched.active() or self.sched.swapped:
             self.admit_many(pending)
             self.step()
         return self.completed[start:]

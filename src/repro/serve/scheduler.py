@@ -1,0 +1,146 @@
+"""Serving scheduler: admission, chunk budgeting, preemption, sharing.
+
+This is the POLICY layer of the serving stack (allocator = accounting,
+engine = execution).  It owns the slot table's request metadata and
+decides, without touching device state:
+
+  * which slots still owe PREFILL work and which tokens each gets next
+    tick (``prefill_plan`` — resumable chunked prefill: a prompt longer
+    than ``chunk`` fills ``chunk`` rows per dispatch, interleaved with
+    the decode ticks of already-filled slots),
+  * which slots are DECODE-ready (``decode_slots``),
+  * who gets PREEMPTED when overcommit exhausts the pool mid-decode
+    (``victim``: the youngest resident request — vLLM's policy — so the
+    oldest work finishes first and re-admission is FIFO via the swap
+    queue), and
+  * where a new prompt can start from a SHARED PREFIX
+    (``shared_prefix``: the resident request with the longest common
+    prompt prefix whose rows are already materialized).
+
+The engine executes these decisions; the allocator accounts for them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+from repro.serve.config import Request
+
+
+@dataclasses.dataclass
+class SlotMeta:
+    """Scheduler-side state of one occupied slot."""
+    req: Request
+    prefill_done: int           # prompt rows materialized so far
+    order: int                  # admission sequence number (larger=younger)
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_done >= len(self.req.prompt)
+
+
+@dataclasses.dataclass
+class SwappedRequest:
+    """A preempted request parked in host memory until re-admission.
+
+    The engine snapshots the slot's device state (page contents +
+    per-slot recurrent rows) at swap-out and restores it bit-for-bit at
+    swap-in, so preemption is invisible in the logits."""
+    req: Request
+    prefill_done: int
+    order: int
+    pos: int                    # next cache write row (decode position)
+    last_token: int
+    n_pages: int                # mapped logical pages at swap-out
+    n_max: int                  # worst-case pages it could ever need
+    growth_due: int
+    pool_rows: List[Any]        # per pooled cache leaf: (n_pages, ps, ...)
+    slot_rows: List[Any]        # per slot cache leaf: that slot's row
+
+
+class Scheduler:
+    def __init__(self, max_batch: int, chunk: int):
+        self.chunk = chunk
+        self.slots: List[Optional[SlotMeta]] = [None] * max_batch
+        self.swapped: List[SwappedRequest] = []
+        self._order = 0
+
+    # -- slot table ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def requests(self) -> List[Optional[Request]]:
+        return [None if s is None else s.req for s in self.slots]
+
+    def place(self, slot: int, req: Request, prefill_done: int = 0,
+              order: Optional[int] = None) -> SlotMeta:
+        if order is None:
+            order = self._order
+            self._order += 1
+        meta = SlotMeta(req=req, prefill_done=prefill_done, order=order)
+        self.slots[slot] = meta
+        return meta
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    # -- chunk budgeting ----------------------------------------------------
+    def prefill_plan(self) -> List[Tuple[int, int, List[int]]]:
+        """(slot, start_row, tokens) for every slot still owing prefill:
+        the next ``chunk`` unfilled prompt tokens each."""
+        plan = []
+        for i, meta in enumerate(self.slots):
+            if meta is None or meta.prefilled:
+                continue
+            off = meta.prefill_done
+            toks = meta.req.prompt[off:off + self.chunk]
+            plan.append((i, off, toks))
+        return plan
+
+    def has_prefill_work(self) -> bool:
+        return any(s is not None and not s.prefilled for s in self.slots)
+
+    def decode_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilled]
+
+    # -- preemption policy --------------------------------------------------
+    def victim(self, exclude: int) -> Optional[int]:
+        """Youngest resident slot other than ``exclude``, or None."""
+        best = None
+        for i, meta in enumerate(self.slots):
+            if meta is None or i == exclude:
+                continue
+            if best is None or meta.order > self.slots[best].order:
+                best = i
+        return best
+
+    # -- prefix sharing -----------------------------------------------------
+    def shared_prefix(self, prompt: List[int],
+                      page_size: int) -> Tuple[Optional[int], int]:
+        """(resident slot, shareable rows) with the longest materialized
+        common prompt prefix; (None, 0) when nothing reaches a full page.
+
+        Shareable rows are capped at ``len(prompt) - 1`` so the new
+        request always prefills at least its last prompt token (the
+        post-prompt logits have to come from somewhere), and at the
+        resident's ``prefill_done`` (only materialized rows are real)."""
+        best, best_rows = None, 0
+        for i, meta in enumerate(self.slots):
+            if meta is None:
+                continue
+            other = meta.req.prompt
+            lcp = 0
+            for a, b in zip(prompt, other):
+                if a != b:
+                    break
+                lcp += 1
+            rows = min(lcp, meta.prefill_done, len(prompt) - 1)
+            if rows > best_rows:
+                best, best_rows = i, rows
+        if best_rows < page_size:       # nothing whole-page shareable
+            return None, 0
+        return best, best_rows

@@ -175,10 +175,21 @@ def make_paged_decode_step(cfg: ArchConfig):
 
 
 def make_paged_chunked_prefill_step(cfg: ArchConfig):
-    """Chunked prefill into a PAGED cache; see make_paged_decode_step."""
-    def prefill(params, cache, tokens, lengths, pages):
+    """RESUMABLE chunked prefill into a PAGED cache.
+
+    ``offsets`` is the (B,) start row of each slot's chunk: tokens sit at
+    cache rows [offset, offset + length) and attend over the cached
+    history [0, offset) too, so a prompt longer than one chunk fills
+    across several dispatches interleaved with decode (continuous
+    batching).  An ALL-fresh wave passes offsets=None (a distinct jit
+    trace of the same callable) and keeps the cheaper single-pass chunk
+    kernel — no full-window gather.  Returns each slot's
+    LAST-valid-token logits — the post-prompt prediction when this chunk
+    finishes the prompt, intermediate (discarded) logits otherwise."""
+    def prefill(params, cache, tokens, lengths, pages, offsets):
         logits, cache, _ = forward(params, tokens, cfg, cache=cache,
-                                   mode="chunk", pos=lengths, pages=pages)
+                                   mode="chunk", pos=lengths, pages=pages,
+                                   offset=offsets)
         last = jnp.take_along_axis(
             logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
         return last[:, 0, :], cache

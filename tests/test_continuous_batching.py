@@ -1,0 +1,326 @@
+"""Continuous-batching seams: resumable prefill, preemption, sharing, TLB.
+
+The refactored serving stack (scheduler / allocator / executor) must be
+pure addressing: multi-chunk prefill, preempt-then-swap-in, and prefix
+sharing all produce logits BIT-identical to the single-pass, never
+preempted, unshared execution of the same requests.  Plus the hardware
+side: the IOTLB is capped at the silicon block's 32 entries and refills
+like a TLB, and ServeConfig rejects bad geometry by field name.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.iotlb import IotlbFault, PagedIotlb, Window
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.allocator import PageAllocator
+
+# reduced configs per cache family; f32 (oracle comparisons), ssm_chunk=4
+# so the internal scan boundaries of a 4-token serve chunk and of one big
+# chunk coincide (bit-exactness needs identical chunk decompositions).
+FAMILY_CFGS = {
+    "dense": ArchConfig(
+        name="cb", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=100, decode_margin=32,
+        dtype=jnp.float32),
+    "moe": ArchConfig(
+        name="cb_moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=0, vocab_size=100, n_experts=4, top_k=2,
+        d_ff_expert=64, capacity_factor=8.0, decode_margin=32,
+        dtype=jnp.float32),
+    "mla": ArchConfig(
+        name="cb_mla", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, kv_lora_rank=32,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, decode_margin=32,
+        pattern=(("scan", "mla_mlp", 2),), dtype=jnp.float32),
+    "ssm": ArchConfig(
+        name="cb_ssm", family="ssm", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, ssm_state=16,
+        ssm_headdim=32, ssm_chunk=4, decode_margin=32,
+        pattern=(("scan", "mamba", 2),), dtype=jnp.float32),
+    "xlstm": ArchConfig(
+        name="cb_xlstm", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=100, ssm_chunk=4,
+        decode_margin=32, pattern=(("scan", "mlstm", 1),
+                                   ("scan", "slstm", 1)),
+        dtype=jnp.float32),
+    "hybrid": ArchConfig(
+        name="cb_hyb", family="hybrid", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=100, ssm_state=16,
+        ssm_headdim=32, ssm_chunk=4, decode_margin=32,
+        pattern=(("group", (("mamba", 1), ("shared_attn", 1)), 2),),
+        dtype=jnp.float32),
+}
+GQA = FAMILY_CFGS["dense"]
+
+
+def _serve(cfg, params, sc, prompts, rid0=0):
+    eng = ServingEngine(cfg, params, sc)
+    out = eng.run([Request(rid0 + i, list(p)) for i, p in
+                   enumerate(prompts)])
+    return {r.rid - rid0: r for r in out}, eng
+
+
+def _assert_same_outputs(got, ref):
+    assert sorted(got) == sorted(ref)
+    for rid in ref:
+        assert not got[rid].failed and not ref[rid].failed, rid
+        assert got[rid].out_tokens == ref[rid].out_tokens, rid
+        assert len(got[rid].logits) == len(ref[rid].logits), rid
+        for a, b in zip(got[rid].logits, ref[rid].logits):
+            np.testing.assert_array_equal(a, b, err_msg=f"rid {rid}")
+
+
+# -- resumable chunked prefill ----------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CFGS))
+def test_resumable_prefill_bit_exact_all_families(family):
+    """A prompt longer than one chunk, served across several prefill
+    ticks interleaved with decode, emits logits BIT-identical to the
+    single-chunk engine — for every block family."""
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5, 7, 11, 2, 9, 4, 1, 8, 3, 6, 2], [3, 1, 4, 1, 5, 9]]
+    base = dict(max_batch=2, max_new_tokens=4, max_seq=24, page_size=4,
+                record_logits=True)
+    ref, _ = _serve(cfg, params,
+                    ServeConfig(max_prompt=16, **base), prompts)
+    eng = ServingEngine(cfg, params, ServeConfig(max_prompt=4, **base))
+    calls = []
+    orig = eng._prefill
+    eng._prefill = lambda *a: (calls.append(1), orig(*a))[1]
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    got = {r.rid: r for r in out}
+    assert len(calls) > 1, "11-token prompt must take several 4-row chunks"
+    _assert_same_outputs(got, ref)
+
+
+def test_resumable_prefill_interleaves_with_decode():
+    """While a long prompt is mid-prefill, an already-admitted request
+    keeps decoding — prefill ticks do not stall the decode loop."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    sc = ServeConfig(max_batch=2, max_prompt=4, max_new_tokens=6,
+                     max_seq=24, page_size=4)
+    eng = ServingEngine(GQA, params, sc)
+    short = Request(0, [5, 7, 3])
+    long = Request(1, list(range(2, 13)))       # 11 tokens = 3 chunks
+    eng.admit_many([short, long])               # both placed, chunk 1 each
+    assert eng.sched.has_prefill_work()         # long still owes rows
+    before = len(short.out_tokens)
+    eng.step()                                  # prefill tick + decode tick
+    assert len(short.out_tokens) > before       # short decoded meanwhile
+    out = eng.run([])
+    assert {r.rid for r in out} | {short.rid} == {0, 1}
+    assert not long.failed and len(long.out_tokens) == 6
+
+
+# -- preemption / swap ------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+def test_preempt_swap_in_bit_exact(family):
+    """Overcommit exhaustion mid-decode swaps the youngest request out
+    (pages + recurrent state to host) and back in, with logits
+    bit-identical to an un-preempted run — no request is lost."""
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9]]
+    base = dict(max_batch=2, max_prompt=8, max_new_tokens=8, page_size=4,
+                record_logits=True)
+    # roomy pool, no overcommit: the un-preempted reference.
+    ref, ref_eng = _serve(cfg, params, ServeConfig(**base), prompts)
+    assert ref_eng.n_preemptions == 0
+    # 5-page pool: both admit (2+2 claim pages) but worst-case growth
+    # needs 4+4 — decode must preempt.
+    sc = ServeConfig(num_pages=5, reserve_decode_pages=False, **base)
+    got, eng = _serve(cfg, params, sc, prompts)
+    assert eng.n_preemptions > 0 and eng.n_swap_ins > 0
+    assert any(r.preempts > 0 for r in got.values())
+    assert not eng.iotlb.faults, "preemption must replace capacity faults"
+    _assert_same_outputs(got, ref)
+    assert len(eng._free_pages) == eng.num_pages    # nothing leaked
+
+
+def test_preemption_terminate_mode_keeps_old_lossy_behavior():
+    """preemption='terminate' reproduces the pre-swap behavior: the
+    growing request dies with a capacity fault and partial output."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    sc = ServeConfig(max_batch=2, max_prompt=8, max_new_tokens=8,
+                     page_size=4, num_pages=5, reserve_decode_pages=False,
+                     strict_iotlb=False, preemption="terminate")
+    got, eng = _serve(GQA, params, sc,
+                      [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9]])
+    assert eng.n_preemptions == 0
+    assert any(r.failed for r in got.values())
+    assert any(f.kind == "capacity" for f in eng.iotlb.faults)
+
+
+def test_swap_queue_drains_before_fresh_admissions():
+    """A swapped-out request re-enters before new pending work: fresh
+    admissions defer while preempted work waits for pages."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    sc = ServeConfig(max_batch=2, max_prompt=8, max_new_tokens=8,
+                     page_size=4, num_pages=5, reserve_decode_pages=False)
+    eng = ServingEngine(GQA, params, sc)
+    out = eng.run([Request(i, [5 + i, 7, 11, 2, 9, 4]) for i in range(4)])
+    assert eng.n_preemptions > 0
+    assert all(not r.failed and len(r.out_tokens) == 8 for r in out)
+    assert len(eng._free_pages) == eng.num_pages
+
+
+# -- prefix sharing ---------------------------------------------------------
+
+def test_prefix_sharing_cow_isolation():
+    """Two prompts with a common prefix share physical pages (refcounted)
+    with copy-on-write at the divergent page: fewer pages in use, and
+    each request's tokens/logits are bitwise what it gets served ALONE —
+    writes through one slot's table never reach a sharer's logits."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    prefix = [5, 7, 11, 2, 9, 4]
+    pa = prefix + [1, 8]                  # A: 8 tokens
+    pb = prefix + [3, 6]                  # B: diverges at row 6
+    base = dict(max_batch=2, max_prompt=16, max_new_tokens=4, page_size=4,
+                record_logits=True)
+    ref_a, _ = _serve(GQA, params, ServeConfig(**base), [pa])
+    ref_b, _ = _serve(GQA, params, ServeConfig(**base), [pb])
+
+    eng = ServingEngine(GQA, params, ServeConfig(**base))
+    a, b = Request(0, list(pa)), Request(1, list(pb))
+    eng.admit_many([a])                   # A resident, prompt materialized
+    used_before = eng.pages_in_use()
+    eng.admit_many([b])                   # B shares A's page 0, COWs page 1
+    assert eng.n_shared_admissions == 1 and eng.n_cow_copies >= 1
+    shared_phys = int(eng.page_table[0, 0])
+    assert int(eng.page_table[1, 0]) == shared_phys     # same physical page
+    assert int(eng.alloc.refcount[shared_phys]) == 2
+    assert int(eng.page_table[1, 1]) != int(eng.page_table[0, 1])  # COW'd
+    assert eng.pages_in_use() < 2 * used_before         # sharing saved pages
+    out = {r.rid: r for r in eng.run([])}
+    assert out[0].out_tokens == ref_a[0].out_tokens
+    assert out[1].out_tokens == ref_b[0].out_tokens
+    for got, ref in ((out[0], ref_a[0]), (out[1], ref_b[0])):
+        for x, y in zip(got.logits, ref.logits):
+            np.testing.assert_array_equal(x, y)
+    assert len(eng._free_pages) == eng.num_pages        # refcounts drained
+
+
+def test_prefix_sharing_survives_sharer_release():
+    """The resident request finishing first must not free pages a sharer
+    still references (refcounts, not ownership)."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    prefix = [5, 7, 11, 2]
+    sc = ServeConfig(max_batch=2, max_prompt=16, max_new_tokens=6,
+                     page_size=4, record_logits=True)
+    ref_b, _ = _serve(GQA, params, sc, [prefix + [9, 4, 1, 8]])
+    eng = ServingEngine(GQA, params, sc)
+    first = Request(0, list(prefix) + [2, 2])         # admitted a tick early
+    second = Request(1, list(prefix) + [9, 4, 1, 8])  # shares, outlives it
+    eng.admit_many([first])
+    eng.admit_many([second])
+    assert eng.n_shared_admissions == 1
+    out = {r.rid: r for r in eng.run([])}
+    assert out[0].done and out[1].done
+    # `first` finished a tick earlier (admitted earlier), releasing its
+    # table refs while `second` still pointed at the shared page.
+    assert out[1].out_tokens == ref_b[0].out_tokens
+    for x, y in zip(out[1].logits, ref_b[0].logits):
+        np.testing.assert_array_equal(x, y)
+    assert len(eng._free_pages) == eng.num_pages
+
+
+def test_prefix_sharing_disabled_for_recurrent_families():
+    """Recurrent state cannot be inherited from a sharer: hybrid models
+    must never engage page sharing even with identical prefixes."""
+    cfg = FAMILY_CFGS["hybrid"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_batch=2, max_prompt=16, max_new_tokens=3, page_size=4))
+    assert not eng._can_share
+    out = eng.run([Request(0, [5, 7, 11, 2, 9, 4, 1, 8]),
+                   Request(1, [5, 7, 11, 2, 9, 4, 3, 6])])
+    assert eng.n_shared_admissions == 0
+    assert all(not r.failed for r in out)
+
+
+# -- allocator unit behavior ------------------------------------------------
+
+def test_allocator_refcount_share_privatize_release():
+    al = PageAllocator(num_pages=4, page_size=4, max_batch=2,
+                       pages_per_slot=2)
+    assert al.alloc(0, 0) and al.alloc(0, 1)
+    al.share(1, 0, int(al.page_table[0, 0]))
+    assert int(al.refcount[al.page_table[0, 0]]) == 2
+    assert al.privatize(0, 1) is None        # private page: no copy
+    src_dst = al.privatize(1, 0)             # shared page: COW
+    assert src_dst is not None
+    src, dst = src_dst
+    assert src == int(al.page_table[0, 0]) and dst == int(al.page_table[1, 0])
+    assert int(al.refcount[src]) == 1 and int(al.refcount[dst]) == 1
+    al.release_slot(0)
+    al.release_slot(1)
+    assert sorted(al.free_pages) == [0, 1, 2, 3]
+    assert (al.page_table == -1).all()
+
+
+# -- hardware-faithful IOTLB ------------------------------------------------
+
+def test_paged_iotlb_is_lru_tlb_over_page_table():
+    tlb = PagedIotlb(max_entries=2)
+    for i in range(3):
+        tlb.map(Window(f"p{i}", virt_base=i * 4, size=4, phys_base=i * 4))
+    assert tlb.translate(0, 4, write=True) == (0, 4)    # refill p0
+    assert tlb.translate(4, 4, write=True) == (4, 4)    # refill p1
+    assert tlb.stats.refills == 2 and tlb.stats.evictions == 0
+    assert tlb.translate(0, 1, write=False) is not None  # hit, touches p0
+    assert tlb.stats.hits == 1
+    assert tlb.translate(8, 4, write=True) == (8, 4)    # evicts LRU = p1
+    assert tlb.stats.evictions == 1 and tlb.resident == ("p0", "p2")
+    assert tlb.refill_log[-1].name == "p2"
+    assert tlb.refill_log[-1].evicted == "p1"
+    # a miss on the BACKING table is a real fault, not a refill.
+    assert tlb.translate(100, 4, write=True, strict=False) is None
+    assert tlb.faults[-1].kind == "miss"
+    with pytest.raises(IotlbFault):
+        tlb.translate(100, 4, write=True)
+
+
+def test_engine_iotlb_capped_at_32_entries_with_refills():
+    """A pool larger than 32 pages serves fine: the 32 resident entries
+    refill from the page table instead of faulting (the pre-refactor
+    engine silently sized the 'silicon' block to the pool)."""
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=6, max_prompt=16, max_new_tokens=8, page_size=2,
+        num_pages=48))
+    out = eng.run([Request(i, [2 + i, 3, 5, 7, 9, 11, 13, 15])
+                   for i in range(8)])
+    assert all(not r.failed and len(r.out_tokens) == 8 for r in out)
+    assert eng.iotlb.max_entries == 32
+    assert len(eng.iotlb.resident) <= 32
+    assert eng.iotlb.stats.refills > 32     # refills, not pool-sized entries
+    assert not eng.iotlb.faults
+
+
+# -- ServeConfig validation -------------------------------------------------
+
+@pytest.mark.parametrize("kwargs, field", [
+    (dict(max_new_tokens=0), "max_new_tokens"),
+    (dict(max_batch=0), "max_batch"),
+    (dict(max_prompt=-1), "max_prompt"),
+    (dict(page_size=0), "page_size"),
+    (dict(num_pages=-2), "num_pages"),
+    (dict(pool_rows=33, page_size=16), "page_size"),
+    (dict(pool_rows=64, num_pages=4), "pool_rows"),
+    (dict(max_seq=4, max_new_tokens=8), "max_seq"),
+    (dict(temperature=-0.5), "temperature"),
+    (dict(preemption="retry"), "preemption"),
+])
+def test_serve_config_rejects_bad_geometry_by_field(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        ServeConfig(**kwargs)
+
+
+def test_serve_config_pool_rows_spells_num_pages():
+    sc = ServeConfig(pool_rows=64, page_size=16)
+    assert sc.num_pages == 4
