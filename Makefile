@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench-smoke bench-serve bench
+.PHONY: test smoke bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,6 +20,13 @@ bench-smoke:
 
 bench-serve:
 	$(PY) benchmarks/serve_throughput.py
+
+# end-to-end launcher pass on a reduced arch (CI): exercises the session
+# serve API (submit/stream/drain, priorities + deadlines) through the
+# CLI so the launcher path cannot silently rot.
+serve-demo:
+	$(PY) -m repro.launch.serve --arch stablelm-3b --reduce \
+		--requests 4 --max-batch 2 --max-new-tokens 6
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,8 +1,9 @@
 """Serve a small LM with PACKED sub-byte weights (the paper's formats).
 
 Shows the deployment transform (quantize_for_serving -> PackedWeight sub-
-byte payloads), the batched continuous-batching engine, and that w4a16
-greedy outputs track the bf16 reference.
+byte payloads), the SESSION serving API (submit -> RequestHandle, token
+streaming, priorities + TTFT deadlines, drain), and that w4a16 greedy
+outputs track the bf16 reference.
 
     PYTHONPATH=src python examples/quantized_serving.py
 """
@@ -53,10 +54,22 @@ def main():
 
     prompts = [[3, 14, 15, 92], [6, 53, 58], [2, 71, 82, 81, 8]]
     sc = ServeConfig(max_batch=2, max_prompt=16, max_new_tokens=8)
-    out_q = ServingEngine(cfg_q, qparams, sc).run(
-        [Request(i, p) for i, p in enumerate(prompts)])
-    for rq in out_q:
-        print(f"req {rq.rid}: prompt={rq.prompt} -> w4a16 {rq.out_tokens}")
+    eng = ServingEngine(cfg_q, qparams, sc)
+    # session API: submit() queues asynchronously and returns a handle;
+    # req 1 is the deadline-critical one and jumps the admission queue.
+    handles = [eng.submit(Request(i, p,
+                                  priority=1 if i == 1 else 0,
+                                  ttft_deadline=4 if i == 1 else None))
+               for i, p in enumerate(prompts)]
+    print("streaming req 1 (priority=1): ", end="", flush=True)
+    for tok in handles[1].stream():         # drives eng.tick() itself
+        print(tok, end=" ", flush=True)
+    print()
+    eng.drain()                              # finish the rest, close
+    for h in handles:
+        rq = h.req
+        print(f"req {rq.rid}: prompt={rq.prompt} -> w4a16 {rq.out_tokens}"
+              f"  [{h.status}, prio={rq.priority}, ttft={rq.ttft_ticks}t]")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""Serving launcher: batched requests against any assigned arch.
+"""Serving launcher: session-API requests against any assigned arch.
+
+Submits a mixed-priority batch through the session surface
+(``submit() -> RequestHandle``), streams the highest-priority request's
+tokens as decode ticks emit them, drains the rest, and reports per-
+request TTFT (in engine ticks) plus the scheduler's deadline ledger.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce \
       --quant w4a16 --requests 6
@@ -25,6 +30,9 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--ttft-deadline", type=int, default=8,
+                    help="deadline (engine ticks) stamped on the "
+                    "high-priority half of the requests")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -47,15 +55,43 @@ def main():
     key = jax.random.PRNGKey(1)
     reqs = []
     for i in range(args.requests):
-        key, k = jax.random.split(key)
-        n = int(jax.random.randint(k, (), 2, 9))
-        reqs.append(Request(i, [int(t) for t in jax.random.randint(
-            k, (n,), 0, cfg.vocab_size)]))
+        # independent keys for the length draw and the token draw —
+        # reusing one key correlates prompt length with its content.
+        key, k_len, k_tok = jax.random.split(key, 3)
+        n = int(jax.random.randint(k_len, (), 2, 9))
+        # odd rids are the deadline-critical class (navigation-style
+        # traffic); even rids are best-effort bulk work.
+        prio, deadline = (1, args.ttft_deadline) if i % 2 else (0, None)
+        reqs.append(Request(
+            i, [int(t) for t in jax.random.randint(k_tok, (n,), 0,
+                                                   cfg.vocab_size)],
+            priority=prio, ttft_deadline=deadline))
     eng = ServingEngine(cfg, params, ServeConfig(
         max_batch=args.max_batch, max_prompt=32,
         max_new_tokens=args.max_new_tokens))
-    for r in eng.run(reqs):
-        print(f"req {r.rid}: {len(r.prompt)} prompt -> {r.out_tokens}")
+    handles = [eng.submit(r) for r in reqs]
+
+    # stream the first high-priority request token by token (this drives
+    # engine ticks, so everything else keeps decoding underneath it)...
+    demo = next((h for h in handles if h.req.priority > 0), handles[0])
+    print(f"streaming req {demo.req.rid}: ", end="", flush=True)
+    for tok in demo.stream():
+        print(tok, end=" ", flush=True)
+    print()
+    # ...then finish the rest and close the engine.
+    eng.drain()
+
+    for h in handles:
+        r = h.req
+        tag = f" prio={r.priority}"
+        if r.ttft_deadline is not None:
+            tag += (f" ttft={r.ttft_ticks}t/"
+                    f"{r.ttft_deadline}t "
+                    f"{'MISS' if r.deadline_miss else 'hit'}")
+        print(f"req {r.rid}: {len(r.prompt)} prompt -> {r.out_tokens}"
+              f"  [{h.status}{tag}]")
+    print(f"deadline ledger: {eng.sched.deadline_hits} hit / "
+          f"{eng.sched.deadline_misses} miss")
 
 
 if __name__ == "__main__":

@@ -1,29 +1,49 @@
-"""Continuous-batching serving runtime, split scheduler/allocator/executor.
+"""Session-based continuous-batching serving runtime.
 
-The package is three modules with a one-way dependency chain and one
+The package is four modules with a one-way dependency chain and one
 concern each — the contract every change must preserve:
 
-  * :mod:`repro.serve.scheduler` — POLICY.  Owns request metadata per
-    slot, the swap queue, and every decision: admission order, which
-    prompt rows each slot prefills this tick (resumable chunked
-    prefill), which slots decode, who gets preempted (youngest first),
-    which resident prompt a new request may share a prefix with.  Never
-    touches pages or device state.
+  * :mod:`repro.serve.config` — the API surface's data types.
+    ``ServeConfig`` (pool geometry, preemption/sharing/swap-budget
+    knobs) and ``Request`` (now carrying ``priority`` and a tick-based
+    ``ttft_deadline``) validate themselves at construction, naming the
+    offending field.
+  * :mod:`repro.serve.scheduler` — POLICY.  Owns the PENDING QUEUE
+    (``submit()`` lands requests here; admission order is highest
+    priority first, FIFO within a class, head-of-line blocking on
+    transient page exhaustion so big high-priority work is never
+    starved by bypass), request metadata per slot, the swap queue and
+    its host-byte footprint, the deadline hit/miss ledger, and every
+    decision: which prompt rows each slot prefills this tick (resumable
+    chunked prefill), which slots decode, who gets preempted (lowest
+    priority first, youngest within a class), which resident prompt a
+    new request may share a prefix with.  Never touches pages or device
+    state.
   * :mod:`repro.serve.allocator` — ACCOUNTING.  Owns the physical page
     pool: free list, refcounted per-slot page tables (prefix sharing),
     copy-on-write barriers, worst-case growth reservations, and the
     hardware-faithful 32-entry LRU IOTLB over the page table.  Never
     decides policy and never touches device memory — COW hands the
     engine (src, dst) physical copies to apply.
-  * :mod:`repro.serve.engine` — EXECUTION.  Owns params, the device
-    cache, and the two jitted steps (offset-aware chunked prefill +
-    decode).  Each tick it asks the scheduler WHAT to run, the allocator
-    WHERE it lives, stages host-side in numpy, and dispatches at most
-    one prefill and one decode.  Also moves swapped request state
-    device<->host, bit-for-bit.
+  * :mod:`repro.serve.engine` — EXECUTION + the client session.
+    ``submit(req) -> RequestHandle`` queues a request asynchronously
+    (no slot or dispatch yet) and returns a handle exposing ``status``,
+    ``tokens_so_far``, an incremental ``stream()``, and a blocking
+    ``result()``.  ``tick()`` is the externally-drivable step and
+    guarantees: the serving clock advances by one, pending admissions
+    drain into free slots first (swapped work re-enters before fresh
+    submissions), and at most ONE chunked-prefill and ONE decode
+    dispatch are issued — so prefill of the next wave overlaps decode
+    of the current one.  ``run()`` is a thin submit-everything-then-
+    tick shim (the engine stays open); ``drain()`` finishes all
+    outstanding work and CLOSES the engine — ``submit()`` after
+    ``drain()`` raises RuntimeError.
 
 Every scheduling decision is pure addressing: logits are bit-identical
 to the single-pass, never-preempted, unshared execution of the same
-requests (tests/test_continuous_batching.py enforces this).
+requests (tests/test_continuous_batching.py, tests/test_session_api.py
+enforce this), and at uniform priority the session path reproduces the
+legacy batch path token for token.
 """
-from repro.serve.engine import Request, ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.config import Request, ServeConfig  # noqa: F401
+from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401

@@ -1,8 +1,9 @@
 """Serving configuration + request record.
 
-``ServeConfig`` validates itself at construction (``__post_init__``) so a
-bad pool geometry fails loudly at the API surface with the offending
-field named, instead of deep inside the allocator ticks later.
+``ServeConfig`` and ``Request`` validate themselves at construction
+(``__post_init__``) so a bad pool geometry or a malformed priority /
+deadline fails loudly at the API surface with the offending field named,
+instead of deep inside the allocator or scheduler ticks later.
 """
 from __future__ import annotations
 
@@ -56,10 +57,21 @@ class ServeConfig:
     # recurrent state cannot be inherited — and is pure addressing:
     # logits are unchanged.
     record_logits: bool = False     # keep per-token logits on each Request
+    swap_budget_bytes: Optional[int] = None
+    # Cap on host memory held by the swap queue (preempted requests park
+    # their page contents + recurrent state host-side).  None = unbounded
+    # (the pre-cap behavior).  When swapping a victim would push the
+    # queue past the budget, that victim is not swappable: the growing
+    # request takes the capacity-fault path instead (recorded as a
+    # ``swap_budget`` fault; strict mode raises), so the host never holds
+    # unbounded swapped state.
 
     def __post_init__(self):
         def bad(field, why):
             raise ValueError(f"ServeConfig.{field} {why}")
+        if self.swap_budget_bytes is not None and self.swap_budget_bytes <= 0:
+            bad("swap_budget_bytes", "must be positive (None = unbounded), "
+                f"got {self.swap_budget_bytes}")
         if self.max_batch <= 0:
             bad("max_batch", f"must be positive, got {self.max_batch}")
         if self.max_prompt <= 0:
@@ -109,6 +121,16 @@ class ServeConfig:
 class Request:
     rid: int
     prompt: List[int]
+    priority: int = 0
+    # Admission order and preemption victim selection are priority-aware:
+    # higher admits first (FIFO within a class), lower is preempted first.
+    # The default 0 everywhere degrades to pure FIFO / youngest-first —
+    # bit-identical to the pre-priority engine.
+    ttft_deadline: Optional[int] = None
+    # TTFT deadline in ENGINE TICKS from submission: the first token must
+    # be emitted within this many ``tick()`` calls.  Ticks, not wall
+    # clock, keep the accounting deterministic.  None = best-effort.
+    # The scheduler records the hit/miss; nothing is cancelled.
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     failed: bool = False            # rejected by IOTLB containment
@@ -116,3 +138,29 @@ class Request:
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
     # per-emitted-token logits rows, populated when
     # ServeConfig.record_logits (bit-exactness tests / debugging)
+    submit_seq: Optional[int] = None    # scheduler-stamped FIFO tie-break
+    submit_tick: Optional[int] = None   # engine tick at submit()
+    first_token_tick: Optional[int] = None  # engine tick of first token
+    deadline_miss: Optional[bool] = None
+    # None until resolved (or no deadline); then True/False.
+
+    def __post_init__(self):
+        def bad(field, why):
+            raise ValueError(f"Request.{field} {why}")
+        if isinstance(self.priority, bool) or \
+                not isinstance(self.priority, int):
+            bad("priority", f"must be an int, got {self.priority!r}")
+        if self.ttft_deadline is not None and (
+                isinstance(self.ttft_deadline, bool)
+                or not isinstance(self.ttft_deadline, int)
+                or self.ttft_deadline <= 0):
+            bad("ttft_deadline", "must be a positive int of engine ticks "
+                f"(None = no deadline), got {self.ttft_deadline!r}")
+
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        """Ticks from submission to first token; None until emitted (or
+        when the request never went through ``submit()``)."""
+        if self.first_token_tick is None or self.submit_tick is None:
+            return None
+        return self.first_token_tick - self.submit_tick

@@ -1,10 +1,11 @@
-"""Serving EXECUTOR: jitted dispatch + device data movement.
+"""Serving EXECUTOR: session API, jitted dispatch, device data movement.
 
 The serving stack is three layers with one owner per concern:
 
-  * ``scheduler.py`` — POLICY.  Admission order, per-tick chunk budgets
-    (resumable prefill), preemption victims, prefix matching, the swap
-    queue.  Pure host logic over request metadata.
+  * ``scheduler.py`` — POLICY.  The pending queue (priority-ordered
+    admission), per-tick chunk budgets (resumable prefill), preemption
+    victims, prefix matching, the swap queue, the deadline ledger.  Pure
+    host logic over request metadata.
   * ``allocator.py`` — ACCOUNTING.  The physical page pool: free list,
     refcounted per-slot page tables, copy-on-write barriers, growth
     reservations, and the 32-entry LRU IOTLB over the page table.
@@ -14,6 +15,16 @@ The serving stack is three layers with one owner per concern:
     the allocator's page copies, moves swapped state device<->host, and
     samples.  It consults the scheduler for WHAT to run and the allocator
     for WHERE it lives, and never decides either itself.
+
+The client surface is a SESSION: ``submit(req)`` returns a
+:class:`RequestHandle` immediately (the request lands on the scheduler's
+pending queue — ASYNC admission, no slot is taken yet) and ``tick()``
+is the externally-drivable step: drain admissions into free slots, then
+advance prefill/decode.  A caller can submit mid-flight, poll a handle's
+``status``/``tokens_so_far``, iterate ``stream()`` for tokens as decode
+emits them, or block on ``result()``.  ``run()`` is a thin compatibility
+shim (submit everything, tick until idle); ``drain()`` finishes all
+outstanding work and CLOSES the engine — ``submit()`` afterwards raises.
 
 Continuous batching: every engine tick is (at most) ONE chunked-prefill
 dispatch — covering freshly admitted slots AND slots resuming a prompt
@@ -63,6 +74,91 @@ from repro.train.step import (make_chunked_prefill_step, make_decode_step,
                               make_paged_decode_step)
 
 _DEFER = "defer"                    # admission verdict: retry after frees
+
+
+class RequestHandle:
+    """Client-side view of one submitted request.
+
+    Returned by :meth:`ServingEngine.submit` immediately — before any
+    slot or page is taken.  Polling is free (pure host reads); the
+    blocking accessors (``stream``/``result``) drive ``engine.tick()``
+    themselves, so a single-threaded caller can await one request while
+    the engine keeps serving everything else.
+    """
+
+    def __init__(self, engine: "ServingEngine", req: Request):
+        self._eng = engine
+        self.req = req
+
+    @property
+    def status(self) -> str:
+        """'pending' | 'running' | 'swapped' | 'done' | 'failed'."""
+        if self.req.done:
+            return "failed" if self.req.failed else "done"
+        return self._eng.sched.state_of(self.req)
+
+    @property
+    def tokens_so_far(self) -> List[int]:
+        """Snapshot of the tokens emitted so far (non-blocking)."""
+        return list(self.req.out_tokens)
+
+    def stream(self):
+        """Yield tokens incrementally as decode ticks emit them, driving
+        ``engine.tick()`` whenever none are buffered; ends at EOS /
+        ``max_new_tokens`` / rejection (check ``status`` for 'failed')."""
+        sent = 0
+        while True:
+            while sent < len(self.req.out_tokens):
+                yield self.req.out_tokens[sent]
+                sent += 1
+            if self.req.done:
+                return
+            self._eng.tick()
+
+    def result(self) -> Request:
+        """Drive the engine until this request is terminal; returns the
+        finished :class:`Request` (``failed`` marks rejection)."""
+        while not self.req.done:
+            self._eng.tick()
+        return self.req
+
+    def __repr__(self):
+        return (f"RequestHandle(rid={self.req.rid}, status={self.status!r}, "
+                f"tokens={len(self.req.out_tokens)})")
+
+
+class _ListQueue:
+    """Legacy admission source: a caller-owned FIFO list.  Pops mutate
+    the caller's list; a deferred head goes back to position 0."""
+
+    def __init__(self, lst: List[Request]):
+        self.lst = lst
+
+    def __bool__(self):
+        return bool(self.lst)
+
+    def pop(self) -> Request:
+        return self.lst.pop(0)
+
+    def defer(self, req: Request) -> None:
+        self.lst.insert(0, req)
+
+
+class _SchedQueue:
+    """Admission source over the scheduler's priority-ordered pending
+    queue (the session path: submit()/tick())."""
+
+    def __init__(self, sched: Scheduler):
+        self.sched = sched
+
+    def __bool__(self):
+        return self.sched.has_pending()
+
+    def pop(self) -> Request:
+        return self.sched.pop_pending()
+
+    def defer(self, req: Request) -> None:
+        self.sched.defer_pending(req)
 
 
 class ServingEngine:
@@ -123,7 +219,24 @@ class ServingEngine:
         self.n_swap_ins = 0
         self.n_cow_copies = 0
         self.n_shared_admissions = 0
+        self.n_swap_budget_denials = 0
         self._prefilled_since_step = False   # one prefill dispatch per tick
+        self.tick_no = 0            # the serving clock (deadline ledger)
+        self._closed = False        # set by drain(): no further submits
+        # host bytes one swapped slot would occupy, for the swap budget:
+        # pooled leaves contribute per mapped PAGE, per-slot leaves per
+        # slot row (axis 1 is pages resp. batch in both layouts).
+        flat_cache, _ = jax.tree.flatten(self.cache)
+        if serve_cfg.paged:
+            self._page_nbytes = sum(
+                leaf.size * leaf.dtype.itemsize // leaf.shape[1]
+                for leaf, pooled in zip(flat_cache, self._pooled) if pooled)
+            self._slot_state_nbytes = sum(
+                leaf.size * leaf.dtype.itemsize // leaf.shape[1]
+                for leaf, pooled in zip(flat_cache, self._pooled)
+                if not pooled)
+        else:
+            self._page_nbytes = self._slot_state_nbytes = 0
 
     # -- compat views over the split layers ---------------------------------
     @property
@@ -180,6 +293,7 @@ class ServingEngine:
         if not req.done:            # idempotent: retried rejects are no-ops
             req.failed = True
             req.done = True
+            self.sched.note_terminal(req)
             self.completed.append(req)
 
     def _fault_reject(self, req: Request, kind: str, start: int,
@@ -291,7 +405,17 @@ class ServingEngine:
         number admitted.  Swapped-out requests re-enter first.  A request
         that only fails on TRANSIENT page exhaustion stays at the head of
         ``pending`` and the wave stops — it retries once completions free
-        pages."""
+        pages.
+
+        Legacy batch entry point: admits in LIST order, ignoring
+        priorities.  The session path (``submit()`` + ``tick()``) admits
+        from the scheduler's priority-ordered pending queue instead."""
+        return self._admission_wave(_ListQueue(pending))
+
+    def _admission_wave(self, queue) -> int:
+        """One admission wave from ``queue`` (a _ListQueue or _SchedQueue):
+        fill free slots in the queue's pop order, then one prefill
+        dispatch covering new and resumed slots."""
         if self.sc.paged:
             self._swap_in_ready()
         placed: List[tuple] = []        # (slot, request) vetted this wave
@@ -299,13 +423,13 @@ class ServingEngine:
         try:
             for slot in self._free_slots():
                 got, share = None, (None, 0)
-                while pending and got is None:
-                    req = pending.pop(0)
+                while queue and got is None:
+                    req = queue.pop()
                     if req.done:        # already rejected/finished earlier
                         continue
                     verdict, share = self._admissible(slot, req)
                     if verdict is _DEFER:
-                        pending.insert(0, req)
+                        queue.defer(req)
                         break
                     if verdict:
                         got = req
@@ -327,7 +451,7 @@ class ServingEngine:
                 if self.sc.paged:
                     self.alloc.release_slot(slot)
                 self.sched.release(slot)
-                pending.insert(0, req)
+                queue.defer(req)
             raise
         if placed:
             self.peak_active = max(self.peak_active,
@@ -433,6 +557,7 @@ class ServingEngine:
             self.positions[slot] = len(req.prompt)
             self.last_token[slot] = first
             req.out_tokens.append(first)    # the post-prompt prediction
+            self.sched.note_first_token(req, self.tick_no)
             if lg_np is not None:
                 req.logits.append(lg_np[slot].copy())
             if first == self.sc.eos_id or \
@@ -449,6 +574,7 @@ class ServingEngine:
     def _finish(self, slot: int):
         req = self.sched.slots[slot].req
         req.done = True
+        self.sched.note_terminal(req)   # deadline miss if no first token
         self.completed.append(req)
         self.sched.release(slot)    # release slot
         if self.sc.paged:
@@ -486,13 +612,15 @@ class ServingEngine:
                      in zip(flat, self._pooled) if pooled]
         slot_rows = [np.asarray(leaf[:, slot]) for leaf, pooled
                      in zip(flat, self._pooled) if not pooled]
+        nbytes = sum(a.nbytes for a in pool_rows) + \
+            sum(a.nbytes for a in slot_rows)
         self.sched.swapped.append(SwappedRequest(
             req=req, prefill_done=meta.prefill_done, order=meta.order,
             pos=int(self.positions[slot]),
             last_token=int(self.last_token[slot]),
             n_pages=n_mapped, n_max=self._max_pages(req),
             growth_due=int(self.alloc.growth_due[slot]),
-            pool_rows=pool_rows, slot_rows=slot_rows))
+            pool_rows=pool_rows, slot_rows=slot_rows, nbytes=nbytes))
         self.alloc.release_slot(slot)
         self.sched.release(slot)
         req.preempts += 1
@@ -559,8 +687,29 @@ class ServingEngine:
                     v = self.sched.victim(exclude=i)
                     if v is None or not self._swappable(v):
                         break
+                    if self.sched.slots[v].req.priority > \
+                            meta.req.priority:
+                        # priority inversion guard: the best victim still
+                        # outranks the grower, i.e. EVERY other resident
+                        # does — park the grower itself rather than evict
+                        # higher-priority work; when the grower cannot be
+                        # parked (pool fit / swap budget), it takes the
+                        # capacity path instead.  Higher-priority work is
+                        # NEVER the victim here.  (Not taken at uniform
+                        # priority, so the legacy youngest-first behavior
+                        # is bit-preserved.)
+                        if not self._swap_fits_budget(i):
+                            self._deny_swap_budget(i)
+                        elif self._swappable(i):
+                            self._swap_out(i)
+                        break
+                    if not self._swap_fits_budget(v):
+                        self._deny_swap_budget(v)
+                        break
                     self._swap_out(v)
                     grown = self.alloc.alloc(i, j)
+                if self.sched.slots[i] is None:
+                    continue            # grower preempted itself
                 if grown:
                     # a reserved page materialized: shrink the reservation.
                     self.alloc.growth_due[i] = max(
@@ -592,12 +741,33 @@ class ServingEngine:
         self._apply_copies(cow)
 
     def _swappable(self, slot: int) -> bool:
-        """A victim must be re-admittable later: its mapped pages (plus a
-        growth page if it is not fully grown) have to fit the pool."""
+        """Pool-fit probe (side-effect-free): a preempted request must be
+        re-admittable later, so its mapped pages (plus a growth page if
+        it is not fully grown) have to fit the pool."""
         meta = self.sched.slots[slot]
         n_mapped = self.alloc.mapped_count(slot)
         return n_mapped + int(n_mapped < self._max_pages(meta.req)) \
             <= self.num_pages
+
+    def _swap_fits_budget(self, slot: int) -> bool:
+        """Budget probe (side-effect-free): would swapping ``slot`` keep
+        the swap queue within ``ServeConfig.swap_budget_bytes``?"""
+        budget = self.sc.swap_budget_bytes
+        if budget is None:
+            return True
+        est = self.alloc.mapped_count(slot) * self._page_nbytes \
+            + self._slot_state_nbytes
+        return self.sched.swap_bytes() + est <= budget
+
+    def _deny_swap_budget(self, slot: int) -> None:
+        """Record a swap denied BECAUSE of the byte budget (the single
+        accounting site): past the cap the swap queue stops absorbing
+        state — the growing request takes the capacity path instead of
+        the host holding unbounded memory."""
+        self.iotlb.faults.append(FaultRecord(
+            "swap_budget", slot * self._slot_span,
+            self.alloc.mapped_count(slot) * self.sc.page_size, True))
+        self.n_swap_budget_denials += 1
 
     def step(self):
         """One engine tick: advance any unfinished prefill by one chunk
@@ -643,13 +813,52 @@ class ServingEngine:
                     len(req.out_tokens) >= self.sc.max_new_tokens:
                 self._finish(i)
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        """Serve ``requests`` to completion.  Returns the requests finished
-        during this call, in completion order (rejected requests appear
-        with ``failed=True`` and no output tokens)."""
+    # -- session API ---------------------------------------------------------
+    def submit(self, req: Request) -> RequestHandle:
+        """Queue ``req`` for ASYNC admission and return its handle
+        immediately — no slot, page, or dispatch happens here.  The next
+        ``tick()`` (or any handle-driven one) drains the pending queue in
+        priority order (FIFO within a class).  ``submit_tick`` is stamped
+        for the TTFT deadline ledger.  Raises RuntimeError once the
+        engine has been ``drain()``ed."""
+        if self._closed:
+            raise RuntimeError(
+                "ServingEngine is closed: submit() after drain() — "
+                "construct a new engine (or use run() before draining)")
+        if req.submit_tick is None:
+            req.submit_tick = self.tick_no
+        self.sched.submit(req)
+        return RequestHandle(self, req)
+
+    def tick(self) -> None:
+        """One externally-drivable engine step: advance the serving
+        clock, drain pending admissions into free slots (at most ONE
+        chunked-prefill dispatch, covering fresh and resumed prompts),
+        then one decode dispatch for the prompt-complete slots.  Safe to
+        call when idle (no-op dispatches are skipped)."""
+        self.tick_no += 1
+        self._admission_wave(_SchedQueue(self.sched))
+        self.step()
+
+    def drain(self) -> List[Request]:
+        """Serve every outstanding submission to completion, then CLOSE
+        the engine: subsequent ``submit()``/``run()`` raise.  Returns the
+        requests finished during this call, in completion order."""
         start = len(self.completed)
-        pending = list(requests)
-        while pending or self.sched.active() or self.sched.swapped:
-            self.admit_many(pending)
-            self.step()
+        while self.sched.has_work():
+            self.tick()
+        self._closed = True
+        return self.completed[start:]
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests`` to completion (compatibility shim: submit
+        them all, then tick until idle — the engine stays OPEN, unlike
+        ``drain()``).  Returns the requests finished during this call, in
+        completion order (rejected requests appear with ``failed=True``
+        and no output tokens)."""
+        start = len(self.completed)
+        for req in requests:
+            self.submit(req)
+        while self.sched.has_work():
+            self.tick()
         return self.completed[start:]

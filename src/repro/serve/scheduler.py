@@ -1,26 +1,39 @@
-"""Serving scheduler: admission, chunk budgeting, preemption, sharing.
+"""Serving scheduler: pending queue, admission, preemption, sharing.
 
 This is the POLICY layer of the serving stack (allocator = accounting,
-engine = execution).  It owns the slot table's request metadata and
-decides, without touching device state:
+engine = execution).  It owns the PENDING QUEUE — ``submit()`` lands
+every request here, and the engine drains it between decode ticks — plus
+the slot table's request metadata, and decides, without touching device
+state:
 
+  * which pending request is admitted NEXT (``pop_pending``: highest
+    ``Request.priority`` first, FIFO within a class via the stamped
+    ``submit_seq``; a transiently unadmittable head is ``defer_pending``ed
+    back and blocks the wave — no lower-priority bypass, so a large
+    high-priority request cannot be starved),
   * which slots still owe PREFILL work and which tokens each gets next
     tick (``prefill_plan`` — resumable chunked prefill: a prompt longer
     than ``chunk`` fills ``chunk`` rows per dispatch, interleaved with
     the decode ticks of already-filled slots),
   * which slots are DECODE-ready (``decode_slots``),
   * who gets PREEMPTED when overcommit exhausts the pool mid-decode
-    (``victim``: the youngest resident request — vLLM's policy — so the
-    oldest work finishes first and re-admission is FIFO via the swap
-    queue), and
+    (``victim``: the lowest-priority resident, youngest within a class —
+    at uniform priority this degrades to vLLM's youngest-first, so the
+    pre-priority engine's behavior is preserved bit-for-bit), and
   * where a new prompt can start from a SHARED PREFIX
     (``shared_prefix``: the resident request with the longest common
     prompt prefix whose rows are already materialized).
 
-The engine executes these decisions; the allocator accounts for them.
+It also keeps the serving clock's DEADLINE ledger (``note_first_token`` /
+``note_terminal`` -> ``deadline_hits``/``deadline_misses``: a request
+ending without a first token counts as a miss) and the swap queue's host
+byte footprint (``swap_bytes``, capped by ``ServeConfig.
+swap_budget_bytes``).  The engine executes these decisions; the
+allocator accounts for them.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Any, List, Optional, Tuple
 
@@ -56,6 +69,7 @@ class SwappedRequest:
     growth_due: int
     pool_rows: List[Any]        # per pooled cache leaf: (n_pages, ps, ...)
     slot_rows: List[Any]        # per slot cache leaf: that slot's row
+    nbytes: int = 0             # host bytes this snapshot occupies
 
 
 class Scheduler:
@@ -64,6 +78,95 @@ class Scheduler:
         self.slots: List[Optional[SlotMeta]] = [None] * max_batch
         self.swapped: List[SwappedRequest] = []
         self._order = 0
+        # the pending queue: kept sorted by (-priority, submit_seq) so
+        # pop_pending() is highest-priority-first, FIFO within a class.
+        self._pending: List[Request] = []
+        self._pending_keys: List[Tuple[int, int]] = []
+        self._submit_seq = 0
+        self.deadline_hits = 0
+        self.deadline_misses = 0
+
+    # -- pending queue -------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue ``req`` for admission.  Stamps ``submit_seq`` (the FIFO
+        tie-break within a priority class) on first submission."""
+        if req.submit_seq is None:
+            req.submit_seq = self._submit_seq
+            self._submit_seq += 1
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request) -> None:
+        key = (-req.priority, req.submit_seq)
+        i = bisect.bisect_left(self._pending_keys, key)
+        self._pending_keys.insert(i, key)
+        self._pending.insert(i, req)
+
+    def has_pending(self) -> bool:
+        return bool(self._pending)
+
+    @property
+    def pending(self) -> Tuple[Request, ...]:
+        """Admission-ordered read-only view of the queue."""
+        return tuple(self._pending)
+
+    def pop_pending(self) -> Request:
+        """Next request by admission order (highest priority, then FIFO)."""
+        self._pending_keys.pop(0)
+        return self._pending.pop(0)
+
+    def defer_pending(self, req: Request) -> None:
+        """Put a transiently unadmittable request back; its original
+        ``submit_seq`` lands it ahead of every later same-priority
+        submission, so deferral never loses its place in line."""
+        self._enqueue(req)
+
+    def has_work(self) -> bool:
+        return bool(self._pending or self.swapped
+                    or any(s is not None for s in self.slots))
+
+    def state_of(self, req: Request) -> str:
+        """'running' | 'swapped' | 'pending' | 'unknown' for a live
+        request (terminal states are read off the request itself)."""
+        for meta in self.slots:
+            if meta is not None and meta.req is req:
+                return "running"
+        for sw in self.swapped:
+            if sw.req is req:
+                return "swapped"
+        for r in self._pending:
+            if r is req:
+                return "pending"
+        return "unknown"
+
+    # -- deadline ledger -----------------------------------------------------
+    def note_first_token(self, req: Request, tick_no: int) -> None:
+        """Record the first-token tick; resolve the TTFT deadline."""
+        if req.first_token_tick is not None:
+            return
+        req.first_token_tick = tick_no
+        if req.ttft_deadline is None or req.submit_tick is None:
+            return
+        req.deadline_miss = \
+            (tick_no - req.submit_tick) > req.ttft_deadline
+        if req.deadline_miss:
+            self.deadline_misses += 1
+        else:
+            self.deadline_hits += 1
+
+    def note_terminal(self, req: Request) -> None:
+        """A deadline-carrying request ending with NO first token (reject,
+        capacity kill) is a miss — deferred admission doesn't hide it."""
+        if req.ttft_deadline is None or req.submit_tick is None:
+            return
+        if req.first_token_tick is not None or req.deadline_miss is not None:
+            return
+        req.deadline_miss = True
+        self.deadline_misses += 1
+
+    # -- swap accounting -----------------------------------------------------
+    def swap_bytes(self) -> int:
+        """Host bytes currently parked on the swap queue."""
+        return sum(sw.nbytes for sw in self.swapped)
 
     # -- slot table ---------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -109,13 +212,18 @@ class Scheduler:
 
     # -- preemption policy --------------------------------------------------
     def victim(self, exclude: int) -> Optional[int]:
-        """Youngest resident slot other than ``exclude``, or None."""
-        best = None
+        """Preemption victim other than ``exclude``: the LOWEST-priority
+        resident, youngest (largest admission order) within a class, or
+        None.  At uniform priority this is exactly the old youngest-first
+        policy; with priorities it prevents inversion — best-effort work
+        is swapped before a deadline-critical request ever is."""
+        best, best_key = None, None
         for i, meta in enumerate(self.slots):
             if meta is None or i == exclude:
                 continue
-            if best is None or meta.order > self.slots[best].order:
-                best = i
+            key = (meta.req.priority, -meta.order)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
         return best
 
     # -- prefix sharing -----------------------------------------------------

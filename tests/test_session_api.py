@@ -1,0 +1,351 @@
+"""Session serve API: submit/poll handles, priorities, deadlines, budget.
+
+The client surface redesign (batch ``run()`` -> ``submit()`` +
+``tick()``) must be pure plumbing: the same requests pushed through the
+session path emit tokens AND logits bit-identical to the legacy batch
+path.  On top of that seam: admission is priority-ordered (FIFO within a
+class), preemption never victimizes higher-priority work, the scheduler
+ledgers TTFT deadline hits/misses in deterministic engine ticks, and the
+swap queue's host footprint is capped in bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, RequestHandle, ServeConfig, ServingEngine
+
+GQA = ArchConfig(name="sess", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+HYBRID = ArchConfig(
+    name="sess_hyb", family="hybrid", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=100, ssm_state=16, ssm_headdim=32,
+    ssm_chunk=4, decode_margin=32,
+    pattern=(("group", (("mamba", 1), ("shared_attn", 1)), 2),),
+    dtype=jnp.float32)
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(cfg, jax.random.PRNGKey(0))
+    return _PARAMS[cfg.name]
+
+
+def _assert_bit_exact(got, ref):
+    assert sorted(got) == sorted(ref)
+    for rid in ref:
+        assert not got[rid].failed and not ref[rid].failed, rid
+        assert got[rid].out_tokens == ref[rid].out_tokens, rid
+        assert len(got[rid].logits) == len(ref[rid].logits), rid
+        for a, b in zip(got[rid].logits, ref[rid].logits):
+            np.testing.assert_array_equal(a, b, err_msg=f"rid {rid}")
+
+
+# -- bit-exactness of the new surface ---------------------------------------
+
+@pytest.mark.parametrize("cfg", [GQA, HYBRID], ids=["dense", "hybrid"])
+def test_submit_tick_bit_exact_vs_legacy_run(cfg):
+    """The PR 3 workload (multi-chunk prompts, mixed lengths, slot churn)
+    through submit()+tick() matches the batch run() path bit for bit."""
+    params = _params(cfg)
+    prompts = [[5, 7, 11, 2, 9, 4, 1, 8, 3, 6, 2], [3, 1, 4, 1, 5, 9],
+               [2, 7], [9, 8, 7, 6, 5, 4, 3, 2]]
+    base = dict(max_batch=2, max_prompt=4, max_new_tokens=4, max_seq=24,
+                page_size=4, record_logits=True)
+    ref_eng = ServingEngine(cfg, params, ServeConfig(**base))
+    ref = {r.rid: r for r in
+           ref_eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])}
+    eng = ServingEngine(cfg, params, ServeConfig(**base))
+    handles = [eng.submit(Request(i, list(p)))
+               for i, p in enumerate(prompts)]
+    while eng.sched.has_work():
+        eng.tick()
+    got = {h.req.rid: h.req for h in handles}
+    assert all(h.status == "done" for h in handles)
+    _assert_bit_exact(got, ref)
+
+
+def test_handle_lifecycle_poll_stream_result():
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=4))
+    h = eng.submit(Request(0, [5, 7, 11]))
+    assert isinstance(h, RequestHandle)
+    assert h.status == "pending" and h.tokens_so_far == []
+    eng.tick()          # admission + prefill + one decode step
+    assert h.status == "running"
+    assert len(h.tokens_so_far) == 2    # prefill's first token + 1 decode
+    # stream() resumes mid-request and drives the engine itself.
+    streamed = list(h.stream())
+    assert streamed == h.req.out_tokens and len(streamed) == 4
+    assert h.status == "done"
+    assert h.result() is h.req      # terminal: returns without ticking
+
+
+def test_stream_yields_incrementally():
+    """stream() hands tokens out as ticks produce them — the generator
+    yields the k-th token before the request is finished."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=6))
+    h = eng.submit(Request(0, [5, 7, 11]))
+    gen = h.stream()
+    first = next(gen)
+    assert first == h.req.out_tokens[0]
+    assert not h.req.done            # 5 tokens still to come
+    assert list(gen) == h.req.out_tokens[1:]
+
+
+def test_async_admission_mid_flight_matches_batch():
+    """A request submitted while the engine is mid-decode is admitted by
+    a later tick and completes with the same tokens as the batch path
+    (admission still happens exactly when a slot frees)."""
+    params = _params(GQA)
+    sc = lambda: ServeConfig(max_batch=2, max_prompt=8, max_new_tokens=5)
+    prompts = [[5, 7, 11], [3, 1, 4, 1], [2, 7, 9]]
+    ref_eng = ServingEngine(GQA, params, sc())
+    ref = {r.rid: r.out_tokens for r in
+           ref_eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])}
+    eng = ServingEngine(GQA, params, sc())
+    h0 = eng.submit(Request(0, list(prompts[0])))
+    h1 = eng.submit(Request(1, list(prompts[1])))
+    eng.tick()
+    eng.tick()
+    assert h0.status == "running" and h1.status == "running"
+    h2 = eng.submit(Request(2, list(prompts[2])))   # mid-flight arrival
+    assert h2.status == "pending"
+    out = eng.drain()
+    assert {r.rid: r.out_tokens for r in out} == ref
+
+
+def test_run_is_a_shim_and_engine_stays_open():
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=3))
+    out1 = eng.run([Request(0, [5, 7, 11])])
+    assert len(out1) == 1 and out1[0].done
+    out2 = eng.run([Request(1, [3, 1, 4])])      # run() does not close
+    assert len(out2) == 1 and not out2[0].failed
+
+
+# -- priorities --------------------------------------------------------------
+
+def test_priority_admission_order():
+    """With one slot, the later-submitted high-priority request is
+    admitted first; the best-effort one waits."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=3))
+    lo = eng.submit(Request(0, [5, 7, 11]))
+    hi = eng.submit(Request(1, [3, 1, 4], priority=5))
+    eng.tick()
+    assert hi.status in ("running", "done")
+    assert lo.status == "pending"
+    out = eng.drain()
+    assert [r.rid for r in out] == [1, 0]
+
+
+def test_equal_priority_fifo_tie_break():
+    """Same priority class: strict submission order (stamped submit_seq),
+    so the session path at uniform priority IS the legacy FIFO."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=2))
+    hs = [eng.submit(Request(i, [5 + i, 7, 11], priority=3))
+          for i in range(3)]
+    out = eng.drain()
+    assert [r.rid for r in out] == [0, 1, 2]
+    assert [h.req.submit_seq for h in hs] == [0, 1, 2]
+
+
+def test_no_priority_inversion_under_swap_preemption():
+    """Overcommit exhaustion with mixed priorities: the high-priority
+    request is never the swap victim — best-effort neighbors are parked
+    (including the grower itself when everyone else outranks it) — and
+    outputs stay bit-identical to the roomy-pool reference."""
+    params = _params(GQA)
+    prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9], [8, 6, 4, 2, 9, 7]]
+    prios = [0, 5, 0]
+    base = dict(max_batch=3, max_prompt=8, max_new_tokens=8, page_size=4,
+                record_logits=True)
+    ref_eng = ServingEngine(GQA, params, ServeConfig(**base))
+    ref = {r.rid: r for r in ref_eng.run(
+        [Request(i, list(p)) for i, p in enumerate(prompts)])}
+    assert ref_eng.n_preemptions == 0
+    # 7 pages: all three admit (2 claim pages each) but worst-case growth
+    # wants 12 — decode must preempt.
+    eng = ServingEngine(GQA, params, ServeConfig(
+        num_pages=7, reserve_decode_pages=False, **base))
+    for (i, p), pr in zip(enumerate(prompts), prios):
+        eng.submit(Request(i, list(p), priority=pr))
+    out = {r.rid: r for r in eng.drain()}
+    assert eng.n_preemptions > 0 and eng.n_swap_ins > 0
+    assert out[1].preempts == 0, "high-priority request was preempted"
+    assert any(out[i].preempts > 0 for i in (0, 2))
+    _assert_bit_exact(out, ref)
+    assert len(eng._free_pages) == eng.num_pages
+
+
+# -- deadlines ---------------------------------------------------------------
+
+def test_deadline_hits_and_misses_in_ticks():
+    """TTFT deadlines are ledgered in engine ticks: an immediately-served
+    request hits; one whose admission is deferred behind a busy slot
+    misses; the per-request fields agree with the scheduler counters."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=2))
+    a = eng.submit(Request(0, [5, 7, 11], ttft_deadline=2))
+    b = eng.submit(Request(1, [3, 1, 4], ttft_deadline=1))
+    eng.drain()
+    assert a.req.ttft_ticks == 1 and a.req.deadline_miss is False
+    # b waited for a's slot (2 ticks of occupancy) — deferred admission
+    # must still be charged against the deadline.
+    assert b.req.ttft_ticks is not None and b.req.ttft_ticks > 1
+    assert b.req.deadline_miss is True
+    assert eng.sched.deadline_hits == 1
+    assert eng.sched.deadline_misses == 1
+
+
+def test_deadline_miss_recorded_for_rejected_request():
+    """A deadline-carrying request that terminates with NO first token
+    (here: empty prompt reject) is accounted as a miss, not dropped."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=2))
+    h = eng.submit(Request(0, [], ttft_deadline=4))
+    eng.drain()
+    assert h.status == "failed"
+    assert h.req.deadline_miss is True
+    assert eng.sched.deadline_misses == 1 and eng.sched.deadline_hits == 0
+
+
+def test_no_deadline_requests_do_not_touch_the_ledger():
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=2))
+    eng.submit(Request(0, [5, 7, 11]))
+    eng.drain()
+    assert eng.sched.deadline_hits == 0 and eng.sched.deadline_misses == 0
+
+
+# -- drain / close -----------------------------------------------------------
+
+def test_submit_after_drain_raises_cleanly():
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=1, max_prompt=8, max_new_tokens=2))
+    h = eng.submit(Request(0, [5, 7, 11]))
+    done = eng.drain()
+    assert [r.rid for r in done] == [0] and h.status == "done"
+    with pytest.raises(RuntimeError, match="drain"):
+        eng.submit(Request(1, [3, 1, 4]))
+    with pytest.raises(RuntimeError, match="drain"):
+        eng.run([Request(2, [2, 7])])           # run() goes through submit
+    assert eng.completed == done                 # nothing snuck in
+
+
+# -- swap-space accounting ---------------------------------------------------
+
+def test_swap_budget_zero_headroom_terminates_with_fault():
+    """A budget too small for any snapshot forbids swapping: overcommit
+    exhaustion falls back to the capacity path, with the denial recorded
+    as a ``swap_budget`` fault (satisfying 'reject beyond the cap', not
+    'hold unbounded host memory')."""
+    params = _params(GQA)
+    prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9]]
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=8, page_size=4,
+        num_pages=5, reserve_decode_pages=False, strict_iotlb=False,
+        swap_budget_bytes=1))
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    assert eng.n_swap_budget_denials > 0 and eng.n_preemptions == 0
+    assert any(r.failed for r in out)
+    assert any(f.kind == "swap_budget" for f in eng.iotlb.faults)
+
+
+def test_swap_budget_generous_allows_swap_and_drains_to_zero():
+    params = _params(GQA)
+    prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9]]
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=8, page_size=4,
+        num_pages=5, reserve_decode_pages=False,
+        swap_budget_bytes=1 << 30))
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    assert eng.n_preemptions > 0
+    assert all(not r.failed for r in out)
+    assert eng.sched.swap_bytes() == 0          # everything swapped back in
+    assert eng.n_swap_budget_denials == 0
+
+
+def test_inversion_guard_holds_when_grower_cannot_park():
+    """When every other resident outranks the grower AND the grower's
+    own snapshot exceeds the swap budget, the grower dies on the
+    capacity path (denial recorded) — higher-priority work is still
+    never evicted, even though the grower cannot park itself."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=8, page_size=4,
+        num_pages=5, reserve_decode_pages=False, strict_iotlb=False,
+        swap_budget_bytes=1))
+    hi = eng.submit(Request(0, [5, 7, 11, 2, 9, 4], priority=5))
+    lo = eng.submit(Request(1, [3, 1, 4, 1, 5, 9]))
+    eng.drain()
+    assert not hi.req.failed and hi.req.preempts == 0
+    assert lo.req.failed                     # capacity path, not eviction
+    assert eng.n_preemptions == 0
+    assert eng.n_swap_budget_denials > 0
+    assert any(f.kind == "swap_budget" for f in eng.iotlb.faults)
+
+
+def test_swapped_request_reports_swap_bytes():
+    """While a request is parked, the scheduler knows its host footprint
+    (and the handle reports 'swapped')."""
+    params = _params(GQA)
+    eng = ServingEngine(GQA, params, ServeConfig(
+        max_batch=2, max_prompt=8, max_new_tokens=8, page_size=4,
+        num_pages=5, reserve_decode_pages=False))
+    hs = [eng.submit(Request(i, [5 + i, 7, 11, 2, 9, 4])) for i in range(2)]
+    seen_swapped = seen_bytes = 0
+    while eng.sched.has_work():
+        eng.tick()
+        if any(h.status == "swapped" for h in hs):
+            seen_swapped += 1
+            seen_bytes = max(seen_bytes, eng.sched.swap_bytes())
+    assert seen_swapped > 0 and seen_bytes > 0
+    assert eng.sched.swap_bytes() == 0
+
+
+# -- field validation --------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs, field", [
+    (dict(priority="hi"), "priority"),
+    (dict(priority=1.5), "priority"),
+    (dict(priority=True), "priority"),
+    (dict(ttft_deadline=0), "ttft_deadline"),
+    (dict(ttft_deadline=-3), "ttft_deadline"),
+    (dict(ttft_deadline=2.5), "ttft_deadline"),
+])
+def test_request_rejects_bad_fields_by_name(kwargs, field):
+    with pytest.raises(ValueError, match=f"Request.{field}"):
+        Request(0, [1, 2, 3], **kwargs)
+
+
+def test_serve_config_rejects_bad_swap_budget():
+    with pytest.raises(ValueError, match="swap_budget_bytes"):
+        ServeConfig(swap_budget_bytes=0)
+
+
+def test_public_surface_reexports_from_defining_modules():
+    """Request/ServeConfig come from serve.config (their defining
+    module); RequestHandle is exported alongside the engine."""
+    import repro.serve as serve
+    import repro.serve.config as config
+    import repro.serve.engine as engine
+    assert serve.Request is config.Request
+    assert serve.ServeConfig is config.ServeConfig
+    assert serve.RequestHandle is engine.RequestHandle
