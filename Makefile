@@ -5,13 +5,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench-smoke bench-serve bench serve-demo
+.PHONY: test smoke test-sharded bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
 
 smoke:
 	$(PY) -m pytest -x -q -k "not distributed"
+
+# multi-device leg (CI): the sharded-execution and sharded-page-pool
+# suites on 8 host devices.  The tests spawn their own subprocesses with
+# XLA_FLAGS set, so this also runs on a plain single-device host.
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -x -q tests/test_distributed_paging.py \
+		tests/test_distributed.py
 
 # tiny end-to-end pass of every serving-benchmark section (CI): asserts
 # the benchmark itself still runs, so it cannot silently rot.

@@ -19,6 +19,13 @@ Measures, on host CPU, what the serving rework buys on the hot path
     interleaved with decode); TTFT p50/p95 and tokens/s, and the same
     overcommitted pool driven with preemption='swap' vs 'terminate':
     swap sustains strictly higher concurrency with ZERO lost requests.
+  * sharded page pool — the same engine with the pool page-striped over
+    a 1-shard vs an 8-shard seq mesh (8 host devices, subprocess):
+    per-shard pool bytes must be ~1/N of the replicated layout while the
+    emitted tokens stay identical, and decode tokens/s is reported for
+    both (on host CPU the collectives cost more than the striping saves
+    — the win at this scale is MEMORY; the combine exists so a
+    production-sized pool never has to replicate onto every chip).
   * mixed-priority sessions — staggered arrivals through the session API
     (``submit()``/``tick()``): deadline-critical short requests landing
     behind a queue of best-effort long prompts.  At the SAME pool
@@ -350,6 +357,74 @@ def _mixed_priority(cfg, params, n_low: int = 8, n_high: int = 4):
          f"deadline_ticks={deadline}")
 
 
+_SHARDED_POOL_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_test_mesh
+
+N_REQ = {n_req}
+cfg = ArchConfig(name="thr", family="dense", n_layers=2, d_model=128,
+                 n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+                 decode_margin=32)
+params = init_params(cfg, jax.random.PRNGKey(0))
+keys = jax.random.split(jax.random.PRNGKey(7), N_REQ)
+prompts = [[int(t) for t in jax.random.randint(k, (6,), 0, cfg.vocab_size)]
+           for k in keys]
+got = {{}}
+for shards, shape in ((1, (8, 1)), (8, (1, 8))):
+    mesh = make_test_mesh(shape, ("data", "model"))
+    with use_rules(mesh, "fsdp_sp"):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            max_batch=4, max_prompt=8, max_new_tokens={max_new},
+            page_size=8, num_pages=32))
+        eng.warmup()
+        t0 = time.perf_counter()
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+        dt = time.perf_counter() - t0
+    got[shards] = {{r.rid: r.out_tokens for r in out}}
+    toks = sum(len(t) for t in got[shards].values())
+    print(f"SHARDS={{shards}} "
+          f"POOL_BYTES_PER_SHARD={{eng.pool_bytes_per_shard()}} "
+          f"TOK_PER_S={{toks / dt:.1f}} GEN={{toks}}")
+assert got[1] == got[8], "striping changed the emitted tokens"
+"""
+
+
+def _sharded_pool(smoke: bool):
+    """Page-striped pool at 1 vs 8 shards.  Runs in a subprocess: the
+    striping needs an 8-device host platform and THIS process's device
+    count locked at first jax init.  Asserts identical tokens and the
+    1/N per-shard memory split; reports decode tokens/s at both widths."""
+    import os
+    import subprocess
+    code = _SHARDED_POOL_SCRIPT.format(n_req=4 if smoke else 12,
+                                       max_new=8 if smoke else 32)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=dict(os.environ))
+    assert r.returncode == 0, r.stderr[-3000:]
+    rows = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARDS="):
+            kv = dict(part.split("=") for part in line.split())
+            rows[int(kv["SHARDS"])] = kv
+    assert sorted(rows) == [1, 8], r.stdout
+    b1 = int(rows[1]["POOL_BYTES_PER_SHARD"])
+    b8 = int(rows[8]["POOL_BYTES_PER_SHARD"])
+    assert b8 * 8 == b1, "per-shard pool memory must be 1/8 at 8 shards"
+    emit("serve/sharded_pool_bytes", b8,
+         f"per_shard_bytes_1shard={b1};per_shard_bytes_8shard={b8};"
+         f"ratio={b1 // b8}x;identical_tokens=1")
+    emit("serve/sharded_pool_decode", float(rows[8]["TOK_PER_S"]),
+         f"tok_per_s_1shard={rows[1]['TOK_PER_S']};"
+         f"tok_per_s_8shard={rows[8]['TOK_PER_S']};"
+         f"gen_tokens={rows[8]['GEN']}")
+
+
 def run(smoke: bool = False):
     quants = [("bf16", None)] if smoke else \
         [("bf16", None),
@@ -373,6 +448,7 @@ def run(smoke: bool = False):
             _paged_capacity(cfg, params)
             _continuous_batching(cfg, params, n_requests=6)
             _mixed_priority(cfg, params, n_low=4, n_high=2)
+            _sharded_pool(smoke=True)
             continue
         for bsz in (1, 2, 4):
             # contiguous layout here: the TTFT probes time the contiguous
@@ -401,6 +477,8 @@ def run(smoke: bool = False):
         _paged_capacity(cfg, params)
         _continuous_batching(cfg, params)
         _mixed_priority(cfg, params)
+    if not smoke:
+        _sharded_pool(smoke=False)
 
 
 if __name__ == "__main__":

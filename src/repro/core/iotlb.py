@@ -36,6 +36,13 @@ class Window:
     phys_base: int
     readable: bool = True
     writable: bool = True
+    shard: int = 0
+    # Which physical memory the window's phys range addresses.  A
+    # page-striped serving pool programs ``phys_base`` SHARD-LOCAL (the
+    # page's offset within its owning shard's slice) and names the shard
+    # here, mirroring how each cluster's IOTLB would be programmed
+    # against its own local memory; single-memory users keep the
+    # default 0.
 
     @property
     def virt_end(self) -> int:

@@ -68,6 +68,11 @@ FSDP_SP_RULES = {
     "kv_lora": ("model",),
     "cache_seq": ("model",),
     "cache_batch": ("pod", "data"),
+    # the paged serving pool's page axis: physical pages are striped
+    # page-aligned over the seq mesh axes (a page lives wholly on one
+    # shard), so paged decode can run the same seq-sharded flash-decoding
+    # combine as the contiguous cache instead of replicating the pool.
+    "pages": ("model",),
     "layers": None,
     "state": None,
 }
@@ -86,6 +91,7 @@ TP_RULES = {
     "kv_lora": None,
     "cache_seq": None,
     "cache_batch": ("pod", "data"),
+    "pages": None,       # TP does not seq-shard: the pool stays replicated
     "layers": None,
     "state": ("model",),
 }
@@ -109,6 +115,25 @@ def use_rules(mesh: Mesh, rules):
 def current_mesh() -> Optional[Mesh]:
     st = getattr(_ctx, "state", None)
     return st[0] if st else None
+
+
+def mesh_axes_for(name: str) -> Tuple[Optional[Mesh], Tuple[str, ...]]:
+    """(mesh, mesh axes) a logical axis maps to under the installed rules.
+
+    Returns (None, ()) outside a rules context, and (mesh, ()) when the
+    axis is unmapped/replicated or its mesh axes are absent.  The layers
+    use this to decide whether an array family is sharded at all (e.g.
+    whether the paged pool gets the shard_map flash-decoding path).
+    """
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return None, ()
+    mesh, rules = st
+    spec = _resolve((name,), mesh, rules)
+    ax = spec[0] if len(spec) else None
+    if ax is None:
+        return mesh, ()
+    return mesh, (ax,) if isinstance(ax, str) else tuple(ax)
 
 
 def _resolve(names: Sequence[Optional[str]], mesh: Mesh, rules) -> P:

@@ -15,6 +15,22 @@ under shard_map:
     cache rows and the result is combined with the flash-decoding
     max/denominator reduction (pmax/psum over the seq axis).
 
+  paged decode/resume — the page POOL is striped page-aligned over the
+    same seq mesh axes (logical axis 'pages'; a physical page lives wholly
+    on one shard).  Each shard translates the page table to its local
+    indices, scatters/gathers only against its LOCAL pool slice, computes
+    per-LOGICAL-page flash partials (running max + denominator + weighted
+    value sum), and the shards combine with the same pmax/psum reduction.
+    Because every logical page has exactly one owning shard, the
+    collectives only merge a page's real partial with exact identities,
+    and the final reduction over the page axis runs in the same canonical
+    order at any shard count — N-shard logits are bit-identical to the
+    1-shard pool's (tests/test_distributed_paging.py).  What the striping
+    divides is pool MEMORY and cache reads/writes (each shard holds and
+    touches 1/N of the pages); the masked score compute stays
+    window-shaped per shard — compacting each shard's resident pages
+    would need data-dependent shapes, so it is left dense.
+
 Head counts never have to divide the mesh (the rule tables replicate
 heads in this mode), which is what makes the scheme total over all ten
 assigned architectures (yi-34b: 56 heads, musicgen: 24).
@@ -29,10 +45,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (current_mesh, lshard, make_spec,
-                                        shard_map)
+                                        mesh_axes_for, shard_map)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
-                                 paged_gather, paged_scatter, rms_norm, rope)
+                                 paged_gather, paged_scatter, rms_norm, rope,
+                                 shard_local_pages)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -70,9 +87,12 @@ def paged_kv_cache_spec(cfg, num_pages: int, page_size: int):
     """Paged layout: one global (num_pages, page_size, KV, dh) pool per
     layer shared by every slot; a per-slot page table (held by the serving
     engine, passed to ``forward`` as ``pages``) maps logical cache rows to
-    pool pages.  Recurrent families keep their per-slot fixed-size state."""
+    pool pages.  The page axis carries the 'pages' logical axis: under a
+    seq-sharding rule table the pool is striped page-aligned over the seq
+    mesh axes instead of replicated.  Recurrent families keep their
+    per-slot fixed-size state."""
     kv, dh = cfg.n_kv_heads, cfg.head_dim
-    ax = ("cache_seq", None, "kv_heads", None)
+    ax = ("pages", None, "kv_heads", None)
     return {
         "k": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
         "v": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
@@ -138,23 +158,43 @@ def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
     the result is bitwise the single-pass chunk attention restricted to
     the same key set — resuming changes WHERE keys are read from, never
     what is summed.
+
+    Queries are processed in SCORE_BYTES_BUDGET-sized chunks (the key
+    axis is never split, so every query row still sees one exact softmax
+    over the same key set and the result is bitwise chunk-count
+    independent): peak score memory is bounded at large ``max_seq``
+    instead of materializing the full (B, Sq, H, Skv) tensor.
     """
     b, sq, hq, dh = q.shape
     skv, kv = k_all.shape[1], k_all.shape[2]
     g = hq // kv
     scale = dh ** -0.5
-    qx = q.reshape(b, sq, kv, g, dh)
-    s = jnp.einsum("bqkgd,bskd->bqkgs", (qx * scale).astype(q.dtype), k_all,
-                   preferred_element_type=jnp.float32)
     kpos = jnp.arange(skv, dtype=jnp.int32)
-    qpos = q0[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
-    mask = (kpos[None, None, :] <= qpos[:, :, None]) & \
-        (kpos[None, None, :] < kv_valid[:, None, None])
-    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v_all,
-                   preferred_element_type=jnp.float32)
-    return o.reshape(b, sq, hq, v_all.shape[-1]).astype(q.dtype)
+
+    def chunk(qx, c0):
+        qc = qx.shape[1]
+        qr = qx.reshape(b, qc, kv, g, dh)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", (qr * scale).astype(q.dtype),
+                       k_all, preferred_element_type=jnp.float32)
+        qpos = q0[:, None] + c0 + jnp.arange(qc, dtype=jnp.int32)[None, :]
+        mask = (kpos[None, None, :] <= qpos[:, :, None]) & \
+            (kpos[None, None, :] < kv_valid[:, None, None])
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", p, v_all,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, qc, hq, v_all.shape[-1]).astype(q.dtype)
+
+    qc = _pick_q_chunk(b, hq, skv)
+    if sq <= qc:
+        return chunk(q, jnp.int32(0))
+    if sq % qc:
+        qc = 1 << ((sq & -sq).bit_length() - 1)   # largest pow2 dividing sq
+    nc = sq // qc
+    qr = jnp.moveaxis(q.reshape(b, nc, qc, hq, dh), 1, 0)
+    c0s = jnp.arange(nc, dtype=jnp.int32) * qc
+    out = jax.lax.map(lambda a: chunk(a[0], a[1]), (qr, c0s))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, v_all.shape[-1])
 
 
 def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes):
@@ -201,6 +241,219 @@ def _seq_axes_info():
 
 def _axes_size(mesh, axes) -> int:
     return functools.reduce(lambda a, x: a * mesh.shape[x], axes, 1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded page pool: per-logical-page flash partials + pmax/psum combine.
+# ---------------------------------------------------------------------------
+
+def paged_pool_axes(num_pages: int):
+    """(mesh, mesh axes) the page pool is striped over, or (None, ()).
+
+    The pool is sharded when a rule table maps the 'pages' logical axis
+    onto present mesh axes AND the pool page count divides them (pages
+    stripe page-aligned: shard ``i`` physically holds global pages
+    [i * num_pages/N, (i+1) * num_pages/N)).  A size-1 striping still
+    takes the shard_map path, so 1-shard and N-shard pools run the same
+    code and stay bit-comparable."""
+    mesh, axes = mesh_axes_for("pages")
+    if mesh is None or not axes or num_pages % _axes_size(mesh, axes):
+        return None, ()
+    return mesh, axes
+
+
+def _pool_page0(mesh, axes, n_local: int):
+    """First global page resident on this shard (inside shard_map)."""
+    idx = 0
+    for ax in axes:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return (idx * n_local).astype(jnp.int32)
+
+
+def _pool_spec(ndim: int) -> P:
+    """PartitionSpec striping a pool leaf's leading (page) axis."""
+    ax = make_spec(("pages",))[0]
+    return P(ax, *([None] * (ndim - 1)))
+
+
+def _page_partials(q, kw, vw, tbl, qpos, kv_valid):
+    """Per-LOGICAL-page flash-decoding partials of ``q`` against a
+    gathered (B, P*ps, KV, dh) window.
+
+    ``tbl``: (B, P) shard-local page table — rows under a -1 entry
+    (unmapped, or resident on another shard) are masked to exact NEG_INF,
+    as are rows failing the causal (``kpos <= qpos``, (B, Sq)) and fill
+    (``kpos < kv_valid``, (B,)) predicates.  Returns per-page running max
+    ``m`` (B, Sq, KV, G, P), denominator ``l`` (same shape), and weighted
+    value sum ``acc`` (..., P, dv).
+
+    Partials are per LOGICAL page, and each logical page is owned by
+    exactly ONE shard of a page-striped pool: a cross-shard pmax/psum of
+    these arrays only ever merges a page's real partial with exact
+    identities (NEG_INF / 0.0), and the final reduction over the page
+    axis (:func:`_combine_page_partials`) runs in the same canonical
+    order at every shard count — so N-shard logits are bit-identical to
+    the 1-shard pool's, not merely close.
+
+    Queries are chunked against SCORE_BYTES_BUDGET like every other
+    attention path (key axis untouched — bitwise chunk-independent).
+    """
+    b, sq, hq, dh = q.shape
+    skv = kw.shape[1]
+    qc = _pick_q_chunk(b, hq, skv)
+    if sq <= qc:
+        return _page_partials_chunk(q, kw, vw, tbl, qpos, kv_valid)
+    if sq % qc:
+        qc = 1 << ((sq & -sq).bit_length() - 1)   # largest pow2 dividing sq
+    nc = sq // qc
+    qr = jnp.moveaxis(q.reshape(b, nc, qc, hq, dh), 1, 0)
+    pr = jnp.moveaxis(qpos.reshape(b, nc, qc), 1, 0)
+    m, l, acc = jax.lax.map(
+        lambda a: _page_partials_chunk(a[0], kw, vw, tbl, a[1], kv_valid),
+        (qr, pr))
+    merge = lambda x: jnp.moveaxis(x, 0, 1).reshape(       # noqa: E731
+        (b, sq) + x.shape[3:])
+    return merge(m), merge(l), merge(acc)
+
+
+def _page_partials_chunk(q, kw, vw, tbl, qpos, kv_valid):
+    b, sq, hq, dh = q.shape
+    skv, kv = kw.shape[1], kw.shape[2]
+    g = hq // kv
+    p = tbl.shape[1]
+    ps = skv // p
+    scale = dh ** -0.5
+    qx = q.reshape(b, sq, kv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", (qx * scale).astype(q.dtype), kw,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    res = (tbl >= 0)[:, kpos // ps]                 # (B, Skv) resident rows
+    mask = res[:, None, :] & \
+        (kpos[None, None, :] <= qpos[:, :, None]) & \
+        (kpos[None, None, :] < kv_valid[:, None, None])
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    sp = s.reshape(b, sq, kv, g, p, ps)
+    m = jnp.max(sp, axis=-1)                        # (B, Sq, KV, G, P)
+    w = jnp.where(sp <= NEG_INF / 2, 0.0, jnp.exp(sp - m[..., None]))
+    l = jnp.sum(w, axis=-1)
+    vp = vw.reshape(b, p, ps, kv, vw.shape[-1])
+    acc = jnp.einsum("bqkgjs,bjskd->bqkgjd", w.astype(q.dtype), vp,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _combine_page_partials(m, l, acc):
+    """Flash-decoding reduction over the LOGICAL page axis.
+
+    Identical code runs after the cross-shard pmax/psum at every shard
+    count (including 1), which is what makes sharded paged logits bitwise
+    shard-count independent.  Fully-masked pages (and fully-masked slots)
+    contribute exact zeros."""
+    mg = jnp.max(m, axis=-1)
+    corr = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - mg[..., None]))
+    lg = jnp.sum(l * corr, axis=-1)
+    accg = jnp.sum(acc * corr[..., None], axis=-2)
+    return accg / jnp.maximum(lg, 1e-30)[..., None]
+
+
+def sharded_paged_scatter(pool, pages, rows, t, valid):
+    """:func:`paged_scatter` against a (possibly page-striped) pool.
+
+    Replicated pool: the plain scatter.  Striped pool: each shard
+    translates the global table to its local indices and applies only
+    the writes landing on pages it physically holds — the rest are
+    dropped locally (they land on their owning shard instead), so no
+    cross-shard traffic is issued for a pure cache write."""
+    mesh, axes = paged_pool_axes(pool.shape[0])
+    if mesh is None:
+        return paged_scatter(pool, pages, rows, t, valid)
+    pspec = _pool_spec(pool.ndim)
+
+    def body(pl, tbl, rw, tt, ok):
+        lt = shard_local_pages(tbl, _pool_page0(mesh, axes, pl.shape[0]),
+                               pl.shape[0])
+        return paged_scatter(pl, lt, rw, tt, ok)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pspec, P(), P(), P(), P()),
+                     out_specs=pspec, check_vma=False)(
+                         pool, pages, rows, t, valid)
+
+
+def _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos, kvv, mesh,
+                         axes):
+    """The one shard_map body both striped GQA paths share: translate
+    the table shard-local, scatter the new rows that land here, gather
+    the slot windows out of the LOCAL pool slice (non-resident rows are
+    garbage and masked — pool reads/writes stay shard-local; the score
+    compute itself is still window-shaped per shard), take per-logical-
+    page flash partials, pmax/psum them across the stripe, and run the
+    canonical page-axis combine.  ``qpos`` (B, Sq) / ``kvv`` (B,) carry
+    the causal/fill predicates: decode passes (pos, pos+1), resume
+    passes (offset+i, offset+len)."""
+    pspec = _pool_spec(cache["k"].ndim)
+
+    def body(pk, pv, kn, vn, qq, tbl, tt, okk, qp, kv_):
+        n_loc = pk.shape[0]
+        lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
+        pk = paged_scatter(pk, lt, kn, tt, okk)
+        pv = paged_scatter(pv, lt, vn, tt, okk)
+        m, l, acc = _page_partials(qq, paged_gather(pk, lt),
+                                   paged_gather(pv, lt), lt, qp, kv_)
+        m = jax.lax.pmax(m, axes)
+        l = jax.lax.psum(l, axes)
+        acc = jax.lax.psum(acc, axes)
+        o = _combine_page_partials(m, l, acc)
+        b, sq = qq.shape[:2]
+        return o.reshape(b, sq, -1, o.shape[-1]).astype(qq.dtype), pk, pv
+
+    o, pk, pv = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, pspec, P(), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), pspec, pspec), check_vma=False)(
+            cache["k"], cache["v"], k, v, q, pages, t, ok, qpos, kvv)
+    return o, {"k": pk, "v": pv}
+
+
+def _paged_decode(q, k, v, cache, pages, pos_b):
+    """One decode step against the paged pool: scatter this token's K/V
+    through the table, then attend over the slot's logical window.
+
+    Replicated pool (no rules context / TP rules / indivisible pool):
+    the local gather path — bit-identical to the contiguous layout at
+    equal window lengths.  Page-striped pool: the shared shard_map body
+    (:func:`_paged_flash_striped`) with the same pmax/psum flash-
+    decoding reduction ``decode_sdpa`` uses."""
+    t = pos_b[:, None]
+    mesh, axes = paged_pool_axes(cache["k"].shape[0])
+    if mesh is None:
+        new_cache = {"k": paged_scatter(cache["k"], pages, k, t, t >= 0),
+                     "v": paged_scatter(cache["v"], pages, v, t, t >= 0)}
+        o = _decode_attention_local(
+            q, paged_gather(new_cache["k"], pages),
+            paged_gather(new_cache["v"], pages),
+            jnp.int32(0), pos_b + 1, ())
+        return o, new_cache
+    return _paged_flash_striped(cache, pages, k, v, q, t, t >= 0, t,
+                                pos_b + 1, mesh, axes)
+
+
+def _paged_resume(q, k, v, cache, pages, t, ok, off_b, len_b):
+    """Resumable-chunk attention against the paged pool: scatter the
+    chunk's K/V at rows [offset, offset+len), then attend the chunk
+    queries over the slot's whole cached window.  Same replicated-vs-
+    striped split as :func:`_paged_decode`."""
+    mesh, axes = paged_pool_axes(cache["k"].shape[0])
+    if mesh is None:
+        new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
+                     "v": paged_scatter(cache["v"], pages, v, t, ok)}
+        o = _resume_attention_local(
+            q, paged_gather(new_cache["k"], pages),
+            paged_gather(new_cache["v"], pages), off_b, off_b + len_b)
+        return o, new_cache
+    qpos = off_b[:, None] + jnp.arange(q.shape[1], dtype=jnp.int32)[None]
+    return _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos,
+                                off_b + len_b, mesh, axes)
 
 
 def _batch_spec(mesh, b: int):
@@ -404,15 +657,13 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         ok = chunk_valid_mask(len_b, s)
         t = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
         if pages is not None:
-            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
-                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
-            kw = paged_gather(new_cache["k"], pages)
-            vw = paged_gather(new_cache["v"], pages)
+            o, new_cache = _paged_resume(q, k, v, cache, pages, t, ok,
+                                         off_b, len_b)
         else:
             new_cache = {"k": contig_scatter(cache["k"], k, t, ok),
                          "v": contig_scatter(cache["v"], v, t, ok)}
-            kw, vw = new_cache["k"], new_cache["v"]
-        o = _resume_attention_local(q, kw, vw, off_b, off_b + len_b)
+            o = _resume_attention_local(q, new_cache["k"], new_cache["v"],
+                                        off_b, off_b + len_b)
     elif mode == "chunk":
         # one causal pass over the whole padded chunk; padded queries sit
         # after every valid token so they never leak into valid outputs,
@@ -422,27 +673,16 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
             t = jnp.broadcast_to(
                 jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
             ok = chunk_valid_mask(chunk_lengths(pos, b), s)
-            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
-                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
+            new_cache = {
+                "k": sharded_paged_scatter(cache["k"], pages, k, t, ok),
+                "v": sharded_paged_scatter(cache["v"], pages, v, t, ok)}
         else:
             new_cache = cache_fill(cache, k, v, pos)
     elif mode == "decode":
         assert s == 1
         if pages is not None:
             pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
-            t = pos_b[:, None]
-            new_cache = {
-                "k": paged_scatter(cache["k"], pages, k, t, t >= 0),
-                "v": paged_scatter(cache["v"], pages, v, t, t >= 0)}
-            # gather the slot-ordered logical window; rows past kv_valid
-            # (incl. any unmapped page's garbage) are masked inside.  The
-            # gathered window is local-only (no seq-sharded flash-decoding
-            # combine): the pool does not seq-shard the way the contiguous
-            # cache does — sharding the page pool is a ROADMAP follow-on.
-            o = _decode_attention_local(
-                q, paged_gather(new_cache["k"], pages),
-                paged_gather(new_cache["v"], pages),
-                jnp.int32(0), pos_b + 1, ())
+            o, new_cache = _paged_decode(q, k, v, cache, pages, pos_b)
         else:
             new_cache = cache_update(cache, k, v, pos)
             o = decode_sdpa(q, new_cache["k"], new_cache["v"],

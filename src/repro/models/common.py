@@ -192,6 +192,21 @@ def paged_gather(pool: jax.Array, pages: jax.Array) -> jax.Array:
     return flat[idx.reshape(pages.shape[0], -1)]
 
 
+def shard_local_pages(pages: jax.Array, page0, n_local: int) -> jax.Array:
+    """Translate a GLOBAL page table to shard-local physical indices.
+
+    ``pages``: (B, P) global page table (-1 = unmapped); ``page0``: first
+    global page resident on this shard; ``n_local``: pages per shard.
+    Entries outside [page0, page0 + n_local) — unmapped or resident on
+    another shard — become -1, so :func:`paged_scatter` drops their
+    writes and :func:`paged_gather` callers mask their rows: each shard
+    of a page-striped pool touches exactly the pages it physically
+    holds, and a logical page has exactly one owning shard.
+    """
+    ok = (pages >= page0) & (pages < page0 + n_local)
+    return jnp.where(ok, pages - page0, -1)
+
+
 def paged_scatter(pool: jax.Array, pages: jax.Array, rows: jax.Array,
                   t: jax.Array, valid: jax.Array) -> jax.Array:
     """Scatter per-slot rows into a paged pool at logical positions.

@@ -15,11 +15,17 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import lshard
-from repro.models.attention import _resume_attention_local, sdpa
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import lshard, shard_map
+from repro.models.attention import (NEG_INF, _combine_page_partials,
+                                    _page_partials, _pool_page0, _pool_spec,
+                                    _resume_attention_local, paged_pool_axes,
+                                    sdpa, sharded_paged_scatter)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
-                                 paged_gather, paged_scatter, rms_norm, rope)
+                                 paged_gather, paged_scatter, rms_norm, rope,
+                                 shard_local_pages)
 
 
 def mla_dims(cfg):
@@ -52,11 +58,12 @@ def mla_cache_spec(cfg, batch: int, capacity: int):
 def paged_mla_cache_spec(cfg, num_pages: int, page_size: int):
     """Paged layout for the compressed cache: a (num_pages, page_size,
     r+dr) pool per layer, addressed through the engine's per-slot page
-    table (see attention.paged_kv_cache_spec)."""
+    table and striped page-aligned over the seq mesh axes when a rule
+    table maps 'pages' (see attention.paged_kv_cache_spec)."""
     r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
     return {
         "ckv": ParamSpec((num_pages, page_size, r + dr),
-                         ("cache_seq", None, None), init="zeros"),
+                         ("pages", None, None), init="zeros"),
     }
 
 
@@ -66,6 +73,112 @@ def _compress(p, x, cfg):
     ckv_full = dense(x, p["w_dkv"], cfg.quant)
     c_kv, k_r = ckv_full[..., :r], ckv_full[..., r:]
     return rms_norm(c_kv, p["kv_norm"]), k_r
+
+
+def _mla_paged_decode(q_c, q_rope, entry, pool, pages, pos_b, r,
+                      scale_dim):
+    """Absorbed-form decode against a PAGE-STRIPED compressed pool.
+
+    Each shard scatters/gathers only its resident pages and computes
+    per-logical-page flash partials — here the weighted sum runs in the
+    COMPRESSED space (ctx partials are (B, 1, H, P, r)), so the
+    cross-shard psum moves r floats per head per page, not dv per key
+    row.  Same bitwise shard-count independence argument as
+    attention._page_partials.  Returns (ctx_c f32 (B,1,H,r), new pool).
+    """
+    mesh, axes = paged_pool_axes(pool.shape[0])
+    pspec = _pool_spec(pool.ndim)
+
+    def body(pl, en, qc, qr, tbl, pb):
+        n_loc = pl.shape[0]
+        lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
+        pl = paged_scatter(pl, lt, en, pb[:, None], (pb >= 0)[:, None])
+        buf = paged_gather(pl, lt)          # slot window, local pages only
+        b, w = buf.shape[:2]
+        p_ = tbl.shape[1]
+        ps = w // p_
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        sc = jnp.einsum("bqhr,bsr->bqhs", qc, c_all,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("bqhd,bsd->bqhs", qr, kr_all,
+                         preferred_element_type=jnp.float32)
+        sc = sc * (scale_dim ** -0.5)
+        kpos = jnp.arange(w, dtype=jnp.int32)
+        res = (lt >= 0)[:, kpos // ps]      # (B, W) resident rows
+        mask = res[:, None, :] & (kpos[None, None, :] <= pb[:, None, None])
+        sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
+        scp = sc.reshape(b, 1, sc.shape[2], p_, ps)
+        m = jnp.max(scp, axis=-1)           # (B, 1, H, P)
+        wgt = jnp.where(scp <= NEG_INF / 2, 0.0,
+                        jnp.exp(scp - m[..., None]))
+        l = jnp.sum(wgt, axis=-1)
+        acc = jnp.einsum("bqhjs,bjsr->bqhjr", wgt.astype(qc.dtype),
+                         c_all.reshape(b, p_, ps, r),
+                         preferred_element_type=jnp.float32)
+        m = jax.lax.pmax(m, axes)
+        l = jax.lax.psum(l, axes)
+        acc = jax.lax.psum(acc, axes)
+        return _combine_page_partials(m, l, acc), pl
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pspec, P(), P(), P(), P(), P()),
+                     out_specs=(P(), pspec), check_vma=False)(
+                         pool, entry, q_c, q_rope, pages, pos_b)
+
+
+def _mla_paged_resume(p, qq, entry, pool, pages, t, ok, off_b, len_b, cfg,
+                      dims):
+    """Resumable-chunk MLA against the paged compressed pool: scatter the
+    chunk's compressed entries, expand the slot's cached window back
+    through W_UK/W_UV, attend with absolute causal masking.  Replicated
+    pool: the local expand + exact-softmax path (bit-identical to the
+    contiguous layout).  Page-striped pool: each shard expands only its
+    resident pages and the shards combine per-logical-page flash partials
+    with pmax/psum (see attention._page_partials)."""
+    b, h, r, dn, dr, dv = dims
+    mesh, axes = paged_pool_axes(pool.shape[0])
+    if mesh is None:
+        new_cache = {"ckv": paged_scatter(pool, pages, entry, t, ok)}
+        buf = paged_gather(new_cache["ckv"], pages)
+        w = buf.shape[1]
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        k_nope_w = dense(c_all, p["w_uk"], cfg.quant).reshape(b, w, h, dn)
+        v_w = dense(c_all, p["w_uv"], cfg.quant).reshape(b, w, h, dv)
+        k_full = jnp.concatenate(
+            [k_nope_w, jnp.broadcast_to(kr_all[:, :, None, :],
+                                        (b, w, h, dr))], axis=-1)
+        o = _resume_attention_local(qq, k_full, v_w, off_b, off_b + len_b)
+        return o, new_cache
+
+    pspec = _pool_spec(pool.ndim)
+
+    def body(pl, en, q_, tbl, tt, okk, q0, kvv, w_uk, w_uv):
+        n_loc = pl.shape[0]
+        lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
+        pl = paged_scatter(pl, lt, en, tt, okk)
+        buf = paged_gather(pl, lt)
+        w = buf.shape[1]
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        k_nope_w = dense(c_all, w_uk, cfg.quant).reshape(b, w, h, dn)
+        v_w = dense(c_all, w_uv, cfg.quant).reshape(b, w, h, dv)
+        k_full = jnp.concatenate(
+            [k_nope_w, jnp.broadcast_to(kr_all[:, :, None, :],
+                                        (b, w, h, dr))], axis=-1)
+        qpos = q0[:, None] + jnp.arange(q_.shape[1], dtype=jnp.int32)[None]
+        m, l, acc = _page_partials(q_, k_full, v_w, lt, qpos, kvv)
+        m = jax.lax.pmax(m, axes)
+        l = jax.lax.psum(l, axes)
+        acc = jax.lax.psum(acc, axes)
+        o = _combine_page_partials(m, l, acc)
+        return o.reshape(b, q_.shape[1], h, dv).astype(q_.dtype), pl
+
+    o, pl = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P(), P(), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), pspec), check_vma=False)(
+            pool, entry, qq, pages, t, ok, off_b, off_b + len_b,
+            p["w_uk"], p["w_uv"])
+    return o, {"ckv": pl}
 
 
 def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
@@ -110,22 +223,22 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         ok = chunk_valid_mask(len_b, s)
         t = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
         entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
         if pages is not None:
-            new_cache = {"ckv": paged_scatter(cache["ckv"], pages, entry,
-                                              t, ok)}
-            buf = paged_gather(new_cache["ckv"], pages)
+            o, new_cache = _mla_paged_resume(
+                p, qq, entry, cache["ckv"], pages, t, ok, off_b, len_b, cfg,
+                (b, h, r, dn, dr, dv))
         else:
             new_cache = {"ckv": contig_scatter(cache["ckv"], entry, t, ok)}
             buf = new_cache["ckv"]
-        w = buf.shape[1]
-        c_all, kr_all = buf[..., :r], buf[..., r:]
-        k_nope_w = dense(c_all, p["w_uk"], cfg.quant).reshape(b, w, h, dn)
-        v_w = dense(c_all, p["w_uv"], cfg.quant).reshape(b, w, h, dv)
-        k_full = jnp.concatenate(
-            [k_nope_w, jnp.broadcast_to(kr_all[:, :, None, :],
-                                        (b, w, h, dr))], axis=-1)
-        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
-        o = _resume_attention_local(qq, k_full, v_w, off_b, off_b + len_b)
+            w = buf.shape[1]
+            c_all, kr_all = buf[..., :r], buf[..., r:]
+            k_nope_w = dense(c_all, p["w_uk"], cfg.quant).reshape(b, w, h, dn)
+            v_w = dense(c_all, p["w_uv"], cfg.quant).reshape(b, w, h, dv)
+            k_full = jnp.concatenate(
+                [k_nope_w, jnp.broadcast_to(kr_all[:, :, None, :],
+                                            (b, w, h, dr))], axis=-1)
+            o = _resume_attention_local(qq, k_full, v_w, off_b, off_b + len_b)
     elif mode in ("train", "prefill", "chunk"):
         # naive (expanded) form + shared context-parallel SDPA.
         k_nope = dense(c_kv, p["w_uk"], cfg.quant).reshape(b, s, h, dn)
@@ -151,8 +264,8 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                 t = jnp.broadcast_to(
                     jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
                 ok = chunk_valid_mask(chunk_lengths(pos, b), s)
-                new_cache = {"ckv": paged_scatter(cache["ckv"], pages,
-                                                  entry, t, ok)}
+                new_cache = {"ckv": sharded_paged_scatter(
+                    cache["ckv"], pages, entry, t, ok)}
             else:
                 buf = cache["ckv"]
                 cap = buf.shape[1]
@@ -167,6 +280,23 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
         # per-slot write at `pos` (negative = inactive slot, no write).
         pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+        if pages is not None and \
+                paged_pool_axes(cache["ckv"].shape[0])[0] is not None:
+            # page-striped pool: shard-local scatter/gather + the
+            # cross-shard flash-decoding combine, in compressed space.
+            w_uk = p["w_uk"].reshape(r, h, dn)
+            q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                             w_uk.astype(jnp.float32))
+            ctx_c, pool = _mla_paged_decode(
+                q_c.astype(x.dtype), q_rope, entry, cache["ckv"], pages,
+                pos_b, r, scale_dim)
+            new_cache = {"ckv": pool}
+            w_uv = p["w_uv"].reshape(r, h, dv)
+            o = jnp.einsum("bqhr,rhv->bqhv", ctx_c,
+                           w_uv.astype(jnp.float32))
+            o = o.astype(x.dtype)
+            y = dense(o.reshape(b, s, h * dv), p["w_o"], cfg.quant)
+            return y, new_cache
         if pages is not None:
             pool = paged_scatter(cache["ckv"], pages, entry,
                                  pos_b[:, None], (pos_b >= 0)[:, None])

@@ -30,8 +30,14 @@ page_size] * page_size + t % page_size``.  The table is shared by every
 layer (each layer owns its own pool array), chunk/decode writes scatter
 through it, and decode gathers the slot's logical window back before
 attention, so paging changes storage addressing only — the math (and its
-outputs) is bit-identical to the contiguous layout.  Recurrent families
-(SSM/xLSTM) keep fixed-size per-slot state and bypass paging.
+outputs) is bit-identical to the contiguous layout.  Under a
+seq-sharding rule table the pool is additionally STRIPED page-aligned
+over the seq mesh axes (logical axis 'pages'): each shard scatters and
+gathers only the pages it physically holds and paged decode/resume
+combine per-logical-page flash partials across shards with pmax/psum —
+bit-identical at any shard count (models/attention.py docstring).
+Recurrent families (SSM/xLSTM) keep fixed-size per-slot state and
+bypass paging.
 """
 from __future__ import annotations
 

@@ -19,12 +19,24 @@ concern each — the contract every change must preserve:
     priority first, youngest within a class), which resident prompt a
     new request may share a prefix with.  Never touches pages or device
     state.
-  * :mod:`repro.serve.allocator` — ACCOUNTING.  Owns the physical page
-    pool: free list, refcounted per-slot page tables (prefix sharing),
-    copy-on-write barriers, worst-case growth reservations, and the
-    hardware-faithful 32-entry LRU IOTLB over the page table.  Never
-    decides policy and never touches device memory — COW hands the
-    engine (src, dst) physical copies to apply.
+  * :mod:`repro.serve.allocator` — ACCOUNTING, now PER SHARD.  Owns the
+    physical page pool: ONE FREE LIST PER POOL SHARD (the pool is
+    striped page-aligned over the seq mesh axes; shard ``s`` physically
+    holds pages [s*N/S, (s+1)*N/S)), refcounted per-slot page tables
+    (prefix sharing), copy-on-write barriers, worst-case growth
+    reservations, and the hardware-faithful 32-entry LRU IOTLB whose
+    windows are programmed against SHARD-LOCAL physical pages (phys
+    base = the page's offset within its owning shard's stripe).  The
+    contract: any physical page can back any logical page, so
+    allocation BALANCES across shards (most-free shard first, ties to
+    the lowest shard id) and exhaustion stays a POOL-level event — one
+    shard running dry never faults while another still has pages;
+    growth reservations are held against the pool, not a shard; a
+    released page returns to its OWNING shard's free list; refcounts
+    and COW semantics are shard-oblivious (a copy may cross shards —
+    the engine applies it on device).  ``num_shards=1`` degrades to the
+    single FIFO free list bit-for-bit.  Never decides policy and never
+    touches device memory.
   * :mod:`repro.serve.engine` — EXECUTION + the client session.
     ``submit(req) -> RequestHandle`` queues a request asynchronously
     (no slot or dispatch yet) and returns a handle exposing ``status``,
@@ -43,7 +55,12 @@ Every scheduling decision is pure addressing: logits are bit-identical
 to the single-pass, never-preempted, unshared execution of the same
 requests (tests/test_continuous_batching.py, tests/test_session_api.py
 enforce this), and at uniform priority the session path reproduces the
-legacy batch path token for token.
+legacy batch path token for token.  Under a seq-sharding rule table the
+pool is additionally DISTRIBUTED: each pool leaf is placed page-striped
+over the mesh (per-shard pool memory ~1/N), paged decode/resume combine
+per-logical-page flash partials across shards with pmax/psum, and the
+logits are bit-identical at every shard count
+(tests/test_distributed_paging.py).
 """
 from repro.serve.config import Request, ServeConfig  # noqa: F401
 from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401

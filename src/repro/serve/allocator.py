@@ -3,9 +3,15 @@
 This is the ACCOUNTING layer of the serving stack (scheduler = policy,
 engine = execution).  It owns
 
-  * the free list of physical pages and each slot's page table
-    (``page_table[slot, j]`` = physical page backing logical page ``j``,
-    -1 = unmapped),
+  * the free lists of physical pages — ONE PER POOL SHARD when the pool
+    is striped over the seq mesh (``num_shards``; shard ``s`` owns the
+    page-aligned stripe [s*num_pages/N, (s+1)*num_pages/N)) — and each
+    slot's page table (``page_table[slot, j]`` = physical page backing
+    logical page ``j``, -1 = unmapped).  Any physical page can back any
+    logical page, so exhaustion is still a POOL-level event: allocation
+    balances across shards (most-free shard first) for even per-shard
+    occupancy, and a single shard running dry never faults while
+    another still has pages,
   * per-page REFCOUNTS — prefix sharing points several slots' tables at
     the same physical page; a page returns to the free list only when its
     last reference is released,
@@ -33,43 +39,82 @@ from repro.core.iotlb import PagedIotlb, Window
 
 class PageAllocator:
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 pages_per_slot: int):
+                 pages_per_slot: int, num_shards: int = 1):
+        assert num_pages % num_shards == 0, \
+            f"pool of {num_pages} pages does not stripe over {num_shards}"
         self.num_pages = num_pages
         self.page_size = page_size
         self.pages_per_slot = pages_per_slot
         self.slot_span = pages_per_slot * page_size
+        self.num_shards = num_shards
+        self.pages_per_shard = num_pages // num_shards
         self.page_table = np.full((max_batch, pages_per_slot), -1, np.int32)
-        self.free_pages: List[int] = list(range(num_pages))
+        # one free list per pool shard; shard s physically holds the
+        # page-aligned stripe [s*pps, (s+1)*pps).  num_shards=1 degrades
+        # to the single FIFO free list, behavior bit-preserved.
+        self._free: List[List[int]] = [
+            list(range(s * self.pages_per_shard,
+                       (s + 1) * self.pages_per_shard))
+            for s in range(num_shards)]
         self.refcount = np.zeros((num_pages,), np.int32)
         # per-slot worst-case pages still to be grown (reservation
-        # accounting; stays 0 under overcommit).
+        # accounting; stays 0 under overcommit).  Reservations are held
+        # against the POOL, not a shard: any shard's page can satisfy
+        # them, so balance never strands a reservation.
         self.growth_due = np.zeros((max_batch,), np.int32)
         self.iotlb = PagedIotlb()
 
     # -- queries ------------------------------------------------------------
+    @property
+    def free_pages(self) -> List[int]:
+        """Flat shard-order view of every free page (compat/telemetry)."""
+        return [p for shard in self._free for p in shard]
+
+    def free_by_shard(self) -> List[int]:
+        return [len(shard) for shard in self._free]
+
+    def used_by_shard(self) -> List[int]:
+        return [self.pages_per_shard - n for n in self.free_by_shard()]
+
+    def shard_of(self, phys: int) -> int:
+        return phys // self.pages_per_shard
+
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self.free_pages)
+        return self.num_pages - sum(self.free_by_shard())
 
     def mapped_count(self, slot: int) -> int:
         return int((self.page_table[slot] >= 0).sum())
 
     def reserved_free(self) -> int:
         """Free pages not spoken for by outstanding growth reservations."""
-        return len(self.free_pages) - int(self.growth_due.sum())
+        return sum(self.free_by_shard()) - int(self.growth_due.sum())
 
     def _window(self, slot: int, j: int, phys: int) -> Window:
         ps = self.page_size
         return Window(name=f"slot{slot}p{j}",
                       virt_base=slot * self.slot_span + j * ps, size=ps,
-                      phys_base=phys * ps, readable=True, writable=True)
+                      phys_base=(phys % self.pages_per_shard) * ps,
+                      readable=True, writable=True,
+                      shard=self.shard_of(phys))
 
     # -- allocation ---------------------------------------------------------
+    def _pop_free(self) -> Optional[int]:
+        """Oldest free page of the MOST-FREE shard (lowest shard id on
+        ties): keeps per-shard occupancy balanced so every shard carries
+        ~1/N of the resident pages and no shard is a hotspot."""
+        best = max(range(self.num_shards), key=lambda s: len(self._free[s]))
+        if not self._free[best]:
+            return None
+        return self._free[best].pop(0)
+
     def alloc(self, slot: int, j: int) -> bool:
-        """Map logical page ``j`` of ``slot`` to a free physical page and
-        enter the window into the IOTLB page table.  False = exhausted."""
-        if not self.free_pages:
+        """Map logical page ``j`` of ``slot`` to a free physical page
+        (balanced across pool shards) and enter the window into the IOTLB
+        page table.  False = the WHOLE pool is exhausted (a single empty
+        shard alone never fails an allocation)."""
+        phys = self._pop_free()
+        if phys is None:
             return False
-        phys = self.free_pages.pop(0)
         self.page_table[slot, j] = phys
         self.refcount[phys] = 1
         self.iotlb.map(self._window(slot, j, phys))
@@ -94,8 +139,12 @@ class PageAllocator:
         phys = int(self.page_table[slot, j])
         if phys < 0 or self.refcount[phys] <= 1:
             return None
-        assert self.free_pages, "COW page was not accounted at admission"
-        dst = self.free_pages.pop(0)
+        dst = self._pop_free()
+        if dst is None:     # pragma: no cover - accounting error upstream
+            # a hard raise (not assert): under python -O a None dst would
+            # otherwise corrupt the whole refcount array via numpy's
+            # None-as-newaxis indexing before anything fails.
+            raise RuntimeError("COW page was not accounted at admission")
         self.refcount[phys] -= 1
         self.refcount[dst] = 1
         self.page_table[slot, j] = dst
@@ -112,7 +161,7 @@ class PageAllocator:
                 p = int(phys)
                 self.refcount[p] -= 1
                 if self.refcount[p] == 0:
-                    self.free_pages.append(p)
+                    self._free[self.shard_of(p)].append(p)
         self.page_table[slot] = -1
         self.growth_due[slot] = 0
 

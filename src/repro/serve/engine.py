@@ -44,6 +44,16 @@ request's physical pages for their common whole-page prompt prefix
 (copy-on-write at the first divergent page) and resume prefill at the
 first unshared row — admission cost scales with the UNSHARED suffix.
 
+Sharded page pool: constructed inside a ``use_rules`` context whose
+table maps the 'pages' logical axis (the default ``fsdp_sp`` stripes it
+over 'model'), the engine rounds the pool up to a stripe multiple,
+places every pool leaf physically page-striped over the seq mesh axes
+(per-shard pool memory ~1/N), hands the allocator one balanced free
+list per shard, and the jitted steps take the shard_map flash-decoding
+path — logits bit-identical at any shard count.  Keep the rules
+context installed while the engine serves: the steps trace on their
+first dispatch, and the trace captures the mesh that is current THEN.
+
 Two Shaheen touches survive every layer: weights can be served PACKED
 sub-byte (quantize_for_serving) — decode is weight-bandwidth-bound,
 exactly where the paper's formats pay — and every cache write is guarded
@@ -60,8 +70,10 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
+from repro.distributed.sharding import mesh_axes_for
 from repro.models import init_cache, init_paged_cache
 from repro.models.common import is_spec_tree_leaf
 from repro.models.config import ArchConfig
@@ -175,20 +187,47 @@ class ServingEngine:
             self.num_pages = (serve_cfg.num_pages
                               if serve_cfg.num_pages is not None
                               else bsz * self.pages_per_slot)
+            # Pool striping: when an installed rule table maps the
+            # 'pages' logical axis onto present mesh axes, the pool is
+            # distributed page-aligned over those axes (shard i holds
+            # global pages [i*N/S, (i+1)*N/S)) and paged decode/resume
+            # run the cross-shard flash-decoding combine.  The page
+            # count is rounded UP to a stripe multiple so every shard
+            # holds an equal slice; the allocator balances free pages
+            # per shard and the jitted steps take the shard_map path.
+            mesh, paxes = mesh_axes_for("pages")
+            self.pool_shards = 1
+            self._pool_sharding = None
+            if mesh is not None and paxes:
+                self.pool_shards = int(
+                    np.prod([mesh.shape[a] for a in paxes]))
+                self.num_pages = -(-self.num_pages // self.pool_shards) \
+                    * self.pool_shards
+                self._pool_sharding = NamedSharding(mesh, PartitionSpec(
+                    None, paxes[0] if len(paxes) == 1 else paxes))
             self.cache = init_paged_cache(cfg, bsz, self.num_pages, ps)
             self._decode = jax.jit(make_paged_decode_step(cfg),
                                    donate_argnums=1)
             self._prefill = jax.jit(make_paged_chunked_prefill_step(cfg),
                                     donate_argnums=1)
             self.alloc = PageAllocator(self.num_pages, ps, bsz,
-                                       self.pages_per_slot)
+                                       self.pages_per_slot,
+                                       num_shards=self.pool_shards)
             # which cache leaves are shared page POOLS (axis 1 = pages)
             # vs per-slot state (axis 1 = batch) — drives swap and COW.
             specs = cache_specs(cfg, bsz, 0, num_pages=self.num_pages,
                                 page_size=ps)
             flat_specs, _ = jax.tree.flatten(specs,
                                              is_leaf=is_spec_tree_leaf)
-            self._pooled = [s.axes[1] == "cache_seq" for s in flat_specs]
+            self._pooled = [s.axes[1] == "pages" for s in flat_specs]
+            if self._pool_sharding is not None:
+                # place each pool leaf physically striped: per-shard
+                # pool memory is ~1/N of the replicated layout.
+                flat_c, treedef = jax.tree.flatten(self.cache)
+                self.cache = jax.tree.unflatten(treedef, [
+                    jax.device_put(leaf, self._pool_sharding)
+                    if pooled else leaf
+                    for leaf, pooled in zip(flat_c, self._pooled)])
             # prefix sharing needs EVERY cache-carrying layer paged:
             # recurrent state cannot be inherited from a sharer.
             self._can_share = serve_cfg.prefix_sharing and \
@@ -261,6 +300,14 @@ class ServingEngine:
 
     def pages_in_use(self) -> int:
         return self.alloc.pages_in_use()
+
+    def pool_bytes_per_shard(self) -> int:
+        """Device bytes of page-pool state ONE pool shard holds (the
+        whole pool when unsharded) — the memory the striping divides."""
+        flat, _ = jax.tree.flatten(self.cache)
+        total = sum(leaf.nbytes for leaf, pooled
+                    in zip(flat, self._pooled) if pooled)
+        return total // self.pool_shards
 
     # -- page demand --------------------------------------------------------
     def _max_pages(self, req: Request) -> int:

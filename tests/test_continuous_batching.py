@@ -97,6 +97,27 @@ def test_resumable_prefill_bit_exact_all_families(family):
     _assert_same_outputs(got, ref)
 
 
+@pytest.mark.parametrize("family", ["dense", "mla"])
+def test_resume_attention_query_chunking_bit_exact(family, monkeypatch):
+    """_resume_attention_local under a tiny SCORE_BYTES_BUDGET (forcing
+    several query chunks per resumed-prefill dispatch) emits logits
+    bit-identical to the unchunked run: the key axis is never split, so
+    every query row still sees one exact softmax over the same key set
+    and chunking is pure peak-memory bounding."""
+    from repro.models import attention
+    cfg = FAMILY_CFGS[family]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [list(range(2, 50)), [3, 1, 4, 1, 5, 9]]     # 48-row prompt
+    sc = dict(max_batch=2, max_prompt=32, max_new_tokens=4, max_seq=64,
+              page_size=4, record_logits=True)
+    ref, _ = _serve(cfg, params, ServeConfig(**sc), prompts)
+    # budget covers < one query row of scores: the 32-row resumed chunk
+    # splits into the 16-row floor chunks (see _pick_q_chunk).
+    monkeypatch.setattr(attention, "SCORE_BYTES_BUDGET", 1)
+    got, _ = _serve(cfg, params, ServeConfig(**sc), prompts)
+    _assert_same_outputs(got, ref)
+
+
 def test_resumable_prefill_interleaves_with_decode():
     """While a long prompt is mid-prefill, an already-admitted request
     keeps decoding — prefill ticks do not stall the decode loop."""

@@ -1,0 +1,176 @@
+"""Sharded page pool: 1-shard vs N-shard bit-exactness (8 host devices).
+
+The paged pool is striped page-aligned over the seq mesh axes and paged
+decode/resume attention combines per-logical-page flash partials across
+shards with pmax/psum.  Because every logical page is owned by exactly
+one shard (cross-shard collectives only merge real partials with exact
+identities) and the final reduction over the page axis runs in the same
+canonical order at every shard count, an N-shard pool must produce
+logits BIT-IDENTICAL to the 1-shard pool — through multi-chunk resumable
+prefill, prefix-shared/COW page tables, and a swap-out/swap-in cycle,
+for GQA and MLA alike.
+
+Subprocess isolation like tests/test_distributed.py: the host device
+count locks at first jax init.
+"""
+import subprocess
+import sys
+import textwrap
+
+_PREAMBLE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_test_mesh
+
+GQA = ArchConfig(name='pg', family='dense', n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+MLA = ArchConfig(name='pg_mla', family='dense', n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                 kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                 v_head_dim=16, decode_margin=32,
+                 pattern=(('scan', 'mla_mlp', 2),), dtype=jnp.float32)
+
+
+def serve(cfg, mesh_shape, plan, sc_kw):
+    # mesh (8,1): model axis size 1 -> 1-shard pool; (1,8): 8 shards.
+    # Both take the SAME shard_map code path, so the comparison isolates
+    # the cross-shard combine.  plan: [(submit_tick, rid, prompt)].
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_test_mesh(mesh_shape, ('data', 'model'))
+    with use_rules(mesh, 'fsdp_sp'):
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(record_logits=True, **sc_kw))
+        todo = sorted(plan)
+        while todo or eng.sched.has_work():
+            while todo and todo[0][0] <= eng.tick_no:
+                _, rid, p = todo.pop(0)
+                eng.submit(Request(rid, list(p)))
+            eng.tick()
+    toks = {r.rid: r.out_tokens for r in eng.completed}
+    lgts = {r.rid: np.stack(r.logits) for r in eng.completed if r.logits}
+    return toks, lgts, eng
+
+
+def assert_shard_invariant(cfg, prompts, sc_kw, plan=None):
+    if plan is None:
+        plan = [(0, i, p) for i, p in enumerate(prompts)]
+    t1, l1, e1 = serve(cfg, (8, 1), plan, sc_kw)
+    t8, l8, e8 = serve(cfg, (1, 8), plan, sc_kw)
+    assert e1.pool_shards == 1 and e8.pool_shards == 8
+    assert t1 == t8, (t1, t8)
+    assert set(l1) == set(l8) and len(l1) > 0
+    for rid in l1:
+        np.testing.assert_array_equal(l1[rid], l8[rid])
+    return e1, e8
+"""
+
+
+def run_devices(body: str, n: int = 8):
+    code = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={n}"\n'
+        + _PREAMBLE + textwrap.dedent(body)
+        + '\nprint("SUBPROC_OK")\n')
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SUBPROC_OK" in r.stdout
+    return r.stdout
+
+
+def test_gqa_sharded_pool_bit_identical_and_memory():
+    """Paged decode + multi-chunk resumable prefill: 8-shard logits are
+    bit-identical to the 1-shard pool's, per-shard pool memory is 1/8 of
+    the replicated layout, and the pool leaves are physically striped."""
+    run_devices("""
+        # chunk budget 6 (not a multiple of 8, so the prefill sdpa stays
+        # local and the comparison isolates the POOL sharding); prompts
+        # of 10 and 14 rows fill across several resumed chunks.
+        prompts = [[5, 7, 11, 2, 9, 4, 8, 1, 3, 6], [3, 1, 4],
+                   [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6]]
+        kw = dict(max_batch=2, max_prompt=6, max_new_tokens=6, page_size=4,
+                  num_pages=16, max_seq=24)
+        e1, e8 = assert_shard_invariant(GQA, prompts, kw)
+        assert e8.pool_bytes_per_shard() * 8 == e1.pool_bytes_per_shard()
+        flat, _ = jax.tree.flatten(e8.cache)
+        for leaf, pooled in zip(flat, e8._pooled):
+            if pooled:                      # physically striped on axis 1
+                shard = leaf.addressable_shards[0]
+                assert shard.data.shape[1] * 8 == leaf.shape[1]
+        assert e8.alloc.num_shards == 8
+        # every page went home to its own shard's free list on release.
+        assert e8.alloc.free_by_shard() == [e8.num_pages // 8] * 8
+    """)
+
+
+def test_gqa_sharded_pool_through_cow_and_swap():
+    """The bit-exactness contract holds through refcounted prefix
+    sharing (COW privatize at the divergent partial page) and through a
+    swap-out/swap-in preemption cycle under an overcommitted pool."""
+    run_devices("""
+        # 7 shared rows = 1 full page + a divergent partial page (ps=4):
+        # admission refcount-shares page 0 and COW-copies page 1.  The
+        # sharer arrives 3 ticks after the resident so its prefix rows
+        # are materialized.
+        shared = [5, 7, 11, 2, 9, 4, 8]
+        plan = [(0, 0, shared + [3, 6, 2]), (3, 1, shared + [1, 1, 7])]
+        kw = dict(max_batch=2, max_prompt=16, max_new_tokens=6,
+                  page_size=4, num_pages=16, prefix_sharing=True)
+        e1, e8 = assert_shard_invariant(GQA, None, kw, plan=plan)
+        assert e8.n_shared_admissions > 0 and e8.n_cow_copies > 0
+        assert (e1.n_shared_admissions, e1.n_cow_copies) == \\
+            (e8.n_shared_admissions, e8.n_cow_copies)
+
+        # overcommitted pool: growth mid-decode forces swap preemption.
+        prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9],
+                   [9, 8, 7, 6, 5, 3]]
+        kw = dict(max_batch=2, max_prompt=8, max_new_tokens=12, page_size=4,
+                  num_pages=8, max_seq=20, reserve_decode_pages=False,
+                  preemption='swap')
+        e1, e8 = assert_shard_invariant(GQA, prompts, kw)
+        assert e8.n_preemptions > 0 and e8.n_swap_ins > 0, \\
+            (e8.n_preemptions, e8.n_swap_ins)
+        assert (e1.n_preemptions, e1.n_swap_ins) == \\
+            (e8.n_preemptions, e8.n_swap_ins)
+    """)
+
+
+def test_mla_sharded_pool_bit_identical():
+    """MLA: absorbed-form paged decode (compressed-space partials) and
+    the expand-through-W_UK/W_UV resume path are shard-count invariant,
+    including through a prefix-shared/COW table."""
+    run_devices("""
+        prompts = [[5, 7, 11, 2, 9, 4, 8, 1, 3, 6], [3, 1, 4],
+                   [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6]]
+        kw = dict(max_batch=2, max_prompt=6, max_new_tokens=6, page_size=4,
+                  num_pages=16, max_seq=24)
+        assert_shard_invariant(MLA, prompts, kw)
+
+        shared = [5, 7, 11, 2, 9, 4, 8]
+        plan = [(0, 0, shared + [3, 6, 2]), (3, 1, shared + [1, 1, 7])]
+        kw = dict(max_batch=2, max_prompt=16, max_new_tokens=6,
+                  page_size=4, num_pages=16, prefix_sharing=True)
+        e1, e8 = assert_shard_invariant(MLA, None, kw, plan=plan)
+        assert e8.n_shared_admissions > 0 and e8.n_cow_copies > 0
+    """)
+
+
+def test_sharded_pool_rounds_up_to_stripe_multiple():
+    """A pool that does not divide the shard count is rounded UP to a
+    stripe multiple at engine construction (never silently truncated)."""
+    run_devices("""
+        params = init_params(GQA, jax.random.PRNGKey(0))
+        mesh = make_test_mesh((1, 8), ('data', 'model'))
+        with use_rules(mesh, 'fsdp_sp'):
+            eng = ServingEngine(GQA, params, ServeConfig(
+                max_batch=2, max_prompt=8, max_new_tokens=4, page_size=4,
+                num_pages=19))
+        assert eng.num_pages == 24, eng.num_pages
+        assert eng.num_pages % eng.pool_shards == 0
+        assert eng.alloc.pages_per_shard * 8 == eng.num_pages
+    """)

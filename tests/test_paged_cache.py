@@ -237,6 +237,61 @@ def test_single_token_request_claims_no_decode_page():
     assert len(eng._free_pages) == eng.num_pages
 
 
+def test_allocator_balances_pages_across_shards():
+    """A striped pool's allocator keeps per-shard occupancy balanced
+    (most-free shard first), exhausts only at POOL level, and returns a
+    released page to its owning shard's free list."""
+    from repro.serve.allocator import PageAllocator
+    al = PageAllocator(num_pages=8, page_size=4, max_batch=4,
+                       pages_per_slot=2, num_shards=4)
+    # 4 allocations land on 4 distinct shards (round-robin by balance).
+    for slot in range(4):
+        assert al.alloc(slot, 0)
+    assert al.used_by_shard() == [1, 1, 1, 1]
+    assert sorted(al.shard_of(int(al.page_table[s, 0])) for s in range(4)) \
+        == [0, 1, 2, 3]
+    # next wave fills the second page of every shard; the pool is full.
+    for slot in range(4):
+        assert al.alloc(slot, 1)
+    assert al.used_by_shard() == [2, 2, 2, 2]
+    assert not al.alloc(0, 0)           # pool-level exhaustion only
+    # release: pages go home to their own shard's free list.
+    al.release_slot(2)
+    assert sum(al.free_by_shard()) == 2 and al.pages_in_use() == 6
+    for p in al.free_pages:
+        assert al.shard_of(p) == p // al.pages_per_shard
+
+
+def test_allocator_single_shard_exhaustion_does_not_fault_pool():
+    """One empty shard never fails an allocation while another shard
+    still has pages: exhaustion stays a pool-level event."""
+    from repro.serve.allocator import PageAllocator
+    al = PageAllocator(num_pages=4, page_size=4, max_batch=4,
+                       pages_per_slot=4, num_shards=2)
+    # drain shard 0 completely by hand.
+    al._free[0].clear()
+    for j in range(2):                  # shard 1 still serves
+        assert al.alloc(0, j)
+        assert al.shard_of(int(al.page_table[0, j])) == 1
+    assert not al.alloc(0, 2)           # now the POOL is empty
+
+
+def test_allocator_windows_are_shard_local():
+    """IOTLB windows are programmed against shard-local physical pages:
+    phys_base is the page's offset within its owning shard's stripe."""
+    from repro.serve.allocator import PageAllocator
+    al = PageAllocator(num_pages=8, page_size=4, max_batch=2,
+                       pages_per_slot=4, num_shards=4)
+    for j in range(4):
+        assert al.alloc(0, j)
+    by_name = {w.name: w for w in al.iotlb.windows}
+    for j in range(4):
+        phys = int(al.page_table[0, j])
+        w = by_name[f"slot0p{j}"]
+        assert w.shard == al.shard_of(phys)
+        assert w.phys_base == (phys % al.pages_per_shard) * al.page_size
+
+
 def test_paged_iotlb_windows_map_exactly_allocated_pages():
     """The IOTLB guards page-granular windows: rows inside an allocated
     page translate, the row just past the last allocated page misses."""
