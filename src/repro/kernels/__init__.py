@@ -1,5 +1,25 @@
-"""Pallas TPU kernels for the paper's compute hot-spot (mixed-precision
-quantized matmul) with jit wrappers (ops) and pure-jnp oracles (ref)."""
+"""Pallas TPU kernels for the paper's compute hot-spots, with jit
+wrappers (ops), pure-jnp oracles (ref), and interpret-mode CPU
+fallbacks:
+
+  * mixed-precision quantized matmul (``quantized_matmul`` over
+    ``PackedWeight`` — the paper's sub-byte compute story),
+  * causal flash attention for train/prefill (``flash_attention``),
+  * the FUSED paged flash-decoding kernel for serving
+    (``paged_flash_decode``): page-table translation, pool-page gather,
+    and per-logical-page flash partials in one kernel — one grid
+    program per logical page, the table scalar-prefetched into the
+    BlockSpec index maps, non-resident/future pages skipped.  Wired
+    behind ``ServeConfig.use_pallas_decode``; partials are
+    bit-identical to the lax ``_page_partials`` path for f32 pools.
+
+Every kernel runs under ``interpret=True`` off-TPU, so CPU CI
+exercises the real kernel logic without a TPU plugin.
+"""
 from repro.kernels.ops import (  # noqa: F401
     PackedWeight, prepare_weight, quantized_matmul,
+)
+from repro.kernels.paged_flash_decode import (  # noqa: F401
+    decode_kernel_config, mla_paged_decode_partials,
+    paged_flash_decode_partials, use_pallas_decode,
 )

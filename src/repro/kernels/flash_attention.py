@@ -24,7 +24,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+try:                # CPU-only envs (no TPU plugin) still import the package
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:                     # pragma: no cover
+    pltpu = None
 
 NEG_INF = -1e30
 
@@ -94,8 +98,14 @@ def flash_attention(q, k, v, *, bq: int = 256, bk: int = 256,
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, scale=dh ** -0.5, causal=causal,
         kv_valid=kv_valid)
-    params = None if interpret else pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    if interpret or pltpu is None:      # no TPU plugin: interpret-only
+        params = None
+    else:
+        # jax renamed TPUCompilerParams -> CompilerParams across releases.
+        cp = getattr(pltpu, "CompilerParams", None) or \
+            getattr(pltpu, "TPUCompilerParams")
+        params = cp(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid=grid,

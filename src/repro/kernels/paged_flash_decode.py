@@ -1,0 +1,302 @@
+"""Fused Pallas paged flash-decoding kernel — the paged-serving hot path.
+
+The sharded paged decode/resume path was composed from generic
+primitives: ``paged_gather`` materialized each slot's whole logical
+window ``(B, P*ps, KV, dh)`` in HBM before the lax ``_page_partials``
+reduction consumed it (models/attention.py).  This module fuses the
+page-table translation, the pool-page gather, and the per-logical-page
+flash partial into ONE Pallas kernel — the vLLM PagedAttention /
+flash-decoding (split-KV) shape:
+
+  * grid ``(B, P)``: each program owns one LOGICAL page of one slot,
+  * the per-slot page table rides in as a scalar-prefetch operand, so
+    the ``pl.BlockSpec`` index maps resolve ``tbl[b, j]`` and stream the
+    mapped POOL page straight into VMEM — the gathered window never
+    exists in HBM,
+  * non-resident (``tbl[b, j] < 0``), causally-future, and unfilled
+    pages are skipped with ``pl.when``: their partials are written as
+    the exact flash identities (``m = NEG_INF``, ``l = 0``, ``acc = 0``)
+    without touching the pool — decode at position t reads
+    ``ceil((t+1)/ps)`` pages, not the slot's whole capacity,
+  * each program emits the page's flash partial ``(m, l, acc)`` — the
+    caller's cross-shard ``pmax``/``psum`` and the canonical page-axis
+    combine (``attention._combine_page_partials``) are UNCHANGED, which
+    is what keeps N-shard logits bit-identical to the lax path.
+
+Bit-exactness: per-page scores/weights are the same fp ops in the same
+order as ``attention._page_partials_chunk`` (masking with the same
+``NEG_INF`` identities, f32 score/acc accumulation via
+``preferred_element_type``), so for f32 pools the partials are
+BIT-IDENTICAL to the lax path — the parity suite
+(tests/test_paged_flash_decode.py) asserts equality, not closeness.
+bf16 pools are allclose: XLA picks shape-dependent GEMM strategies for
+bf16 dots, so a (ps, dh) page dot may round differently than the fused
+(P*ps, dh) window dot.
+
+Off-TPU the kernels run with ``interpret=True`` (auto-detected from
+``jax.default_backend()``), so CPU CI exercises the REAL kernel logic —
+grid walk, index-map table lookups, ``pl.when`` skips — through the
+Pallas interpreter.
+
+Serving wires this behind ``ServeConfig.use_pallas_decode``: the engine
+enters :func:`use_pallas_decode` around its jitted dispatches and the
+striped attention paths consult :func:`decode_kernel_config` at trace
+time (models/attention.py, models/mla.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:                                    # CPU-only envs lack the TPU plugin
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:                     # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# The trace-time knob: ServingEngine enters this context around its jitted
+# dispatches; the striped attention paths read it while tracing.
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def use_pallas_decode(enabled: bool = True, interpret: bool | None = None):
+    """Route page-striped paged decode/resume through the fused kernel.
+
+    ``interpret=None`` auto-selects: compiled on TPU backends, the
+    Pallas interpreter everywhere else (the CPU fallback).  Nesting
+    restores the previous state on exit."""
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = (enabled, interpret)
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def decode_kernel_config():
+    """None = lax path; otherwise the ``interpret`` flag to run with."""
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None or not cfg[0]:
+        return None
+    interpret = cfg[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return interpret
+
+
+def _compiler_params(*semantics):
+    # jax renamed TPUCompilerParams -> CompilerParams across releases.
+    cp = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    return None if cp is None else cp(dimension_semantics=semantics)
+
+
+def _require_pltpu():
+    if pltpu is None:                   # pragma: no cover
+        raise RuntimeError(
+            "kernels.paged_flash_decode needs jax.experimental.pallas.tpu "
+            "(scalar-prefetch grid specs); this jax build does not provide "
+            "it — run with ServeConfig.use_pallas_decode=False")
+
+
+# ---------------------------------------------------------------------------
+# GQA: per-logical-page partials of q against the (N, ps, KV, dh) pool.
+# ---------------------------------------------------------------------------
+
+def _gqa_page_kernel(tbl_ref, q_ref, k_ref, v_ref, qp_ref, kvv_ref,
+                     m_ref, l_ref, acc_ref, *, sq, kv, g, ps, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    page = tbl_ref[b, j]                # this program's POOL page (or -1)
+    k0 = j * ps                         # first logical row of the page
+    qp = qp_ref[0]                      # (Sq,) query positions of slot b
+    kvs = kvv_ref[0, 0]                 # filled-row bound of slot b
+    # A page participates iff it is resident on this shard AND at least
+    # one of its rows passes the causal/fill predicates.  Skipped pages
+    # write the exact flash identities the lax path computes for them.
+    active = (page >= 0) & (k0 <= jnp.max(qp)) & (k0 < kvs)
+
+    @pl.when(active)
+    def _():
+        qx = q_ref[0].reshape(sq, kv, g, q_ref.shape[-1])
+        kb = k_ref[0]                   # (ps, KV, dh) — the mapped page
+        vb = v_ref[0]                   # (ps, KV, dv)
+        s = jnp.einsum("qkgd,skd->qkgs", (qx * scale).astype(qx.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (sq, ps), 1)
+        mask = (kpos <= qp[:, None]) & (kpos < kvs)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)         # (Sq, KV, G)
+        w = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = jnp.sum(w, axis=-1)
+        acc = jnp.einsum("qkgs,skd->qkgd", w.astype(qx.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        m_ref[0, :, :, :, 0] = m
+        l_ref[0, :, :, :, 0] = l
+        acc_ref[0, :, :, :, 0, :] = acc
+
+    @pl.when(~active)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def paged_flash_decode_partials(k_pool, v_pool, q, tbl, qpos, kv_valid, *,
+                                interpret: bool | None = None):
+    """Fused per-logical-page flash partials against the paged KV pool.
+
+    Drop-in for ``_page_partials(q, paged_gather(k_pool, tbl),
+    paged_gather(v_pool, tbl), tbl, qpos, kv_valid)`` without the HBM
+    window:  k_pool/v_pool ``(N, ps, KV, dh|dv)`` (the shard-LOCAL pool
+    slice inside shard_map), ``tbl`` (B, P) local page table (-1 =
+    unmapped / other shard), ``qpos`` (B, Sq) query positions, and
+    ``kv_valid`` (B,) filled-row bounds.  Returns f32 ``m``/``l``
+    (B, Sq, KV, G, P) and ``acc`` (B, Sq, KV, G, P, dv) — bit-identical
+    to the lax path for f32 pools (see module docstring)."""
+    _require_pltpu()
+    n, ps, kv, dh = k_pool.shape
+    dv = v_pool.shape[-1]
+    b, sq, hq, _ = q.shape
+    p = tbl.shape[1]
+    g = hq // kv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_gqa_page_kernel, sq=sq, kv=kv, g=g, ps=ps,
+                               scale=dh ** -0.5)
+    # index maps receive the scalar-prefetched table last: the pool
+    # blocks are addressed THROUGH it (clamped; -1 pages are skipped by
+    # the kernel predicate, never read for values).
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, sq, hq, dh), lambda b_, j, t: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, ps, kv, dh),
+                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, ps, kv, dv),
+                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, sq), lambda b_, j, t: (b_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, sq, kv, g, 1), lambda b_, j, t: (b_, 0, 0, 0, j)),
+            pl.BlockSpec((1, sq, kv, g, 1), lambda b_, j, t: (b_, 0, 0, 0, j)),
+            pl.BlockSpec((1, sq, kv, g, 1, dv),
+                         lambda b_, j, t: (b_, 0, 0, 0, j, 0)),
+        ])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq, kv, g, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, kv, g, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, kv, g, p, dv), jnp.float32),
+        ],
+        compiler_params=None if interpret else _compiler_params(
+            "parallel", "arbitrary"),
+        interpret=interpret,
+    )(tbl, q, k_pool, v_pool, qpos,
+      kv_valid.astype(jnp.int32).reshape(b, 1))
+
+
+# ---------------------------------------------------------------------------
+# MLA: compressed-space partials against the (N, ps, r+dr) latent pool.
+# ---------------------------------------------------------------------------
+
+def _mla_page_kernel(tbl_ref, pool_ref, qc_ref, qr_ref, pos_ref,
+                     m_ref, l_ref, acc_ref, *, ps, r, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    page = tbl_ref[b, j]
+    k0 = j * ps
+    pb = pos_ref[0, 0]                  # slot position (-1 = inactive)
+    active = (page >= 0) & (k0 <= pb)
+
+    @pl.when(active)
+    def _():
+        blk = pool_ref[0]               # (ps, r+dr) — the mapped page
+        c, kr = blk[:, :r], blk[:, r:]
+        qc = qc_ref[0]                  # (Sq, H, r) absorbed queries
+        qr = qr_ref[0]                  # (Sq, H, dr)
+        sc = jnp.einsum("qhr,sr->qhs", qc, c,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("qhd,sd->qhs", qr, kr,
+                         preferred_element_type=jnp.float32)
+        sc = sc * scale
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0]
+        sc = jnp.where((kpos <= pb)[None, None, :], sc, NEG_INF)
+        m = jnp.max(sc, axis=-1)        # (Sq, H)
+        w = jnp.where(sc <= NEG_INF / 2, 0.0, jnp.exp(sc - m[..., None]))
+        l = jnp.sum(w, axis=-1)
+        acc = jnp.einsum("qhs,sr->qhr", w.astype(qc.dtype), c,
+                         preferred_element_type=jnp.float32)
+        m_ref[0, :, :, 0] = m
+        l_ref[0, :, :, 0] = l
+        acc_ref[0, :, :, 0, :] = acc
+
+    @pl.when(~active)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def mla_paged_decode_partials(pool, q_c, q_rope, tbl, pos_b, r, scale_dim, *,
+                              interpret: bool | None = None):
+    """Fused compressed-space page partials for MLA absorbed decode.
+
+    Replaces the gather + inline partials in ``mla._mla_paged_decode``:
+    ``pool`` (N, ps, r+dr) shard-local latent pool, ``q_c`` (B, Sq, H, r)
+    absorbed queries, ``q_rope`` (B, Sq, H, dr), ``tbl`` (B, P) local
+    table, ``pos_b`` (B,) slot positions.  The weighted sum stays in the
+    COMPRESSED space — ``acc`` is (B, Sq, H, P, r) — so the caller's
+    cross-shard psum still moves r floats per head per page.  Returns
+    f32 ``(m, l, acc)`` bit-identical to the lax body for f32 pools."""
+    _require_pltpu()
+    n, ps, width = pool.shape
+    b, sq, h, _ = q_c.shape
+    dr = width - r
+    p = tbl.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_mla_page_kernel, ps=ps, r=r,
+                               scale=scale_dim ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, ps, width),
+                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0)),
+            pl.BlockSpec((1, sq, h, r), lambda b_, j, t: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, sq, h, dr), lambda b_, j, t: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, sq, h, 1), lambda b_, j, t: (b_, 0, 0, j)),
+            pl.BlockSpec((1, sq, h, 1), lambda b_, j, t: (b_, 0, 0, j)),
+            pl.BlockSpec((1, sq, h, 1, r), lambda b_, j, t: (b_, 0, 0, j, 0)),
+        ])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, sq, h, p, r), jnp.float32),
+        ],
+        compiler_params=None if interpret else _compiler_params(
+            "parallel", "arbitrary"),
+        interpret=interpret,
+    )(tbl, pool, q_c, q_rope, pos_b.astype(jnp.int32).reshape(b, 1))

@@ -46,6 +46,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (current_mesh, lshard, make_spec,
                                         mesh_axes_for, shard_map)
+from repro.kernels.paged_flash_decode import (decode_kernel_config,
+                                              paged_flash_decode_partials)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
                                  paged_gather, paged_scatter, rms_norm, rope,
@@ -390,16 +392,28 @@ def _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos, kvv, mesh,
     page flash partials, pmax/psum them across the stripe, and run the
     canonical page-axis combine.  ``qpos`` (B, Sq) / ``kvv`` (B,) carry
     the causal/fill predicates: decode passes (pos, pos+1), resume
-    passes (offset+i, offset+len)."""
+    passes (offset+i, offset+len).
+
+    Under :func:`repro.kernels.paged_flash_decode.use_pallas_decode`
+    (ServeConfig.use_pallas_decode) the gather + lax partials are
+    replaced by the FUSED Pallas kernel — page-table lookup in the
+    BlockSpec index maps, one grid program per logical page, no HBM
+    window — while this combine stays byte-for-byte the same, so the
+    two paths produce bit-identical logits for f32 pools."""
     pspec = _pool_spec(cache["k"].ndim)
+    kernel_interpret = decode_kernel_config()
 
     def body(pk, pv, kn, vn, qq, tbl, tt, okk, qp, kv_):
         n_loc = pk.shape[0]
         lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
         pk = paged_scatter(pk, lt, kn, tt, okk)
         pv = paged_scatter(pv, lt, vn, tt, okk)
-        m, l, acc = _page_partials(qq, paged_gather(pk, lt),
-                                   paged_gather(pv, lt), lt, qp, kv_)
+        if kernel_interpret is not None:
+            m, l, acc = paged_flash_decode_partials(
+                pk, pv, qq, lt, qp, kv_, interpret=kernel_interpret)
+        else:
+            m, l, acc = _page_partials(qq, paged_gather(pk, lt),
+                                       paged_gather(pv, lt), lt, qp, kv_)
         m = jax.lax.pmax(m, axes)
         l = jax.lax.psum(l, axes)
         acc = jax.lax.psum(acc, axes)

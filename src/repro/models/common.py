@@ -184,6 +184,15 @@ def paged_gather(pool: jax.Array, pages: jax.Array) -> jax.Array:
     clamps) and MUST be masked by the caller's validity predicate
     (``kv_valid`` / ``kpos <= pos``), exactly as rows past the fill level
     already are in the contiguous layout.
+
+    This materializes the whole (B, P*page_size, *rest) window in HBM
+    before any score math runs.  On the page-striped decode/resume hot
+    path, ``ServeConfig.use_pallas_decode`` replaces this gather + the
+    partials reduction with the fused kernel in
+    :mod:`repro.kernels.paged_flash_decode`, which reads pool pages
+    inside the kernel through the page table and never builds the
+    window; this function remains the canonical layout definition (and
+    the prefill/replicated-pool path).
     """
     n, ps = pool.shape[:2]
     flat = pool.reshape((n * ps,) + pool.shape[2:])

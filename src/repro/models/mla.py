@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import lshard, shard_map
+from repro.kernels.paged_flash_decode import (decode_kernel_config,
+                                              mla_paged_decode_partials)
 from repro.models.attention import (NEG_INF, _combine_page_partials,
                                     _page_partials, _pool_page0, _pool_spec,
                                     _resume_attention_local, paged_pool_axes,
@@ -85,36 +87,48 @@ def _mla_paged_decode(q_c, q_rope, entry, pool, pages, pos_b, r,
     cross-shard psum moves r floats per head per page, not dv per key
     row.  Same bitwise shard-count independence argument as
     attention._page_partials.  Returns (ctx_c f32 (B,1,H,r), new pool).
+
+    Under ``use_pallas_decode`` the gather + inline partials are
+    replaced by the fused compressed-space Pallas kernel
+    (:func:`repro.kernels.paged_flash_decode.mla_paged_decode_partials`)
+    — same partials, same combine, bit-identical f32 logits.
     """
     mesh, axes = paged_pool_axes(pool.shape[0])
     pspec = _pool_spec(pool.ndim)
+    kernel_interpret = decode_kernel_config()
 
     def body(pl, en, qc, qr, tbl, pb):
         n_loc = pl.shape[0]
         lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
         pl = paged_scatter(pl, lt, en, pb[:, None], (pb >= 0)[:, None])
-        buf = paged_gather(pl, lt)          # slot window, local pages only
-        b, w = buf.shape[:2]
-        p_ = tbl.shape[1]
-        ps = w // p_
-        c_all, kr_all = buf[..., :r], buf[..., r:]
-        sc = jnp.einsum("bqhr,bsr->bqhs", qc, c_all,
-                        preferred_element_type=jnp.float32)
-        sc += jnp.einsum("bqhd,bsd->bqhs", qr, kr_all,
-                         preferred_element_type=jnp.float32)
-        sc = sc * (scale_dim ** -0.5)
-        kpos = jnp.arange(w, dtype=jnp.int32)
-        res = (lt >= 0)[:, kpos // ps]      # (B, W) resident rows
-        mask = res[:, None, :] & (kpos[None, None, :] <= pb[:, None, None])
-        sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
-        scp = sc.reshape(b, 1, sc.shape[2], p_, ps)
-        m = jnp.max(scp, axis=-1)           # (B, 1, H, P)
-        wgt = jnp.where(scp <= NEG_INF / 2, 0.0,
-                        jnp.exp(scp - m[..., None]))
-        l = jnp.sum(wgt, axis=-1)
-        acc = jnp.einsum("bqhjs,bjsr->bqhjr", wgt.astype(qc.dtype),
-                         c_all.reshape(b, p_, ps, r),
-                         preferred_element_type=jnp.float32)
+        if kernel_interpret is not None:
+            m, l, acc = mla_paged_decode_partials(
+                pl, qc, qr, lt, pb, r, scale_dim,
+                interpret=kernel_interpret)
+        else:
+            buf = paged_gather(pl, lt)      # slot window, local pages only
+            b, w = buf.shape[:2]
+            p_ = tbl.shape[1]
+            ps = w // p_
+            c_all, kr_all = buf[..., :r], buf[..., r:]
+            sc = jnp.einsum("bqhr,bsr->bqhs", qc, c_all,
+                            preferred_element_type=jnp.float32)
+            sc += jnp.einsum("bqhd,bsd->bqhs", qr, kr_all,
+                             preferred_element_type=jnp.float32)
+            sc = sc * (scale_dim ** -0.5)
+            kpos = jnp.arange(w, dtype=jnp.int32)
+            res = (lt >= 0)[:, kpos // ps]  # (B, W) resident rows
+            mask = res[:, None, :] & \
+                (kpos[None, None, :] <= pb[:, None, None])
+            sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
+            scp = sc.reshape(b, 1, sc.shape[2], p_, ps)
+            m = jnp.max(scp, axis=-1)       # (B, 1, H, P)
+            wgt = jnp.where(scp <= NEG_INF / 2, 0.0,
+                            jnp.exp(scp - m[..., None]))
+            l = jnp.sum(wgt, axis=-1)
+            acc = jnp.einsum("bqhjs,bjsr->bqhjr", wgt.astype(qc.dtype),
+                             c_all.reshape(b, p_, ps, r),
+                             preferred_element_type=jnp.float32)
         m = jax.lax.pmax(m, axes)
         l = jax.lax.psum(l, axes)
         acc = jax.lax.psum(acc, axes)

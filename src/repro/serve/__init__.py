@@ -57,10 +57,21 @@ requests (tests/test_continuous_batching.py, tests/test_session_api.py
 enforce this), and at uniform priority the session path reproduces the
 legacy batch path token for token.  Under a seq-sharding rule table the
 pool is additionally DISTRIBUTED: each pool leaf is placed page-striped
-over the mesh (per-shard pool memory ~1/N), paged decode/resume combine
-per-logical-page flash partials across shards with pmax/psum, and the
-logits are bit-identical at every shard count
-(tests/test_distributed_paging.py).
+over the mesh (per-shard pool memory ~1/N) and KEPT there — the engine
+re-pins pool leaves to their stripe after every host-side page edit
+(COW privatize, swap-in restore), so no data-movement path silently
+replicates the pool — paged decode/resume combine per-logical-page
+flash partials across shards with pmax/psum, and the logits are
+bit-identical at every shard count (tests/test_distributed_paging.py).
+
+``ServeConfig.use_pallas_decode`` swaps the page-partials seam inside
+that combine for the FUSED Pallas flash-decoding kernel
+(:mod:`repro.kernels.paged_flash_decode`): page-table translation,
+pool-page gather, and per-logical-page partials in one kernel — no
+gathered window in HBM, non-resident/future pages skipped.  Off-TPU it
+runs under the Pallas interpreter, and for f32 pools the served logits
+are bit-identical to the lax path at every shard count
+(tests/test_paged_flash_decode.py).
 """
 from repro.serve.config import Request, ServeConfig  # noqa: F401
 from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401

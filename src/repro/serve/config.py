@@ -56,6 +56,17 @@ class ServeConfig:
     # the first unshared row.  Engages only for fully-paged models —
     # recurrent state cannot be inherited — and is pure addressing:
     # logits are unchanged.
+    use_pallas_decode: bool = False
+    # Route PAGE-STRIPED paged decode/resume attention through the fused
+    # Pallas flash-decoding kernel (kernels/paged_flash_decode): page-
+    # table translation + pool-page gather + per-logical-page flash
+    # partials in ONE kernel instead of paged_gather materializing the
+    # window in HBM, with non-resident/future pages skipped.  Off-TPU
+    # the kernel runs through the Pallas interpreter (the CPU fallback),
+    # so the knob is honest everywhere.  The cross-shard combine is
+    # unchanged: f32-pool logits are bit-identical to the lax path.
+    # Inert when the pool is replicated (no 'pages' mesh striping in the
+    # active rule table) — that path keeps its local gather.
     record_logits: bool = False     # keep per-token logits on each Request
     swap_budget_bytes: Optional[int] = None
     # Cap on host memory held by the swap queue (preempted requests park
@@ -85,6 +96,10 @@ class ServeConfig:
             bad("preemption", f"must be 'swap' or 'terminate', "
                 f"got {self.preemption!r}")
         if not self.paged:
+            if self.use_pallas_decode:
+                bad("use_pallas_decode", "needs the paged engine "
+                    "(paged=True); the contiguous layout has no paged "
+                    "flash-decoding kernel")
             if self.max_seq is not None:
                 bad("max_seq", "is only honored by the paged engine "
                     "(paged=True); the contiguous layout fixes slot "

@@ -65,6 +65,7 @@ single-pass, never-preempted, unshared path.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import List, Optional, Tuple
 
 import jax
@@ -74,6 +75,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
 from repro.distributed.sharding import mesh_axes_for
+from repro.kernels.paged_flash_decode import use_pallas_decode
 from repro.models import init_cache, init_paged_cache
 from repro.models.common import is_spec_tree_leaf
 from repro.models.config import ArchConfig
@@ -206,6 +208,12 @@ class ServingEngine:
                 self._pool_sharding = NamedSharding(mesh, PartitionSpec(
                     None, paxes[0] if len(paxes) == 1 else paxes))
             self.cache = init_paged_cache(cfg, bsz, self.num_pages, ps)
+            # Fused Pallas decode: the knob is consulted at TRACE time by
+            # the striped flash-decoding path, so every jitted dispatch
+            # below runs under _kernel_ctx().  Each engine owns its own
+            # jax.jit objects, so traces never leak across engines with
+            # different knob settings.
+            self._use_pallas = bool(serve_cfg.use_pallas_decode)
             self._decode = jax.jit(make_paged_decode_step(cfg),
                                    donate_argnums=1)
             self._prefill = jax.jit(make_paged_chunked_prefill_step(cfg),
@@ -235,6 +243,7 @@ class ServingEngine:
         else:
             self.alloc = None
             self._can_share = False
+            self._use_pallas = False    # contiguous path has no paged kernel
             self.cache = init_cache(cfg, bsz, cap)
             self._decode = jax.jit(make_decode_step(cfg), donate_argnums=1)
             self._prefill = jax.jit(make_chunked_prefill_step(cfg),
@@ -276,6 +285,15 @@ class ServingEngine:
                 if not pooled)
         else:
             self._page_nbytes = self._slot_state_nbytes = 0
+
+    def _kernel_ctx(self):
+        """Context for jitted dispatches: installs the fused-Pallas-decode
+        knob when ``ServeConfig.use_pallas_decode`` asked for it (the
+        striped flash-decoding path reads it at trace time), else a
+        no-op.  Interpret-vs-compiled resolves from the backend."""
+        if self._use_pallas:
+            return use_pallas_decode()
+        return contextlib.nullcontext()
 
     # -- compat views over the split layers ---------------------------------
     @property
@@ -519,12 +537,15 @@ class ServingEngine:
         one = jnp.zeros((bsz, 1), jnp.int32)
         inactive = jnp.full((bsz,), -1, jnp.int32)
         if self.sc.paged:
-            _, self.cache = self._prefill(self.params, self.cache, z_tok,
-                                          z_len, self._pages_dev(), None)
-            _, self.cache = self._prefill(self.params, self.cache, z_tok,
-                                          z_len, self._pages_dev(), z_len)
-            lg, self.cache = self._decode(self.params, self.cache, one,
-                                          inactive, self._pages_dev())
+            with self._kernel_ctx():
+                _, self.cache = self._prefill(self.params, self.cache,
+                                              z_tok, z_len,
+                                              self._pages_dev(), None)
+                _, self.cache = self._prefill(self.params, self.cache,
+                                              z_tok, z_len,
+                                              self._pages_dev(), z_len)
+                lg, self.cache = self._decode(self.params, self.cache, one,
+                                              inactive, self._pages_dev())
         else:
             _, self.cache = self._prefill(self.params, self.cache, z_tok,
                                           z_len)
@@ -576,9 +597,10 @@ class ServingEngine:
             # separate trace of the same jitted step that keeps the
             # single-pass chunk kernel instead of the full-window gather.
             offs = jnp.asarray(offs_np) if offs_np.any() else None
-            logits, self.cache = self._prefill(
-                self.params, self.cache, toks, lens, self._pages_dev(),
-                offs)
+            with self._kernel_ctx():
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, toks, lens, self._pages_dev(),
+                    offs)
         else:
             logits, self.cache = self._prefill(self.params, self.cache,
                                                toks, lens)
@@ -630,10 +652,24 @@ class ServingEngine:
     # -- device <-> host page movement --------------------------------------
     def _map_cache(self, fn_pool, fn_slot):
         """Rebuild the cache pytree, applying ``fn_pool`` to shared page
-        pools and ``fn_slot`` to per-slot state leaves."""
+        pools and ``fn_slot`` to per-slot state leaves.
+
+        Pool leaves are re-pinned to the page-striped NamedSharding after
+        every edit: host-side ``.at[].set`` updates (COW privatize, swap-in
+        restore) produce fresh arrays whose placement the compiler is free
+        to choose, and an unpinned result would silently replicate the
+        pool — N× the per-shard memory the striping exists to save — until
+        the next dispatch reshards it.  The explicit put keeps the leaves
+        striped through every COW and swap cycle (a no-op transfer when
+        the layout already matches)."""
         flat, treedef = jax.tree.flatten(self.cache)
-        out = [fn_pool(leaf) if pooled else fn_slot(leaf)
-               for leaf, pooled in zip(flat, self._pooled)]
+        out = []
+        for leaf, pooled in zip(flat, self._pooled):
+            new = fn_pool(leaf) if pooled else fn_slot(leaf)
+            if pooled and new is not leaf and \
+                    self._pool_sharding is not None:
+                new = jax.device_put(new, self._pool_sharding)
+            out.append(new)
         self.cache = jax.tree.unflatten(treedef, out)
 
     def _apply_copies(self, copies: List[Tuple[int, int]]) -> None:
@@ -839,8 +875,9 @@ class ServingEngine:
         pos_v = jnp.asarray(np.where(mask_np, self.positions, -1)
                             .astype(np.int32))
         if self.sc.paged:
-            logits, self.cache = self._decode(self.params, self.cache, toks,
-                                              pos_v, self._pages_dev())
+            with self._kernel_ctx():
+                logits, self.cache = self._decode(
+                    self.params, self.cache, toks, pos_v, self._pages_dev())
         else:
             logits, self.cache = self._decode(self.params, self.cache, toks,
                                               pos_v)

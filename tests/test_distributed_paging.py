@@ -174,3 +174,120 @@ def test_sharded_pool_rounds_up_to_stripe_multiple():
         assert eng.num_pages % eng.pool_shards == 0
         assert eng.alloc.pages_per_shard * 8 == eng.num_pages
     """)
+
+
+def test_pool_leaf_sharding_survives_cow_and_swap():
+    """Regression for the data-movement fix in engine._map_cache: host-
+    side ``.at[].set`` edits (COW privatize, swap-in restore) must leave
+    every pool leaf on the SAME page-striped NamedSharding — no implicit
+    replication — checked immediately after each edit, before any jitted
+    dispatch could reshard it back."""
+    run_devices("""
+        params = init_params(GQA, jax.random.PRNGKey(0))
+        mesh = make_test_mesh((1, 8), ('data', 'model'))
+        with use_rules(mesh, 'fsdp_sp'):
+            eng = ServingEngine(GQA, params, ServeConfig(
+                max_batch=2, max_prompt=16, max_new_tokens=8, page_size=4,
+                num_pages=16, prefix_sharing=True))
+            def check(tag):
+                flat, _ = jax.tree.flatten(eng.cache)
+                n = 0
+                for leaf, pooled in zip(flat, eng._pooled):
+                    if not pooled:
+                        continue
+                    n += 1
+                    assert leaf.sharding == eng._pool_sharding, \\
+                        (tag, leaf.sharding)
+                    shard = leaf.addressable_shards[0]
+                    assert shard.data.shape[1] * 8 == leaf.shape[1], tag
+                assert n > 0
+            check('init')
+            eng._apply_copies([(0, 8)])     # bare COW-style page copy
+            check('bare-copy')
+            # real serving COW: a prefix-sharing admission diverges at
+            # the partial page and privatizes it.
+            shared = [5, 7, 11, 2, 9, 4, 8]
+            eng.submit(Request(0, shared + [3, 6, 2]))
+            eng.tick()
+            eng.submit(Request(1, shared + [1, 1, 7]))
+            eng.tick()
+            assert eng.n_cow_copies > 0
+            check('serving-cow')
+            # swap round trip: snapshot to host, restore byte-exact.
+            eng._swap_out(0)
+            check('swap-out')
+            sw = eng.sched.swapped.pop(0)
+            eng._swap_in(0, sw)
+            check('swap-in')
+    """)
+
+
+def test_pallas_decode_bit_identical_to_lax_gqa():
+    """ServeConfig.use_pallas_decode routes striped paged decode/resume
+    through the fused kernel; tokens AND per-token logits must stay
+    bitwise equal to the lax path at 1 and 8 shards, through multi-chunk
+    resumable prefill, prefix-shared/COW tables, and swap preemption."""
+    run_devices("""
+        def modes_agree(cfg, plan, kw):
+            for shape in ((8, 1), (1, 8)):
+                tl, ll, el = serve(cfg, shape, plan,
+                                   dict(kw, use_pallas_decode=False))
+                tp, lp, ep = serve(cfg, shape, plan,
+                                   dict(kw, use_pallas_decode=True))
+                assert tl == tp, (shape, tl, tp)
+                assert set(ll) == set(lp) and len(ll) > 0
+                for rid in ll:
+                    np.testing.assert_array_equal(ll[rid], lp[rid])
+            return el, ep
+
+        # multi-chunk resume (prompts longer than the chunk budget).
+        prompts = [[5, 7, 11, 2, 9, 4, 8, 1, 3, 6], [3, 1, 4],
+                   [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6]]
+        plan = [(0, i, p) for i, p in enumerate(prompts)]
+        modes_agree(GQA, plan, dict(max_batch=2, max_prompt=6,
+                                    max_new_tokens=6, page_size=4,
+                                    num_pages=16, max_seq=24))
+
+        # COW divergence on a prefix-shared table.
+        shared = [5, 7, 11, 2, 9, 4, 8]
+        plan = [(0, 0, shared + [3, 6, 2]), (3, 1, shared + [1, 1, 7])]
+        el, ep = modes_agree(GQA, plan, dict(
+            max_batch=2, max_prompt=16, max_new_tokens=6, page_size=4,
+            num_pages=16, prefix_sharing=True))
+        assert el.n_cow_copies > 0 and ep.n_cow_copies > 0
+        assert el.n_cow_copies == ep.n_cow_copies
+
+        # swap preemption under an overcommitted pool.
+        prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9],
+                   [9, 8, 7, 6, 5, 3]]
+        plan = [(0, i, p) for i, p in enumerate(prompts)]
+        el, ep = modes_agree(GQA, plan, dict(
+            max_batch=2, max_prompt=8, max_new_tokens=12, page_size=4,
+            num_pages=8, max_seq=20, reserve_decode_pages=False,
+            preemption='swap'))
+        assert el.n_preemptions > 0 and ep.n_preemptions > 0
+        assert (el.n_preemptions, el.n_swap_ins) == \\
+            (ep.n_preemptions, ep.n_swap_ins)
+    """)
+
+
+def test_pallas_decode_bit_identical_to_lax_mla():
+    """MLA absorbed decode: the fused compressed-space kernel matches
+    the lax gather + inline partials bitwise at 1 and 8 shards (the
+    expand-through-W_UK/W_UV resume path stays lax under the knob)."""
+    run_devices("""
+        prompts = [[5, 7, 11, 2, 9, 4, 8, 1, 3, 6], [3, 1, 4],
+                   [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6]]
+        plan = [(0, i, p) for i, p in enumerate(prompts)]
+        kw = dict(max_batch=2, max_prompt=6, max_new_tokens=6, page_size=4,
+                  num_pages=16, max_seq=24)
+        for shape in ((8, 1), (1, 8)):
+            tl, ll, _ = serve(MLA, shape, plan,
+                              dict(kw, use_pallas_decode=False))
+            tp, lp, _ = serve(MLA, shape, plan,
+                              dict(kw, use_pallas_decode=True))
+            assert tl == tp, (shape, tl, tp)
+            assert set(ll) == set(lp) and len(ll) > 0
+            for rid in ll:
+                np.testing.assert_array_equal(ll[rid], lp[rid])
+    """)

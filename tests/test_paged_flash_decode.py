@@ -1,0 +1,184 @@
+"""Fused paged flash-decoding kernel vs the lax ``_page_partials`` path.
+
+The kernel's contract (kernels/paged_flash_decode.py) is that for f32
+pools its per-logical-page partials are BIT-IDENTICAL to the lax
+gather-then-partials seam it replaces — same fp ops in the same order,
+skipped pages writing the exact identities the lax path computes for
+fully-masked pages — so wiring it under the shard_map combine cannot
+perturb served logits at any shard count.  These tests pin that contract
+directly at the seam (engine-level parity through COW/swap/resume lives
+in tests/test_distributed_paging.py):
+
+  * GQA decode (Sq=1) and resumable-chunk (Sq>1) partials, permuted page
+    tables with -1 holes, inactive slots: f32 bitwise, bf16 allclose
+    (XLA's bf16 GEMM strategies are shape-dependent, so bitwise equality
+    across differently-shaped dots is not a meaningful target there);
+  * MLA compressed-space partials against the latent pool;
+  * the structural property the fusion exists for: no gathered-window-
+    sized aval in the kernel jaxpr (the lax path materializes
+    (B, P*ps, KV, dh) windows in HBM for k AND v).
+
+All in interpret mode — the same code CI runs everywhere off-TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_flash_decode import (
+    decode_kernel_config, mla_paged_decode_partials,
+    paged_flash_decode_partials, use_pallas_decode)
+from repro.models.attention import NEG_INF, _page_partials
+from repro.models.common import paged_gather
+
+
+def _gqa_case(seed, b, sq, kv, g, dh, dv, n_pages, p, ps, dtype):
+    """Random pool + a permuted per-slot table with -1 holes, plus one
+    fully-inactive slot when b > 1 (pos -1, kv_valid 0, empty table)."""
+    rng = np.random.RandomState(seed)
+    kp = jnp.asarray(rng.randn(n_pages, ps, kv, dh), dtype)
+    vp = jnp.asarray(rng.randn(n_pages, ps, kv, dv), dtype)
+    q = jnp.asarray(rng.randn(b, sq, kv * g, dh), dtype)
+    tbl = np.full((b, p), -1, np.int32)
+    perm = rng.permutation(n_pages)
+    k = 0
+    for i in range(b):
+        n_mapped = rng.randint(1, p + 1)
+        for j in range(n_mapped):
+            tbl[i, j] = perm[k % n_pages]
+            k += 1
+        if rng.rand() < 0.5 and n_mapped > 1:    # a hole mid-table
+            tbl[i, rng.randint(n_mapped)] = -1
+    pos_last = np.array([rng.randint(0, p * ps) for _ in range(b)],
+                        np.int32)
+    if b > 1:
+        tbl[-1] = -1
+        pos_last[-1] = -1
+    qpos = jnp.asarray(pos_last[:, None] - np.arange(sq)[::-1][None, :],
+                       jnp.int32)
+    kv_valid = jnp.asarray(np.maximum(pos_last + 1, 0), jnp.int32)
+    return kp, vp, q, jnp.asarray(tbl), qpos, kv_valid
+
+
+@pytest.mark.parametrize("sq", [1, 5])
+def test_gqa_partials_bitwise_f32(sq):
+    for seed in range(3):
+        kp, vp, q, tbl, qpos, kvv = _gqa_case(
+            seed, b=3, sq=sq, kv=2, g=2, dh=16, dv=16, n_pages=12, p=4,
+            ps=4, dtype=jnp.float32)
+        got = paged_flash_decode_partials(kp, vp, q, tbl, qpos, kvv,
+                                          interpret=True)
+        want = _page_partials(q, paged_gather(kp, tbl),
+                              paged_gather(vp, tbl), tbl, qpos, kvv)
+        for g_, w_ in zip(got, want):
+            assert g_.dtype == jnp.float32
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_gqa_partials_bf16_close():
+    kp, vp, q, tbl, qpos, kvv = _gqa_case(
+        7, b=2, sq=1, kv=2, g=2, dh=16, dv=16, n_pages=8, p=4, ps=4,
+        dtype=jnp.bfloat16)
+    got = paged_flash_decode_partials(kp, vp, q, tbl, qpos, kvv,
+                                      interpret=True)
+    want = _page_partials(q, paged_gather(kp, tbl), paged_gather(vp, tbl),
+                          tbl, qpos, kvv)
+    for g_, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g_, np.float32),
+                                   np.asarray(w_, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_gqa_skipped_pages_write_exact_identities():
+    """Non-resident (-1) and beyond-kv_valid pages must contribute the
+    exact flash identities (NEG_INF, 0, 0) — that is what keeps the
+    cross-shard pmax/psum combine bitwise shard-count independent."""
+    kp, vp, q, tbl_np, qpos, kvv = _gqa_case(
+        11, b=2, sq=1, kv=2, g=2, dh=16, dv=16, n_pages=8, p=4, ps=4,
+        dtype=jnp.float32)
+    tbl = np.asarray(tbl_np).copy()
+    m, l, acc = (np.asarray(x) for x in paged_flash_decode_partials(
+        kp, vp, q, jnp.asarray(tbl), qpos, kvv, interpret=True))
+    for i in range(tbl.shape[0]):
+        for j in range(tbl.shape[1]):
+            if tbl[i, j] < 0 or j * 4 >= int(kvv[i]):
+                assert (m[i, ..., j] == NEG_INF).all()
+                assert (l[i, ..., j] == 0).all()
+                assert (acc[i, ..., j, :] == 0).all()
+
+
+def test_mla_partials_bitwise_f32():
+    r, dr, h, ps, p, n = 32, 8, 4, 4, 4, 12
+    rng = np.random.RandomState(0)
+    for seed in range(3):
+        rng = np.random.RandomState(seed)
+        pool = jnp.asarray(rng.randn(n, ps, r + dr), jnp.float32)
+        qc = jnp.asarray(rng.randn(2, 1, h, r), jnp.float32)
+        qr = jnp.asarray(rng.randn(2, 1, h, dr), jnp.float32)
+        tbl = np.full((2, p), -1, np.int32)
+        tbl[0, :3] = rng.permutation(n)[:3]
+        tbl[1, :2] = rng.permutation(n)[:2]
+        tbl[0, 1] = -1                       # hole
+        pos_b = jnp.asarray([9, 6], jnp.int32)
+        scale_dim = 16 + dr                  # qk_nope + qk_rope dims
+        got = mla_paged_decode_partials(pool, qc, qr, jnp.asarray(tbl),
+                                        pos_b, r, scale_dim,
+                                        interpret=True)
+        # lax reference: the exact body mla._mla_paged_decode runs when
+        # the kernel is off (gather + inline compressed-space partials).
+        lt = jnp.asarray(tbl)
+        buf = paged_gather(pool, lt)
+        b, w = buf.shape[:2]
+        c_all, kr_all = buf[..., :r], buf[..., r:]
+        sc = jnp.einsum("bqhr,bsr->bqhs", qc, c_all,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("bqhd,bsd->bqhs", qr, kr_all,
+                         preferred_element_type=jnp.float32)
+        sc = sc * (scale_dim ** -0.5)
+        kpos = jnp.arange(w, dtype=jnp.int32)
+        res = (lt >= 0)[:, kpos // ps]
+        mask = res[:, None, :] & (kpos[None, None, :] <= pos_b[:, None, None])
+        sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
+        scp = sc.reshape(b, 1, h, p, ps)
+        m = jnp.max(scp, axis=-1)
+        wgt = jnp.where(scp <= NEG_INF / 2, 0.0, jnp.exp(scp - m[..., None]))
+        l = jnp.sum(wgt, axis=-1)
+        acc = jnp.einsum("bqhjs,bjsr->bqhjr", wgt.astype(qc.dtype),
+                         c_all.reshape(b, p, ps, r),
+                         preferred_element_type=jnp.float32)
+        for g_, w_ in zip(got, (m, l, acc)):
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_no_gathered_window_in_kernel_jaxpr():
+    """The fusion's point: the lax path materializes TWO gathered
+    (B, P*ps, KV, dh) windows in HBM; the kernel path's jaxpr contains
+    no intermediate of that size (pool pages are read inside the
+    pallas_call through the scalar-prefetched table)."""
+    b, sq, kv, g, dh, n, p, ps = 4, 1, 2, 2, 64, 64, 16, 16
+    kp = jax.ShapeDtypeStruct((n, ps, kv, dh), jnp.float32)
+    q = jax.ShapeDtypeStruct((b, sq, kv * g, dh), jnp.float32)
+    tbl = jax.ShapeDtypeStruct((b, p), jnp.int32)
+    qpos = jax.ShapeDtypeStruct((b, sq), jnp.int32)
+    kvv = jax.ShapeDtypeStruct((b,), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda kp_, vp_, q_, t_, qp_, kvv_: paged_flash_decode_partials(
+            kp_, vp_, q_, t_, qp_, kvv_, interpret=True))(
+                kp, kp, q, tbl, qpos, kvv)
+    window = b * p * ps * kv * dh
+    big = [v for eqn in jaxpr.eqns for v in eqn.outvars
+           if hasattr(v.aval, "size") and v.aval.size >= window]
+    assert not big, [v.aval for v in big]
+
+
+def test_knob_default_off_and_context_scoped():
+    """The thread-local knob defaults to off (lax path) and restores on
+    context exit, including the explicit-interpret override."""
+    assert decode_kernel_config() is None
+    with use_pallas_decode():
+        assert decode_kernel_config() in (True, False)  # backend-resolved
+        with use_pallas_decode(interpret=True):
+            assert decode_kernel_config() is True
+    assert decode_kernel_config() is None
+    with use_pallas_decode(enabled=False):
+        assert decode_kernel_config() is None
