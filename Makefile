@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke test-sharded bench-smoke bench-serve bench serve-demo
+.PHONY: test smoke test-sharded test-quant-pool bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,6 +20,14 @@ test-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m pytest -x -q tests/test_distributed_paging.py \
 		tests/test_distributed.py
+
+# quantized page-pool leg (CI): the ServeConfig.kv_format suite —
+# fp bit-exactness, int8/int4 error budgets, addressing invariance
+# through COW/swap, and the 8-device sharded + Pallas-parity check
+# (that test spawns its own subprocess with XLA_FLAGS set, so this
+# also runs on a plain single-device host, mirroring test-sharded).
+test-quant-pool:
+	$(PY) -m pytest -x -q tests/test_quant_pool.py
 
 # tiny end-to-end pass of every serving-benchmark section (CI): asserts
 # the benchmark itself still runs, so it cannot silently rot.

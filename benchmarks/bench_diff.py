@@ -1,0 +1,127 @@
+"""Diff two BENCH_serve.json artifacts and fail on regressions.
+
+CI keeps the previous run's ``BENCH_serve.json`` (actions/cache keyed by
+branch) and runs::
+
+    python benchmarks/bench_diff.py prev.json new.json [--threshold 10]
+
+comparing the headline serving metrics that have a better/worse
+direction:
+
+  * TTFT p50/p95 (lower is better)          — ``ttft.p50_us/p95_us``
+  * decode tokens/s per shard count + path  — ``decode_tok_per_s.*``
+  * quantized-pool tokens/s per format      — ``kv_quant.formats.*``
+
+Exit status is nonzero when any metric regresses by more than
+``--threshold`` percent (default 10), so the CI job surfaces perf
+regressions the correctness suite cannot see.  Metrics present in only
+one artifact (new sections, pruned sections) are reported as informative
+and never fail the diff; counts/capacities (peak concurrency, pool
+bytes) are printed for context but not thresholded — they are asserted
+exactly by the benchmark itself.
+
+CPU timing is noisy: the threshold is deliberately loose, and the CI
+job is expected to treat a failure as "look at the numbers", not as a
+hard merge blocker for a known-noisy runner.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (json path, direction) — direction "lower" means smaller is better.
+_TIMED = [
+    (("ttft", "p50_us"), "lower"),
+    (("ttft", "p95_us"), "lower"),
+    (("decode_tok_per_s", "1shard", "lax"), "higher"),
+    (("decode_tok_per_s", "1shard", "pallas"), "higher"),
+    (("decode_tok_per_s", "8shard", "lax"), "higher"),
+    (("decode_tok_per_s", "8shard", "pallas"), "higher"),
+    (("kv_quant", "formats", "fp", "tok_per_s"), "higher"),
+    (("kv_quant", "formats", "int8", "tok_per_s"), "higher"),
+    (("kv_quant", "formats", "int4", "tok_per_s"), "higher"),
+]
+
+# informative context, printed when present in both, never thresholded.
+_CONTEXT = [
+    ("concurrency", "paged_peak"),
+    ("kv_quant", "formats", "fp", "peak_concurrency"),
+    ("kv_quant", "formats", "int4", "peak_concurrency"),
+    ("kv_quant", "quality", "int8", "first_token_max_logit_err"),
+    ("kv_quant", "quality", "int4", "first_token_max_logit_err"),
+]
+
+
+def _get(tree, path):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+def diff(prev: dict, new: dict, threshold_pct: float):
+    """Returns (report lines, regression lines)."""
+    lines, regressions = [], []
+    for path, direction in _TIMED:
+        name = ".".join(path)
+        a, b = _get(prev, path), _get(new, path)
+        if a is None or b is None:
+            lines.append(f"  {name}: {'missing in prev' if a is None else 'missing in new'} — skipped")
+            continue
+        a, b = float(a), float(b)
+        if a == 0:
+            lines.append(f"  {name}: prev=0 — skipped")
+            continue
+        # signed change where POSITIVE always means "got worse".
+        worse_pct = ((b - a) / a * 100) if direction == "lower" \
+            else ((a - b) / a * 100)
+        verdict = "REGRESSED" if worse_pct > threshold_pct else "ok"
+        lines.append(f"  {name}: {a:g} -> {b:g} "
+                     f"({'+' if worse_pct >= 0 else ''}{worse_pct:.1f}% "
+                     f"worse, {direction} is better) [{verdict}]")
+        if worse_pct > threshold_pct:
+            regressions.append(lines[-1].strip())
+    for path in _CONTEXT:
+        a, b = _get(prev, path), _get(new, path)
+        if a is not None and b is not None:
+            lines.append(f"  {'.'.join(path)}: {a} -> {b} (context)")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("prev", type=pathlib.Path,
+                    help="previous BENCH_serve.json")
+    ap.add_argument("new", type=pathlib.Path, help="fresh BENCH_serve.json")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="max tolerated regression, percent (default 10)")
+    args = ap.parse_args(argv)
+
+    prev = json.loads(args.prev.read_text())
+    new = json.loads(args.new.read_text())
+    if prev.get("meta", {}).get("smoke") != new.get("meta", {}).get("smoke"):
+        print("bench_diff: smoke/full artifacts are not comparable "
+              f"(prev smoke={prev.get('meta', {}).get('smoke')}, "
+              f"new smoke={new.get('meta', {}).get('smoke')}) — skipping")
+        return 0
+
+    lines, regressions = diff(prev, new, args.threshold)
+    print(f"bench_diff: {args.prev} -> {args.new} "
+          f"(threshold {args.threshold:g}%)")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"bench_diff: {len(regressions)} metric(s) regressed "
+              f"> {args.threshold:g}%:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("bench_diff: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

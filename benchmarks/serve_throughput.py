@@ -63,6 +63,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.core.quant import QuantConfig
@@ -471,6 +472,97 @@ def _sharded_pool(smoke: bool):
              f"gen_tokens={rows[shards, 'pallas']['GEN']}")
 
 
+def _quantized_pool(smoke: bool):
+    """Page storage formats at a fixed pool BYTE budget.
+
+    The fp reference pool is the capacity section's 128 rows (8 pages x
+    16); quantized engines get however many pages fit in the SAME bytes
+    (engine._page_nbytes prices packed rows + their f32 row scales), so
+    the comparison is memory-honest: int8 rows cost ~1/3.8 of f32 rows,
+    int4 ~1/7 — int4 must admit >= 4x the fp resident concurrency on a
+    one-page-per-request workload.  f32 model so the byte ratios (and
+    the fp logits the error budget is measured against) are exact.
+
+    A second, ample-pool pass records first-token logits per format: the
+    first emitted token sees an identical prompt history in every
+    format, so its max |logit error| vs fp is the format's approximation
+    cost, reported (with argmax agreement) in BENCH_serve.json."""
+    page_size, fp_pages = 16, 8
+    max_new = 4 if smoke else 8
+    cfg = ArchConfig(name="thrq", family="dense", n_layers=2, d_model=128,
+                     n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+                     decode_margin=32, dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 32
+    prompts = _prompts(n_req, 8, cfg.vocab_size)   # 1 page per request
+
+    def engine(kvf, num_pages, **kw):
+        return ServingEngine(cfg, params, ServeConfig(
+            max_batch=n_req, max_prompt=16, max_new_tokens=max_new,
+            page_size=page_size, num_pages=num_pages, kv_format=kvf, **kw))
+
+    page_bytes = {kvf: engine(kvf, fp_pages)._page_nbytes
+                  for kvf in ("fp", "int8", "int4")}
+    budget = fp_pages * page_bytes["fp"]
+
+    formats = {}
+    for kvf in ("fp", "int8", "int4"):
+        n_pages = budget // page_bytes[kvf]
+        eng = engine(kvf, n_pages)
+        t0 = time.perf_counter()
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+        dt = time.perf_counter() - t0
+        assert all(not r.failed and len(r.out_tokens) == max_new
+                   for r in out)
+        assert eng.pool_bytes_per_shard() <= budget
+        gen = sum(len(r.out_tokens) for r in out)
+        formats[kvf] = {
+            "num_pages": int(n_pages),
+            "page_bytes": int(page_bytes[kvf]),
+            "bytes_per_request": int(page_bytes[kvf]),   # 1-page requests
+            "peak_concurrency": eng.peak_active,
+            "tok_per_s": round(gen / dt, 1),
+        }
+    ratio = formats["int4"]["peak_concurrency"] / \
+        formats["fp"]["peak_concurrency"]
+    assert ratio >= 4, \
+        f"int4 pool must hold >= 4x the fp concurrency, got {ratio:.2f}x"
+
+    # quality: ample pool, identical prompt history per first token.
+    logs = {}
+    for kvf in ("fp", "int8", "int4"):
+        eng = engine(kvf, n_req, record_logits=True)
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+        logs[kvf] = {r.rid: r.logits[0] for r in out}
+    quality = {}
+    for kvf in ("int8", "int4"):
+        err = max(float(np.max(np.abs(logs[kvf][i] - logs["fp"][i])))
+                  for i in range(n_req))
+        agree = sum(int(np.argmax(logs[kvf][i]) == np.argmax(logs["fp"][i]))
+                    for i in range(n_req))
+        quality[kvf] = {"first_token_max_logit_err": round(err, 4),
+                        "first_token_argmax_agree_pct":
+                            round(100 * agree / n_req, 1)}
+    _BENCH["kv_quant"] = {"pool_budget_bytes": int(budget),
+                          "formats": formats, "quality": quality}
+    emit("serve/kv_quant_concurrency", formats["int4"]["peak_concurrency"],
+         f"pool_budget_bytes={budget};"
+         f"fp_peak={formats['fp']['peak_concurrency']};"
+         f"int8_peak={formats['int8']['peak_concurrency']};"
+         f"int4_peak={formats['int4']['peak_concurrency']};"
+         f"bytes_per_request_fp={formats['fp']['bytes_per_request']};"
+         f"bytes_per_request_int8={formats['int8']['bytes_per_request']};"
+         f"bytes_per_request_int4={formats['int4']['bytes_per_request']}")
+    emit("serve/kv_quant_error",
+         quality["int8"]["first_token_max_logit_err"],
+         f"int8_max_err={quality['int8']['first_token_max_logit_err']};"
+         f"int4_max_err={quality['int4']['first_token_max_logit_err']};"
+         f"int8_argmax_agree_pct="
+         f"{quality['int8']['first_token_argmax_agree_pct']};"
+         f"int4_argmax_agree_pct="
+         f"{quality['int4']['first_token_argmax_agree_pct']}")
+
+
 def run(smoke: bool = False):
     quants = [("bf16", None)] if smoke else \
         [("bf16", None),
@@ -495,6 +587,7 @@ def run(smoke: bool = False):
             _continuous_batching(cfg, params, n_requests=6)
             _mixed_priority(cfg, params, n_low=4, n_high=2)
             _sharded_pool(smoke=True)
+            _quantized_pool(smoke=True)
             continue
         for bsz in (1, 2, 4):
             # contiguous layout here: the TTFT probes time the contiguous
@@ -525,6 +618,7 @@ def run(smoke: bool = False):
         _mixed_priority(cfg, params)
     if not smoke:
         _sharded_pool(smoke=False)
+        _quantized_pool(smoke=False)
     _write_bench_json(smoke)
 
 

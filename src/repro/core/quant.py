@@ -111,6 +111,32 @@ def quantize_weight(w: jax.Array, bits: int, granularity: str = "channel"):
     return q, scale.reshape(-1).astype(jnp.float32)
 
 
+def quantize_page_rows(rows: jax.Array, bits: int, eps: float = 1e-8):
+    """Per-row symmetric quantization for paged-KV pool storage.
+
+    ``rows``: (B, S, *feat) fp values — one cache row per (slot, position).
+    The absmax reduction spans EVERY trailing feature axis, yielding exactly
+    one f32 scale per row: the scale pool beside a paged KV pool is then
+    (num_pages, page_size), indexable by the same page table as the data
+    pool.  Returns (q int8 of rows.shape, scales f32 of rows.shape[:2]).
+    """
+    feat_axes = tuple(range(2, rows.ndim))
+    scale = compute_scale(rows, bits, axis=feat_axes, eps=eps)
+    q, _ = quantize(rows, bits, scale=scale)
+    return q, scale.reshape(rows.shape[:2]).astype(jnp.float32)
+
+
+def dequantize_page_rows(q: jax.Array, scales: jax.Array,
+                         dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_page_rows` (after any unpack).
+
+    ``q``: (B, S, *feat) int values; ``scales``: (B, S) f32 per-row scales,
+    broadcast over the trailing feature axes.
+    """
+    s = scales.reshape(scales.shape + (1,) * (q.ndim - scales.ndim))
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
 def quantize_activation(x: jax.Array, bits: int):
     """Dynamic per-row (per-token) activation quantization.
 

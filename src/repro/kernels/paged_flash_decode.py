@@ -33,6 +33,16 @@ bf16 pools are allclose: XLA picks shape-dependent GEMM strategies for
 bf16 dots, so a (ps, dh) page dot may round differently than the fused
 (P*ps, dh) window dot.
 
+Quantized pools (``ServeConfig.kv_format`` int8/int4): both kernels take
+an optional per-row SCALE pool (``(N, ps)`` f32, addressed through the
+same page table as the data pool) plus the storage bit width, and
+dequantize the page block inside VMEM — ``unpack`` (shift/mask/concat,
+identity for int8) then one f32 multiply by the row scale — before the
+identical score/partial math.  The op sequence matches the lax read
+path's ``PageFormat.dequantize`` element for element, so the quantized
+kernel partials are bitwise equal to the quantized lax partials the same
+way the fp ones are; no fp window is materialized in HBM in either mode.
+
 Off-TPU the kernels run with ``interpret=True`` (auto-detected from
 ``jax.default_backend()``), so CPU CI exercises the REAL kernel logic —
 grid walk, index-map table lookups, ``pl.when`` skips — through the
@@ -52,6 +62,8 @@ import threading
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.packing import pack_factor, unpack
 
 try:                                    # CPU-only envs lack the TPU plugin
     from jax.experimental.pallas import tpu as pltpu
@@ -153,7 +165,55 @@ def _gqa_page_kernel(tbl_ref, q_ref, k_ref, v_ref, qp_ref, kvv_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
+def _gqa_page_kernel_quant(tbl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                           qp_ref, kvv_ref, m_ref, l_ref, acc_ref, *,
+                           sq, kv, g, ps, scale, bits):
+    """The GQA body for QUANTIZED pools: identical flow to
+    :func:`_gqa_page_kernel`, with the page block dequantized in VMEM
+    (unpack -> f32 multiply by the row scale) before the score math —
+    the same op sequence ``PageFormat.dequantize`` runs on the lax path,
+    so the partials stay bitwise comparable between the two."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    page = tbl_ref[b, j]
+    k0 = j * ps
+    qp = qp_ref[0]
+    kvs = kvv_ref[0, 0]
+    active = (page >= 0) & (k0 <= jnp.max(qp)) & (k0 < kvs)
+
+    @pl.when(active)
+    def _():
+        qx = q_ref[0].reshape(sq, kv, g, q_ref.shape[-1])
+        ks = ks_ref[0][:, None, None]   # (ps, 1, 1) per-row scales
+        vs = vs_ref[0][:, None, None]
+        kb = (unpack(k_ref[0], bits, axis=-1).astype(jnp.float32)
+              * ks).astype(qx.dtype)    # (ps, KV, dh) dequantized page
+        vb = (unpack(v_ref[0], bits, axis=-1).astype(jnp.float32)
+              * vs).astype(qx.dtype)
+        s = jnp.einsum("qkgd,skd->qkgs", (qx * scale).astype(qx.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (sq, ps), 1)
+        mask = (kpos <= qp[:, None]) & (kpos < kvs)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        w = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = jnp.sum(w, axis=-1)
+        acc = jnp.einsum("qkgs,skd->qkgd", w.astype(qx.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        m_ref[0, :, :, :, 0] = m
+        l_ref[0, :, :, :, 0] = l
+        acc_ref[0, :, :, :, 0, :] = acc
+
+    @pl.when(~active)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
 def paged_flash_decode_partials(k_pool, v_pool, q, tbl, qpos, kv_valid, *,
+                                k_scale=None, v_scale=None,
+                                bits: int | None = None,
                                 interpret: bool | None = None):
     """Fused per-logical-page flash partials against the paged KV pool.
 
@@ -164,32 +224,54 @@ def paged_flash_decode_partials(k_pool, v_pool, q, tbl, qpos, kv_valid, *,
     unmapped / other shard), ``qpos`` (B, Sq) query positions, and
     ``kv_valid`` (B,) filled-row bounds.  Returns f32 ``m``/``l``
     (B, Sq, KV, G, P) and ``acc`` (B, Sq, KV, G, P, dv) — bit-identical
-    to the lax path for f32 pools (see module docstring)."""
+    to the lax path for f32 pools (see module docstring).
+
+    QUANTIZED pools: pass ``k_scale``/``v_scale`` ((N, ps) f32 per-row
+    scale pools, striped like the data pools) and ``bits`` (8 or 4; the
+    pools then hold packed int8 with last dim ``dh * bits // 8``).  The
+    scale blocks ride the SAME table-indexed BlockSpec as the data pages
+    and the block is dequantized in VMEM; the softmax scale and the
+    ``acc`` width use the FULL feature dims, matching the lax dequant
+    path exactly."""
     _require_pltpu()
     n, ps, kv, dh = k_pool.shape
     dv = v_pool.shape[-1]
+    if bits is not None:
+        dh, dv = dh * pack_factor(bits), dv * pack_factor(bits)
     b, sq, hq, _ = q.shape
     p = tbl.shape[1]
     g = hq // kv
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    kernel = functools.partial(_gqa_page_kernel, sq=sq, kv=kv, g=g, ps=ps,
-                               scale=dh ** -0.5)
     # index maps receive the scalar-prefetched table last: the pool
     # blocks are addressed THROUGH it (clamped; -1 pages are skipped by
     # the kernel predicate, never read for values).
+    pool_idx = lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, sq, hq, dh), lambda b_, j, t: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, ps, kv, k_pool.shape[-1]), pool_idx),
+        pl.BlockSpec((1, ps, kv, v_pool.shape[-1]), pool_idx),
+    ]
+    operands = [q, k_pool, v_pool]
+    if bits is None:
+        kernel = functools.partial(_gqa_page_kernel, sq=sq, kv=kv, g=g,
+                                   ps=ps, scale=dh ** -0.5)
+    else:
+        kernel = functools.partial(_gqa_page_kernel_quant, sq=sq, kv=kv,
+                                   g=g, ps=ps, scale=dh ** -0.5, bits=bits)
+        scale_idx = lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0)  # noqa: E731
+        in_specs += [pl.BlockSpec((1, ps), scale_idx),
+                     pl.BlockSpec((1, ps), scale_idx)]
+        operands += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, sq), lambda b_, j, t: (b_, 0)),
+        pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
+    ]
+    operands += [qpos, kv_valid.astype(jnp.int32).reshape(b, 1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, p),
-        in_specs=[
-            pl.BlockSpec((1, sq, hq, dh), lambda b_, j, t: (b_, 0, 0, 0)),
-            pl.BlockSpec((1, ps, kv, dh),
-                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0, 0)),
-            pl.BlockSpec((1, ps, kv, dv),
-                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0, 0)),
-            pl.BlockSpec((1, sq), lambda b_, j, t: (b_, 0)),
-            pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, sq, kv, g, 1), lambda b_, j, t: (b_, 0, 0, 0, j)),
             pl.BlockSpec((1, sq, kv, g, 1), lambda b_, j, t: (b_, 0, 0, 0, j)),
@@ -207,8 +289,7 @@ def paged_flash_decode_partials(k_pool, v_pool, q, tbl, qpos, kv_valid, *,
         compiler_params=None if interpret else _compiler_params(
             "parallel", "arbitrary"),
         interpret=interpret,
-    )(tbl, q, k_pool, v_pool, qpos,
-      kv_valid.astype(jnp.int32).reshape(b, 1))
+    )(tbl, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -253,7 +334,53 @@ def _mla_page_kernel(tbl_ref, pool_ref, qc_ref, qr_ref, pos_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
+def _mla_page_kernel_quant(tbl_ref, pool_ref, sc_ref, qc_ref, qr_ref,
+                           pos_ref, m_ref, l_ref, acc_ref, *, ps, r, scale,
+                           bits):
+    """Compressed-space body for QUANTIZED latent pools: the whole
+    (ps, r+dr) page row is dequantized in VMEM with its per-row scale
+    (one scale spans the c_kv and k_rope halves, matching the write
+    side), then split at ``r`` and fed to the identical score math."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    page = tbl_ref[b, j]
+    k0 = j * ps
+    pb = pos_ref[0, 0]
+    active = (page >= 0) & (k0 <= pb)
+
+    @pl.when(active)
+    def _():
+        qc = qc_ref[0]                  # (Sq, H, r) absorbed queries
+        qr = qr_ref[0]                  # (Sq, H, dr)
+        s_row = sc_ref[0][:, None]      # (ps, 1) per-row scales
+        blk = (unpack(pool_ref[0], bits, axis=-1).astype(jnp.float32)
+               * s_row).astype(qc.dtype)   # (ps, r+dr) dequantized page
+        c, kr = blk[:, :r], blk[:, r:]
+        sc = jnp.einsum("qhr,sr->qhs", qc, c,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("qhd,sd->qhs", qr, kr,
+                         preferred_element_type=jnp.float32)
+        sc = sc * scale
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0]
+        sc = jnp.where((kpos <= pb)[None, None, :], sc, NEG_INF)
+        m = jnp.max(sc, axis=-1)
+        w = jnp.where(sc <= NEG_INF / 2, 0.0, jnp.exp(sc - m[..., None]))
+        l = jnp.sum(w, axis=-1)
+        acc = jnp.einsum("qhs,sr->qhr", w.astype(qc.dtype), c,
+                         preferred_element_type=jnp.float32)
+        m_ref[0, :, :, 0] = m
+        l_ref[0, :, :, 0] = l
+        acc_ref[0, :, :, 0, :] = acc
+
+    @pl.when(~active)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
 def mla_paged_decode_partials(pool, q_c, q_rope, tbl, pos_b, r, scale_dim, *,
+                              scale_pool=None, bits: int | None = None,
                               interpret: bool | None = None):
     """Fused compressed-space page partials for MLA absorbed decode.
 
@@ -263,26 +390,42 @@ def mla_paged_decode_partials(pool, q_c, q_rope, tbl, pos_b, r, scale_dim, *,
     table, ``pos_b`` (B,) slot positions.  The weighted sum stays in the
     COMPRESSED space — ``acc`` is (B, Sq, H, P, r) — so the caller's
     cross-shard psum still moves r floats per head per page.  Returns
-    f32 ``(m, l, acc)`` bit-identical to the lax body for f32 pools."""
+    f32 ``(m, l, acc)`` bit-identical to the lax body for f32 pools.
+
+    QUANTIZED pools: pass ``scale_pool`` ((N, ps) f32) and ``bits``; the
+    pool then stores packed int8 rows of width ``(r+dr) * bits // 8``,
+    dequantized in VMEM before the split at ``r``."""
     _require_pltpu()
     n, ps, width = pool.shape
+    if bits is not None:
+        width = width * pack_factor(bits)
     b, sq, h, _ = q_c.shape
     dr = width - r
     p = tbl.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    kernel = functools.partial(_mla_page_kernel, ps=ps, r=r,
-                               scale=scale_dim ** -0.5)
+    pool_idx = lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0)  # noqa: E731
+    in_specs = [pl.BlockSpec((1, ps, pool.shape[-1]), pool_idx)]
+    operands = [pool]
+    if bits is None:
+        kernel = functools.partial(_mla_page_kernel, ps=ps, r=r,
+                                   scale=scale_dim ** -0.5)
+    else:
+        kernel = functools.partial(_mla_page_kernel_quant, ps=ps, r=r,
+                                   scale=scale_dim ** -0.5, bits=bits)
+        in_specs += [pl.BlockSpec(
+            (1, ps), lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0))]
+        operands += [scale_pool]
+    in_specs += [
+        pl.BlockSpec((1, sq, h, r), lambda b_, j, t: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, sq, h, dr), lambda b_, j, t: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
+    ]
+    operands += [q_c, q_rope, pos_b.astype(jnp.int32).reshape(b, 1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, p),
-        in_specs=[
-            pl.BlockSpec((1, ps, width),
-                         lambda b_, j, t: (jnp.maximum(t[b_, j], 0), 0, 0)),
-            pl.BlockSpec((1, sq, h, r), lambda b_, j, t: (b_, 0, 0, 0)),
-            pl.BlockSpec((1, sq, h, dr), lambda b_, j, t: (b_, 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b_, j, t: (b_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, sq, h, 1), lambda b_, j, t: (b_, 0, 0, j)),
             pl.BlockSpec((1, sq, h, 1), lambda b_, j, t: (b_, 0, 0, j)),
@@ -299,4 +442,4 @@ def mla_paged_decode_partials(pool, q_c, q_rope, tbl, pos_b, r, scale_dim, *,
         compiler_params=None if interpret else _compiler_params(
             "parallel", "arbitrary"),
         interpret=interpret,
-    )(tbl, pool, q_c, q_rope, pos_b.astype(jnp.int32).reshape(b, 1))
+    )(tbl, *operands)

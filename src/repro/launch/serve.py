@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 8, 4],
+                    help="KV pool page storage: 0 = model dtype (the "
+                    "bit-exact default), 8/4 = int8/int4 pages with "
+                    "per-row scales (ServeConfig.kv_format)")
     ap.add_argument("--ttft-deadline", type=int, default=8,
                     help="deadline (engine ticks) stamped on the "
                     "high-priority half of the requests")
@@ -66,9 +70,13 @@ def main():
             i, [int(t) for t in jax.random.randint(k_tok, (n,), 0,
                                                    cfg.vocab_size)],
             priority=prio, ttft_deadline=deadline))
+    kv_format = "fp" if args.kv_bits == 0 else f"int{args.kv_bits}"
     eng = ServingEngine(cfg, params, ServeConfig(
         max_batch=args.max_batch, max_prompt=32,
-        max_new_tokens=args.max_new_tokens))
+        max_new_tokens=args.max_new_tokens, kv_format=kv_format))
+    if kv_format != "fp":
+        print(f"KV pool pages stored as {kv_format} "
+              f"({eng.pool_bytes_per_shard() / 1e3:.1f}KB pool/shard)")
     handles = [eng.submit(r) for r in reqs]
 
     # stream the first high-priority request token by token (this drives

@@ -44,14 +44,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.pageformat import FP, format_for_packed
 from repro.distributed.sharding import (current_mesh, lshard, make_spec,
                                         mesh_axes_for, shard_map)
 from repro.kernels.paged_flash_decode import (decode_kernel_config,
                                               paged_flash_decode_partials)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
-                                 paged_gather, paged_scatter, rms_norm, rope,
-                                 shard_local_pages)
+                                 paged_gather, paged_gather_quant,
+                                 paged_scatter, paged_scatter_quant,
+                                 rms_norm, rope, shard_local_pages)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -85,20 +87,56 @@ def kv_cache_spec(cfg, batch: int, capacity: int):
     }
 
 
-def paged_kv_cache_spec(cfg, num_pages: int, page_size: int):
+def paged_kv_cache_spec(cfg, num_pages: int, page_size: int, fmt=FP):
     """Paged layout: one global (num_pages, page_size, KV, dh) pool per
     layer shared by every slot; a per-slot page table (held by the serving
     engine, passed to ``forward`` as ``pages``) maps logical cache rows to
     pool pages.  The page axis carries the 'pages' logical axis: under a
     seq-sharding rule table the pool is striped page-aligned over the seq
     mesh axes instead of replicated.  Recurrent families keep their
-    per-slot fixed-size state."""
+    per-slot fixed-size state.
+
+    ``fmt`` selects the page STORAGE format (core/pageformat): quantized
+    formats store the pools as packed int8 (last dim shrunk by the pack
+    factor) and add ``k_scale``/``v_scale`` leaves — (num_pages,
+    page_size) f32 per-row absmax scales on the SAME page axis, so every
+    pool transform (COW, swap, striping, byte accounting) moves scales
+    with their pages without knowing about formats.  The read path
+    recognizes a quantized cache structurally by the scale leaves."""
     kv, dh = cfg.n_kv_heads, cfg.head_dim
     ax = ("pages", None, "kv_heads", None)
+    if not fmt.quantized:
+        return {
+            "k": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
+            "v": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
+        }
+    dp = fmt.packed_feat(dh)
     return {
-        "k": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
-        "v": ParamSpec((num_pages, page_size, kv, dh), ax, init="zeros"),
+        "k": ParamSpec((num_pages, page_size, kv, dp), ax, init="zeros",
+                       dtype=jnp.int8),
+        "v": ParamSpec((num_pages, page_size, kv, dp), ax, init="zeros",
+                       dtype=jnp.int8),
+        "k_scale": ParamSpec((num_pages, page_size), ("pages", None),
+                             init="zeros", dtype=jnp.float32),
+        "v_scale": ParamSpec((num_pages, page_size), ("pages", None),
+                             init="zeros", dtype=jnp.float32),
     }
+
+
+def cache_page_format(cache: dict, full_feat: int):
+    """Infer a paged cache's storage format STRUCTURALLY, or None for fp.
+
+    A scale leaf beside the pool marks it quantized; the ratio of the
+    full feature width to the stored last dim names the bit width.  No
+    format context threads through jitted forwards — the cache pytree
+    itself is the source of truth (and fp caches take code paths byte-
+    identical to the pre-format engine)."""
+    key = "k_scale" if "k_scale" in cache else \
+        ("ckv_scale" if "ckv_scale" in cache else None)
+    if key is None:
+        return None
+    pool = cache["ckv"] if key == "ckv_scale" else cache["k"]
+    return format_for_packed(full_feat, pool.shape[-1])
 
 
 def _pick_q_chunk(b: int, h: int, skv: int) -> int:
@@ -429,6 +467,63 @@ def _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos, kvv, mesh,
     return o, {"k": pk, "v": pv}
 
 
+def _paged_flash_striped_quant(cache, pages, k, v, q, t, ok, qpos, kvv,
+                               mesh, axes, fmt):
+    """:func:`_paged_flash_striped` for QUANTIZED pools.
+
+    The new rows are quantized ONCE, outside the shard_map (per-row
+    scales depend only on the row's own fp values, so every shard sees
+    identical packed bytes); each shard then scatters the packed rows
+    and their scales through its local table — the scale pools are
+    striped by the same PartitionSpec page axis as the data pools, so a
+    row's scale always lives on the shard holding its page.  The read
+    side dequantizes the gathered window (lax) or the VMEM page block
+    (Pallas) with the identical op sequence, and the pmax/psum +
+    canonical combine are byte-for-byte the fp path's — which is what
+    keeps quantized logits bitwise shard-count independent too.  Kept
+    separate from the fp body so ``kv_format='fp'`` traces are untouched.
+    """
+    pspec = _pool_spec(cache["k"].ndim)
+    sspec = _pool_spec(2)
+    kernel_interpret = decode_kernel_config()
+    kq, ks = fmt.quantize_rows(k)
+    vq, vs = fmt.quantize_rows(v)
+
+    def body(pk, pv, pks, pvs, kn, vn, kns, vns, qq, tbl, tt, okk, qp, kv_):
+        n_loc = pk.shape[0]
+        lt = shard_local_pages(tbl, _pool_page0(mesh, axes, n_loc), n_loc)
+        pk = paged_scatter(pk, lt, kn, tt, okk)
+        pv = paged_scatter(pv, lt, vn, tt, okk)
+        pks = paged_scatter(pks, lt, kns, tt, okk)
+        pvs = paged_scatter(pvs, lt, vns, tt, okk)
+        if kernel_interpret is not None:
+            m, l, acc = paged_flash_decode_partials(
+                pk, pv, qq, lt, qp, kv_, k_scale=pks, v_scale=pvs,
+                bits=fmt.bits, interpret=kernel_interpret)
+        else:
+            kw = fmt.dequantize(paged_gather(pk, lt),
+                                paged_gather(pks, lt), qq.dtype)
+            vw = fmt.dequantize(paged_gather(pv, lt),
+                                paged_gather(pvs, lt), qq.dtype)
+            m, l, acc = _page_partials(qq, kw, vw, lt, qp, kv_)
+        m = jax.lax.pmax(m, axes)
+        l = jax.lax.psum(l, axes)
+        acc = jax.lax.psum(acc, axes)
+        o = _combine_page_partials(m, l, acc)
+        b, sq = qq.shape[:2]
+        return (o.reshape(b, sq, -1, o.shape[-1]).astype(qq.dtype),
+                pk, pv, pks, pvs)
+
+    o, pk, pv, pks, pvs = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, pspec, sspec, sspec,
+                  P(), P(), P(), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), pspec, pspec, sspec, sspec), check_vma=False)(
+            cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+            kq, vq, ks, vs, q, pages, t, ok, qpos, kvv)
+    return o, {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs}
+
+
 def _paged_decode(q, k, v, cache, pages, pos_b):
     """One decode step against the paged pool: scatter this token's K/V
     through the table, then attend over the slot's logical window.
@@ -439,17 +534,33 @@ def _paged_decode(q, k, v, cache, pages, pos_b):
     (:func:`_paged_flash_striped`) with the same pmax/psum flash-
     decoding reduction ``decode_sdpa`` uses."""
     t = pos_b[:, None]
+    fmt = cache_page_format(cache, q.shape[-1])
     mesh, axes = paged_pool_axes(cache["k"].shape[0])
     if mesh is None:
-        new_cache = {"k": paged_scatter(cache["k"], pages, k, t, t >= 0),
-                     "v": paged_scatter(cache["v"], pages, v, t, t >= 0)}
-        o = _decode_attention_local(
-            q, paged_gather(new_cache["k"], pages),
-            paged_gather(new_cache["v"], pages),
-            jnp.int32(0), pos_b + 1, ())
+        if fmt is None:
+            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, t >= 0),
+                         "v": paged_scatter(cache["v"], pages, v, t, t >= 0)}
+        else:
+            pk, pks = paged_scatter_quant(cache["k"], cache["k_scale"],
+                                          pages, k, t, t >= 0, fmt)
+            pv, pvs = paged_scatter_quant(cache["v"], cache["v_scale"],
+                                          pages, v, t, t >= 0, fmt)
+            new_cache = {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs}
+        if fmt is None:
+            kw = paged_gather(new_cache["k"], pages)
+            vw = paged_gather(new_cache["v"], pages)
+        else:
+            kw = paged_gather_quant(new_cache["k"], new_cache["k_scale"],
+                                    pages, fmt, q.dtype)
+            vw = paged_gather_quant(new_cache["v"], new_cache["v_scale"],
+                                    pages, fmt, q.dtype)
+        o = _decode_attention_local(q, kw, vw, jnp.int32(0), pos_b + 1, ())
         return o, new_cache
-    return _paged_flash_striped(cache, pages, k, v, q, t, t >= 0, t,
-                                pos_b + 1, mesh, axes)
+    if fmt is None:
+        return _paged_flash_striped(cache, pages, k, v, q, t, t >= 0, t,
+                                    pos_b + 1, mesh, axes)
+    return _paged_flash_striped_quant(cache, pages, k, v, q, t, t >= 0, t,
+                                      pos_b + 1, mesh, axes, fmt)
 
 
 def _paged_resume(q, k, v, cache, pages, t, ok, off_b, len_b):
@@ -457,17 +568,30 @@ def _paged_resume(q, k, v, cache, pages, t, ok, off_b, len_b):
     chunk's K/V at rows [offset, offset+len), then attend the chunk
     queries over the slot's whole cached window.  Same replicated-vs-
     striped split as :func:`_paged_decode`."""
+    fmt = cache_page_format(cache, q.shape[-1])
     mesh, axes = paged_pool_axes(cache["k"].shape[0])
     if mesh is None:
-        new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
-                     "v": paged_scatter(cache["v"], pages, v, t, ok)}
-        o = _resume_attention_local(
-            q, paged_gather(new_cache["k"], pages),
-            paged_gather(new_cache["v"], pages), off_b, off_b + len_b)
+        if fmt is None:
+            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
+                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
+            kw = paged_gather(new_cache["k"], pages)
+            vw = paged_gather(new_cache["v"], pages)
+        else:
+            pk, pks = paged_scatter_quant(cache["k"], cache["k_scale"],
+                                          pages, k, t, ok, fmt)
+            pv, pvs = paged_scatter_quant(cache["v"], cache["v_scale"],
+                                          pages, v, t, ok, fmt)
+            new_cache = {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs}
+            kw = paged_gather_quant(pk, pks, pages, fmt, q.dtype)
+            vw = paged_gather_quant(pv, pvs, pages, fmt, q.dtype)
+        o = _resume_attention_local(q, kw, vw, off_b, off_b + len_b)
         return o, new_cache
     qpos = off_b[:, None] + jnp.arange(q.shape[1], dtype=jnp.int32)[None]
-    return _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos,
-                                off_b + len_b, mesh, axes)
+    if fmt is None:
+        return _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos,
+                                    off_b + len_b, mesh, axes)
+    return _paged_flash_striped_quant(cache, pages, k, v, q, t, ok, qpos,
+                                      off_b + len_b, mesh, axes, fmt)
 
 
 def _batch_spec(mesh, b: int):
@@ -678,6 +802,20 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                          "v": contig_scatter(cache["v"], v, t, ok)}
             o = _resume_attention_local(q, new_cache["k"], new_cache["v"],
                                         off_b, off_b + len_b)
+    elif mode == "chunk" and pages is not None and \
+            cache_page_format(cache, dh) is not None:
+        # quantized pool, fresh chunk: run it as a resume at offset 0 —
+        # every K/V read then goes through the quantized cache, so the
+        # numerics are UNIFORM across chunkings: a prompt admitted fresh,
+        # resumed mid-way, or resumed after a shared prefix sees the same
+        # dequantized rows and emits bitwise-identical logits (the fp
+        # path keeps the sdpa fast path below, where this is bit-exact
+        # anyway because nothing is re-read through the cache).
+        len_b = chunk_lengths(pos, b)
+        ok = chunk_valid_mask(len_b, s)
+        t = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+        o, new_cache = _paged_resume(q, k, v, cache, pages, t, ok,
+                                     jnp.zeros((b,), jnp.int32), len_b)
     elif mode == "chunk":
         # one causal pass over the whole padded chunk; padded queries sit
         # after every valid token so they never leak into valid outputs,

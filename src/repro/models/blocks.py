@@ -5,7 +5,8 @@ Every block has the same interface:
   apply(p, x, cfg, cache, mode, pos, pages,
         offset)                               -> (x', new_cache, aux_loss)
   cache_spec(cfg, batch, capacity)            -> ParamSpec tree or None
-  paged_cache_spec(cfg, num_pages, page_size) -> ParamSpec tree or None
+  paged_cache_spec(cfg, num_pages, page_size,
+                   fmt=pageformat.FP)        -> ParamSpec tree or None
 
 ``pages`` is the serving engine's (B, P) page table when the KV cache is
 paged (attention families only); recurrent families keep fixed-size

@@ -238,6 +238,34 @@ def paged_scatter(pool: jax.Array, pages: jax.Array, rows: jax.Array,
     return flat.reshape(pool.shape)
 
 
+def paged_scatter_quant(pool: jax.Array, scales: jax.Array,
+                        pages: jax.Array, rows: jax.Array, t: jax.Array,
+                        valid: jax.Array, fmt):
+    """:func:`paged_scatter` for a QUANTIZED pool: quantize ``rows`` at
+    the write boundary (per-row absmax, packed per ``fmt`` — see
+    :mod:`repro.core.pageformat`) and scatter the packed bytes into
+    ``pool`` and the f32 row scales into the pool-shaped ``scales`` leaf
+    through the SAME page table.  A row's quantized bytes depend only on
+    its own fp values, so re-writing identical rows (resume, swap-in,
+    COW re-fill) reproduces identical pool bytes regardless of chunking.
+    Returns (new_pool, new_scales)."""
+    q, s = fmt.quantize_rows(rows)
+    return (paged_scatter(pool, pages, q, t, valid),
+            paged_scatter(scales, pages, s, t, valid))
+
+
+def paged_gather_quant(pool: jax.Array, scales: jax.Array,
+                       pages: jax.Array, fmt, dtype) -> jax.Array:
+    """Gather + dequantize a slot window out of a quantized pool.
+
+    The fp analogue of :func:`paged_gather`: unpacks and rescales the
+    gathered (B, W, *rest) rows with their per-row scales.  Rows under
+    unmapped table entries are garbage exactly as in the fp layout and
+    MUST be masked by the caller's validity predicate."""
+    return fmt.dequantize(paged_gather(pool, pages),
+                          paged_gather(scales, pages), dtype)
+
+
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     h = x.astype(jnp.float32)
     h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)

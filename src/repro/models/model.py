@@ -100,13 +100,21 @@ def param_specs(cfg: ArchConfig) -> dict:
 
 def cache_specs(cfg: ArchConfig, batch: int, capacity: int, *,
                 num_pages: Optional[int] = None,
-                page_size: Optional[int] = None) -> list:
+                page_size: Optional[int] = None,
+                kv_format: str = "fp") -> list:
     """Cache ParamSpec tree; pass ``num_pages``/``page_size`` for the paged
-    layout (pageable families get a pool, the rest keep per-slot state)."""
+    layout (pageable families get a pool, the rest keep per-slot state).
+    ``kv_format`` picks the page STORAGE format (core/pageformat): "fp"
+    stores model dtype, "int8"/"int4" store packed rows plus a pool-shaped
+    per-row scale leaf.  Paged layout only."""
+    from repro.core.pageformat import get_format
+    fmt = get_format(kv_format)
+
     def spec_for(kind):
         block = BLOCKS[kind]
         if num_pages is not None and block.paged_cache_spec is not None:
-            return block.paged_cache_spec(cfg, num_pages, page_size)
+            return block.paged_cache_spec(cfg, num_pages, page_size,
+                                          fmt=fmt)
         return block.cache_spec(cfg, batch, capacity)
 
     stages = []
@@ -253,19 +261,19 @@ def abstract_cache(cfg: ArchConfig, batch: int, prompt_len: int):
 
 
 def init_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
-                     page_size: int):
+                     page_size: int, kv_format: str = "fp"):
     """Paged serving cache: per-layer (num_pages, page_size, ...) pools for
     attention/MLA, per-slot fixed-size state for recurrent families."""
     specs = cache_specs(cfg, batch, 0, num_pages=num_pages,
-                        page_size=page_size)
+                        page_size=page_size, kv_format=kv_format)
     return common.materialize(specs, jax.random.PRNGKey(0), cfg.dtype)
 
 
 def abstract_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
-                         page_size: int):
+                         page_size: int, kv_format: str = "fp"):
     return common.abstract(
         cache_specs(cfg, batch, 0, num_pages=num_pages,
-                    page_size=page_size), cfg.dtype)
+                    page_size=page_size, kv_format=kv_format), cfg.dtype)
 
 
 def param_count(cfg: ArchConfig) -> int:

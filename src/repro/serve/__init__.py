@@ -72,6 +72,33 @@ gathered window in HBM, non-resident/future pages skipped.  Off-TPU it
 runs under the Pallas interpreter, and for f32 pools the served logits
 are bit-identical to the lax path at every shard count
 (tests/test_paged_flash_decode.py).
+
+``ServeConfig.kv_format`` selects the pool's PAGE STORAGE FORMAT
+(:mod:`repro.core.pageformat`) — the contract layered under everything
+above:
+
+  * ``"fp"`` is the BIT-EXACT REFERENCE: pages store model dtype,
+    specs, traces, and logits are identical to the pre-format engine at
+    every shard count, through multi-chunk resume, prefix-shared/COW
+    tables, and swap cycles.
+  * ``"int8"``/``"int4"`` are ERROR-BUDGETED: pages store packed
+    integer rows plus one f32 absmax scale per cache row, quantized
+    once at page-write time and dequantized inside the flash partial
+    (lax and Pallas kernel alike — never an fp window in HBM).  The
+    fp-vs-quantized logit error is measured and reported by
+    ``benchmarks/serve_throughput.py`` (``kv_quant`` in
+    BENCH_serve.json); what stays EXACT is addressing-invariance —
+    a row's stored bytes depend only on its own fp values, so
+    quantized logits are bitwise identical across chunking schedules,
+    sharing on/off, swap cycles, shard counts, and lax-vs-kernel
+    (tests/test_quant_pool.py).
+
+Scales ride COW/swap/striping for free because they are ordinary
+pool-shaped cache leaves (``(num_pages, page_size)`` f32 on the same
+'pages' axis): the engine's pooled-leaf classification makes every
+page-indexed data movement — COW privatize, swap-out/swap-in, stripe
+re-pinning, per-page byte accounting (``_page_nbytes`` prices packed
+rows + scales together) — move a page's scales with its rows.
 """
 from repro.serve.config import Request, ServeConfig  # noqa: F401
 from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401

@@ -27,6 +27,14 @@ engine = execution).  It owns
 
 Every method is pure host-side bookkeeping: the allocator never touches
 device memory.  The engine applies the (src, dst) copies it returns.
+
+The allocator counts PAGES and is storage-format oblivious: under a
+quantized ``ServeConfig.kv_format`` a physical page means packed int8
+rows PLUS their per-row f32 scales (both pool-shaped leaves on the same
+page axis), so the same (src, dst) copy, refcount, and reservation
+bookkeeping covers them — bytes-per-page pricing (swap budget, pool
+accounting) lives in ``engine._page_nbytes``, which sums every pooled
+leaf's per-page footprint whatever the format.
 """
 from __future__ import annotations
 

@@ -67,6 +67,19 @@ class ServeConfig:
     # unchanged: f32-pool logits are bit-identical to the lax path.
     # Inert when the pool is replicated (no 'pages' mesh striping in the
     # active rule table) — that path keeps its local gather.
+    kv_format: str = "fp"
+    # Page STORAGE format of the paged KV pool (core/pageformat):
+    #   "fp":   pages stored at model dtype — the bit-exact reference path
+    #           (logits identical to the pre-format engine at every shard
+    #           count, through resume/COW/swap);
+    #   "int8": pages stored as int8 with one f32 absmax scale per cache
+    #           row, the scale pool a pool-shaped leaf beside the page
+    #           table (so COW/swap/striping move scales with their pages);
+    #   "int4": as int8, rows additionally packed 2 lanes/byte.
+    # Quantization happens once at page-write time and dequantization
+    # inside the flash partial (lax and Pallas kernel both) — no fp window
+    # is materialized in HBM.  Quantized formats trade a benchmarked logit
+    # error for 4-8x pool capacity at fixed memory.  Paged engine only.
     record_logits: bool = False     # keep per-token logits on each Request
     swap_budget_bytes: Optional[int] = None
     # Cap on host memory held by the swap queue (preempted requests park
@@ -95,7 +108,15 @@ class ServeConfig:
         if self.preemption not in ("swap", "terminate"):
             bad("preemption", f"must be 'swap' or 'terminate', "
                 f"got {self.preemption!r}")
+        from repro.core.pageformat import KV_FORMATS
+        if self.kv_format not in KV_FORMATS:
+            bad("kv_format", f"must be one of {KV_FORMATS}, "
+                f"got {self.kv_format!r}")
         if not self.paged:
+            if self.kv_format != "fp":
+                bad("kv_format", f"({self.kv_format!r}) needs the paged "
+                    "engine (paged=True); only pool pages carry per-row "
+                    "scales — the contiguous layout stores model dtype")
             if self.use_pallas_decode:
                 bad("use_pallas_decode", "needs the paged engine "
                     "(paged=True); the contiguous layout has no paged "

@@ -207,7 +207,8 @@ class ServingEngine:
                     * self.pool_shards
                 self._pool_sharding = NamedSharding(mesh, PartitionSpec(
                     None, paxes[0] if len(paxes) == 1 else paxes))
-            self.cache = init_paged_cache(cfg, bsz, self.num_pages, ps)
+            self.cache = init_paged_cache(cfg, bsz, self.num_pages, ps,
+                                          kv_format=serve_cfg.kv_format)
             # Fused Pallas decode: the knob is consulted at TRACE time by
             # the striped flash-decoding path, so every jitted dispatch
             # below runs under _kernel_ctx().  Each engine owns its own
@@ -224,7 +225,8 @@ class ServingEngine:
             # which cache leaves are shared page POOLS (axis 1 = pages)
             # vs per-slot state (axis 1 = batch) — drives swap and COW.
             specs = cache_specs(cfg, bsz, 0, num_pages=self.num_pages,
-                                page_size=ps)
+                                page_size=ps,
+                                kv_format=serve_cfg.kv_format)
             flat_specs, _ = jax.tree.flatten(specs,
                                              is_leaf=is_spec_tree_leaf)
             self._pooled = [s.axes[1] == "pages" for s in flat_specs]

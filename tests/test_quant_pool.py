@@ -1,0 +1,353 @@
+"""Quantized paged KV pool: page storage formats (core/pageformat).
+
+Contract under test (serve/__init__.py docstring):
+
+  * ``kv_format="fp"`` is the bit-exact reference — identical specs,
+    identical logits to the pre-format engine;
+  * quantized formats ("int8"/"int4") store packed rows + one f32 absmax
+    scale per cache row in a pool-shaped scale leaf, quantize ONCE at
+    page-write time, and dequantize inside the flash partial — so every
+    serving transform (chunking, prefix sharing/COW, swap, shard count,
+    lax vs Pallas kernel) is pure addressing over the same stored bytes
+    and the logits are BITWISE invariant across all of them;
+  * fp-vs-quantized logit error stays under a documented budget.
+
+The error budgets below are empirical for these tiny random-init
+fixtures (f32, logit range ~ +-10): int8 observed max |err| ~ 0.21,
+int4 ~ 0.61; asserted at 2-4x headroom.  They document the scale of the
+approximation, not a universal guarantee.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pageformat import (FP, INT4, INT8, format_for_packed,
+                                   get_format)
+from repro.models import (ArchConfig, forward, init_paged_cache, init_params)
+from repro.serve import Request, ServeConfig, ServingEngine
+
+GQA = ArchConfig(name="pg", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+MLA = ArchConfig(name="pg_mla", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                 kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                 v_head_dim=16, decode_margin=32,
+                 pattern=(("scan", "mla_mlp", 2),), dtype=jnp.float32)
+
+BUDGET = {"int8": 0.5, "int4": 2.5}
+
+
+# -- config / format plumbing ------------------------------------------------
+
+def test_kv_format_validation():
+    with pytest.raises(ValueError, match="kv_format"):
+        ServeConfig(kv_format="fp8")
+    with pytest.raises(ValueError, match="kv_format"):
+        ServeConfig(paged=False, kv_format="int8")
+    ServeConfig(paged=False, kv_format="fp")         # fp is layout-agnostic
+    with pytest.raises(ValueError, match="kv_format"):
+        get_format("int2")
+
+
+def test_pageformat_roundtrip_and_edges():
+    rng = np.random.RandomState(0)
+    rows = jnp.asarray(rng.randn(6, 4, 16), jnp.float32)
+    for fmt in (INT8, INT4):
+        q, s = fmt.quantize_rows(rows)
+        assert q.dtype == jnp.int8 and q.shape[-1] == 16 // fmt.pack
+        assert s.shape == (6, 4) and s.dtype == jnp.float32
+        deq = fmt.dequantize(q, s, jnp.float32)
+        # symmetric absmax, one scale per row: |err| <= scale/2 per element
+        err = np.abs(np.asarray(deq) - np.asarray(rows))
+        assert (err <= np.asarray(s)[..., None] / 2 + 1e-6).all()
+    # all-zero rows hit the eps floor: scale stays positive, values exact.
+    z = jnp.zeros((2, 3, 8), jnp.float32)
+    q, s = INT4.quantize_rows(z)
+    assert (np.asarray(s) > 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(INT4.dequantize(q, s, jnp.float32)), np.asarray(z))
+    # non-multiple-of-pack-factor widths are a loud config error.
+    with pytest.raises(ValueError, match="kv_format"):
+        INT4.packed_feat(9)
+    assert INT4.packed_feat(16) == 8 and INT8.packed_feat(16) == 16
+    # structural inference: stored width names the format.
+    assert format_for_packed(16, 16) is INT8   # int8 path keeps full width
+    assert format_for_packed(16, 8) is INT4
+    with pytest.raises(ValueError, match="no page format"):
+        format_for_packed(16, 5)
+    assert FP.pack == 1 and not FP.quantized
+
+
+def test_fp_specs_identical_to_preformat_layout():
+    """kv_format='fp' must not change a single spec: same leaves, shapes,
+    and dtypes as the default call — the bit-exact reference path."""
+    from repro.models.attention import paged_kv_cache_spec
+    from repro.models.mla import paged_mla_cache_spec
+    for mk, cfg in ((paged_kv_cache_spec, GQA), (paged_mla_cache_spec, MLA)):
+        default = mk(cfg, 8, 4)
+        explicit = mk(cfg, 8, 4, fmt=FP)
+        assert set(default) == set(explicit)
+        for k in default:
+            assert default[k].shape == explicit[k].shape
+            assert default[k].dtype == explicit[k].dtype
+        assert not any(k.endswith("_scale") for k in default)
+    # quantized specs: packed pool + pool-shaped f32 scale leaves.
+    qs = paged_kv_cache_spec(GQA, 8, 4, fmt=INT4)
+    assert qs["k"].shape[-1] == 8 and qs["k"].dtype == jnp.int8
+    assert qs["k_scale"].shape == (8, 4) and qs["k_scale"].axes[0] == "pages"
+    ms = paged_mla_cache_spec(MLA, 8, 4, fmt=INT4)
+    assert ms["ckv"].shape[-1] == 20 and "ckv_scale" in ms
+
+
+# -- kernel seam: quantized Pallas partials == lax dequant partials ----------
+
+def test_gqa_quant_kernel_partials_bitwise_f32():
+    """In-kernel dequant (unpack -> f32 * row scale -> astype) must match
+    the lax PageFormat.dequantize + _page_partials path bitwise."""
+    from repro.kernels.paged_flash_decode import paged_flash_decode_partials
+    from repro.models.attention import _page_partials
+    from repro.models.common import paged_gather
+    rng = np.random.RandomState(3)
+    n_pages, p, ps, kv, g, dh = 12, 4, 4, 2, 2, 16
+    kf = jnp.asarray(rng.randn(n_pages, ps, kv, dh), jnp.float32)
+    vf = jnp.asarray(rng.randn(n_pages, ps, kv, dh), jnp.float32)
+    q = jnp.asarray(rng.randn(3, 1, kv * g, dh), jnp.float32)
+    tbl = jnp.asarray([[5, 2, -1, 7], [1, 6, 3, -1], [-1, -1, -1, -1]],
+                      jnp.int32)
+    qpos = jnp.asarray([[9], [5], [-1]], jnp.int32)
+    kvv = jnp.asarray([10, 6, 0], jnp.int32)
+    for fmt in (INT8, INT4):
+        kq, ks = fmt.quantize_rows(kf)
+        vq, vs = fmt.quantize_rows(vf)
+        got = paged_flash_decode_partials(
+            kq, vq, q, tbl, qpos, kvv, k_scale=ks, v_scale=vs,
+            bits=fmt.bits, interpret=True)
+        want = _page_partials(
+            q, fmt.dequantize(paged_gather(kq, tbl),
+                              paged_gather(ks, tbl), q.dtype),
+            fmt.dequantize(paged_gather(vq, tbl),
+                           paged_gather(vs, tbl), q.dtype),
+            tbl, qpos, kvv)
+        for g_, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_mla_quant_kernel_partials_bitwise_f32():
+    from repro.kernels.paged_flash_decode import mla_paged_decode_partials
+    from repro.models.common import paged_gather
+    from repro.models.mla import _mla_window_partials
+    rng = np.random.RandomState(5)
+    n_pages, p, ps, r, dr, h = 12, 4, 4, 32, 8, 4
+    pool = jnp.asarray(rng.randn(n_pages, ps, r + dr), jnp.float32)
+    qc = jnp.asarray(rng.randn(2, 1, h, r), jnp.float32)
+    qr = jnp.asarray(rng.randn(2, 1, h, dr), jnp.float32)
+    tbl = jnp.asarray([[5, 2, -1, 7], [1, 6, 3, 0]], jnp.int32)
+    pb = jnp.asarray([9, 13], jnp.int32)
+    for fmt in (INT8, INT4):
+        pq, psc = fmt.quantize_rows(pool)
+        got = mla_paged_decode_partials(pq, qc, qr, tbl, pb, r, r + dr,
+                                        scale_pool=psc, bits=fmt.bits,
+                                        interpret=True)
+        buf = fmt.dequantize(paged_gather(pq, tbl),
+                             paged_gather(psc, tbl), qc.dtype)
+        want = _mla_window_partials(buf, qc, qr, tbl, pb, r, r + dr)
+        for g_, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+# -- forward level: error budget against the fp reference --------------------
+
+def _forward_logits(cfg, kvf):
+    b, sp, ps, n_pages = 2, 8, 32, 16
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, sp), 0,
+                              cfg.vocab_size)
+    lens = jnp.asarray([5, 8], jnp.int32)
+    pages = jnp.asarray([[5, 2, 7, 0, 9, 12, 15, 10],
+                         [1, 6, 3, 4, 13, 8, 11, 14]], jnp.int32)
+    cache = init_paged_cache(cfg, b, n_pages, ps, kv_format=kvf)
+    out = []
+    lg, cache, _ = forward(params, toks, cfg, cache=cache, mode="chunk",
+                           pos=lens, pages=pages)
+    out.append(np.asarray(lg[:, -1]))
+    pos, tok = np.asarray(lens), jnp.asarray([[3], [7]], jnp.int32)
+    for _ in range(3):
+        lg, cache, _ = forward(params, tok, cfg, cache=cache, mode="decode",
+                               pos=jnp.asarray(pos, jnp.int32), pages=pages)
+        out.append(np.asarray(lg[:, -1]))
+        tok = jnp.argmax(lg[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+@pytest.mark.parametrize("kvf", ["int8", "int4"])
+def test_quantized_forward_logits_within_budget(cfg, kvf):
+    ref = _forward_logits(cfg, "fp")
+    got = _forward_logits(cfg, kvf)
+    err = float(np.max(np.abs(got - ref)))
+    assert err < BUDGET[kvf], (kvf, err)
+    assert err > 0.0                      # really ran the quantized path
+
+
+# -- engine level: quantized logits are addressing-invariant -----------------
+
+def _serve_logits(cfg, plan, **sc_kw):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(record_logits=True,
+                                                 **sc_kw))
+    todo = sorted(plan)
+    while todo or eng.sched.has_work():
+        while todo and todo[0][0] <= eng.tick_no:
+            _, rid, p = todo.pop(0)
+            eng.submit(Request(rid, list(p)))
+        eng.tick()
+    toks = {r.rid: r.out_tokens for r in eng.completed}
+    lgts = {r.rid: np.stack(r.logits) for r in eng.completed if r.logits}
+    return toks, lgts, eng
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+def test_int8_logits_invariant_to_prefix_sharing_and_cow(cfg):
+    """Prefix sharing + COW only re-address stored bytes: int8 logits are
+    BITWISE identical with sharing on and off — the scale pool rides the
+    page copies with its pages."""
+    shared = [5, 7, 11, 2, 9, 4, 8]
+    plan = [(0, 0, shared + [3, 6, 2]), (3, 1, shared + [1, 1, 7])]
+    kw = dict(max_batch=2, max_prompt=16, max_new_tokens=6, page_size=4,
+              num_pages=16, kv_format="int8")
+    t_on, l_on, e_on = _serve_logits(cfg, plan, prefix_sharing=True, **kw)
+    t_off, l_off, _ = _serve_logits(cfg, plan, prefix_sharing=False, **kw)
+    assert e_on.n_shared_admissions > 0 and e_on.n_cow_copies > 0
+    assert t_on == t_off
+    for rid in l_on:
+        np.testing.assert_array_equal(l_on[rid], l_off[rid])
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+def test_int8_logits_invariant_through_swap_cycle(cfg):
+    """A swap-out/swap-in preemption cycle under an overcommitted pool
+    restores packed pages AND their scales byte-exact: int8 logits match
+    the ample-pool run bitwise."""
+    prompts = [[5, 7, 11, 2, 9, 4], [3, 1, 4, 1, 5, 9], [9, 8, 7, 6, 5, 3]]
+    plan = [(0, i, p) for i, p in enumerate(prompts)]
+    kw = dict(max_batch=2, max_prompt=8, max_new_tokens=12, page_size=4,
+              max_seq=20, kv_format="int8")
+    t_sw, l_sw, e_sw = _serve_logits(
+        cfg, plan, num_pages=8, reserve_decode_pages=False,
+        preemption="swap", **kw)
+    t_amp, l_amp, e_amp = _serve_logits(cfg, plan, num_pages=32, **kw)
+    assert e_sw.n_preemptions > 0 and e_sw.n_swap_ins > 0
+    assert e_amp.n_preemptions == 0
+    assert t_sw == t_amp
+    for rid in l_sw:
+        np.testing.assert_array_equal(l_sw[rid], l_amp[rid])
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+def test_engine_quantized_logits_within_budget(cfg):
+    """Same serve plan, fp vs int8 pool: greedy decode stays coherent and
+    per-token logit error stays under the documented budget wherever the
+    emitted token streams agree."""
+    prompts = [[5, 7, 11], [3, 1, 4, 1, 5, 9, 2, 6], [2, 7]]
+    plan = [(0, i, p) for i, p in enumerate(prompts)]
+    kw = dict(max_batch=2, max_prompt=16, max_new_tokens=5, page_size=4)
+    _, l_fp, e_fp = _serve_logits(cfg, plan, kv_format="fp", **kw)
+    t_q, l_q, e_q = _serve_logits(cfg, plan, kv_format="int8", **kw)
+    assert len(e_q._free_pages) == e_q.num_pages    # pool fully released
+    # quantized pool rows are strictly smaller than fp rows.
+    assert e_q.pool_bytes_per_shard() < e_fp.pool_bytes_per_shard()
+    assert all(len(t_q[r]) == 5 for r in t_q)
+    # first emitted token of every request sees identical prompt history:
+    # its logit row must sit inside the budget.
+    for rid in l_fp:
+        err = float(np.max(np.abs(l_fp[rid][0] - l_q[rid][0])))
+        assert err < BUDGET["int8"], (rid, err)
+
+
+# -- 8-device leg: striped scale pool, shard invariance, kernel parity -------
+
+def test_int8_sharded_pool_bit_identical_and_pallas_parity():
+    """8-shard striped int8 pool (scales striped beside their pages):
+    logits bitwise equal to the 1-shard pool, and the quantized Pallas
+    kernel bitwise equal to the lax dequant path, GQA and MLA."""
+    code = (
+        "import os\n"
+        'os.environ["XLA_FLAGS"] = '
+        '"--xla_force_host_platform_device_count=8"\n'
+        + textwrap.dedent("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.models import ArchConfig, init_params
+        from repro.serve import Request, ServeConfig, ServingEngine
+        from repro.distributed.sharding import use_rules
+        from repro.launch.mesh import make_test_mesh
+
+        GQA = ArchConfig(name='pg', family='dense', n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                         decode_margin=32, dtype=jnp.float32)
+        MLA = ArchConfig(name='pg_mla', family='dense', n_layers=2,
+                         d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                         vocab_size=100, kv_lora_rank=32, qk_nope_dim=16,
+                         qk_rope_dim=8, v_head_dim=16, decode_margin=32,
+                         pattern=(('scan', 'mla_mlp', 2),),
+                         dtype=jnp.float32)
+
+        def serve(cfg, mesh_shape, plan, sc_kw):
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            mesh = make_test_mesh(mesh_shape, ('data', 'model'))
+            with use_rules(mesh, 'fsdp_sp'):
+                eng = ServingEngine(cfg, params,
+                                    ServeConfig(record_logits=True,
+                                                **sc_kw))
+                todo = sorted(plan)
+                while todo or eng.sched.has_work():
+                    while todo and todo[0][0] <= eng.tick_no:
+                        _, rid, p = todo.pop(0)
+                        eng.submit(Request(rid, list(p)))
+                    eng.tick()
+            toks = {r.rid: r.out_tokens for r in eng.completed}
+            lgts = {r.rid: np.stack(r.logits) for r in eng.completed
+                    if r.logits}
+            return toks, lgts, eng
+
+        prompts = [[5, 7, 11, 2, 9, 4, 8, 1, 3, 6], [3, 1, 4],
+                   [9, 8, 7, 6, 5, 4, 3, 2, 1, 2, 3, 4, 5, 6]]
+        plan = [(0, i, p) for i, p in enumerate(prompts)]
+        for cfg in (GQA, MLA):
+            kw = dict(max_batch=2, max_prompt=6, max_new_tokens=6,
+                      page_size=4, num_pages=16, max_seq=24,
+                      kv_format='int8')
+            t1, l1, e1 = serve(cfg, (8, 1), plan, kw)
+            t8, l8, e8 = serve(cfg, (1, 8), plan, kw)
+            assert e1.pool_shards == 1 and e8.pool_shards == 8
+            assert t1 == t8, (t1, t8)
+            assert set(l1) == set(l8) and len(l1) > 0
+            for rid in l1:
+                np.testing.assert_array_equal(l1[rid], l8[rid])
+            # scale leaves are striped on the page axis like their pools.
+            flat, _ = jax.tree.flatten(e8.cache)
+            n_scale = 0
+            for leaf, pooled in zip(flat, e8._pooled):
+                if pooled:
+                    shard = leaf.addressable_shards[0]
+                    assert shard.data.shape[1] * 8 == leaf.shape[1]
+                    n_scale += leaf.dtype == jnp.float32 and leaf.ndim == 3
+            assert n_scale > 0
+            tp, lp, _ = serve(cfg, (1, 8), plan,
+                              dict(kw, use_pallas_decode=True))
+            assert t8 == tp, (t8, tp)
+            for rid in l8:
+                np.testing.assert_array_equal(l8[rid], lp[rid])
+        """)
+        + '\nprint("SUBPROC_OK")\n')
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SUBPROC_OK" in r.stdout

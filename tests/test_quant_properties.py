@@ -12,6 +12,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.packing import pack, pack_factor, packed_shape, unpack
+from repro.core.pageformat import INT4, INT8, get_format
 from repro.core.quant import (compute_scale, dequantize, fake_quant, qmax,
                               qmin, quantize, quantize_activation)
 
@@ -65,6 +66,70 @@ def test_quantize_scale_equivariance(bits, seed, scale):
     q1, _ = quantize_activation(x, bits)
     q2, _ = quantize_activation(x * scale, bits)
     np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(fmt=st.sampled_from(["int8", "int4"]), pages=st.integers(1, 6),
+       ps=st.integers(1, 8), feat=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_page_row_scale_roundtrip(fmt, pages, ps, feat, seed):
+    """Per-page-axis (one scale per cache ROW) round-trip: |err| bounded
+    by half a quantization step of that row's own scale, scales shaped
+    like the pool's leading (pages, page_size) axes."""
+    fmt = get_format(fmt)
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (pages, ps, feat * fmt.pack), jnp.float32)
+    q, s = fmt.quantize_rows(x)
+    assert s.shape == (pages, ps) and s.dtype == jnp.float32
+    assert q.shape == (pages, ps, feat)
+    xd = fmt.dequantize(q, s, jnp.float32)
+    err = jnp.abs(xd - x)
+    assert bool(jnp.all(err <= s[..., None] / 2 + 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(pages=st.integers(1, 4), ps=st.integers(1, 6),
+       feat=st.integers(1, 8), seed=st.integers(0, 2**16),
+       zero_rows=st.booleans())
+def test_page_row_quantize_deterministic_and_zero_rows(pages, ps, feat,
+                                                       seed, zero_rows):
+    """A row's stored bytes depend only on its own fp values: quantizing
+    the same rows twice (or embedded among different neighbors) is bit-
+    identical — the invariance COW/swap/resharding rely on.  All-zero
+    rows hit the eps floor: positive scale, exact zeros back."""
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (pages, ps, feat * 2), jnp.float32)
+    if zero_rows:
+        x = x.at[0, 0].set(0.0)
+    q1, s1 = INT4.quantize_rows(x)
+    q2, s2 = INT4.quantize_rows(jnp.concatenate([x, x * 3.0], axis=0))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2)[:pages])
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2)[:pages])
+    assert bool(jnp.all(s1 > 0))
+    if zero_rows:
+        xd = INT4.dequantize(q1, s1, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(xd[0, 0]),
+                                      np.zeros(feat * 2, np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(feat=st.integers(1, 33), data=st.data())
+def test_int4_pack_unpack_page_edges(feat, data):
+    """int4 page packing edge cases: widths that are NOT a multiple of
+    the pack factor are a loud error; even widths round-trip every code
+    point including the qmin/qmax extremes."""
+    if feat % INT4.pack:
+        with pytest.raises(ValueError, match="kv_format"):
+            INT4.packed_feat(feat)
+        return
+    assert INT4.packed_feat(feat) == feat // 2
+    n = 4 * feat
+    vals = data.draw(st.lists(st.integers(qmin(4), qmax(4)),
+                              min_size=n, max_size=n))
+    q = jnp.asarray(vals, jnp.int8).reshape(2, 2, feat)
+    u = unpack(pack(q, 4, axis=-1), 4, axis=-1)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+    assert INT8.packed_feat(feat) == feat     # int8 never packs
 
 
 def test_ste_gradient_is_masked_identity():
