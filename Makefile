@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke test-sharded test-quant-pool bench-smoke bench-serve bench serve-demo
+.PHONY: test smoke test-sharded test-quant-pool test-tiered bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,6 +28,15 @@ test-sharded:
 # also runs on a plain single-device host, mirroring test-sharded).
 test-quant-pool:
 	$(PY) -m pytest -x -q tests/test_quant_pool.py
+
+# tiered page-pool leg (CI): two-tier residency invariants (allocator
+# walkers + hypothesis when installed), engine bit-identity through
+# eviction/prefetch cycles (GQA+MLA, fp+int4), durable swap-spill,
+# oversized contexts, and the 8-device sharded + Pallas legs (that
+# test spawns its own subprocess with XLA_FLAGS set, so this also
+# runs on a plain single-device host, mirroring test-sharded).
+test-tiered:
+	$(PY) -m pytest -x -q tests/test_tiered_pool.py
 
 # tiny end-to-end pass of every serving-benchmark section (CI): asserts
 # the benchmark itself still runs, so it cannot silently rot.

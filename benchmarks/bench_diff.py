@@ -11,6 +11,9 @@ direction:
   * TTFT p50/p95 (lower is better)          — ``ttft.p50_us/p95_us``
   * decode tokens/s per shard count + path  — ``decode_tok_per_s.*``
   * quantized-pool tokens/s per format      — ``kv_quant.formats.*``
+  * tiered-pool transfer stalls / overlap   — ``tiered.stall_tick_frac``
+    (lower), ``tiered.prefetch_hit_rate`` and ``tiered.tok_per_s``
+    (higher)
 
 Exit status is nonzero when any metric regresses by more than
 ``--threshold`` percent (default 10), so the CI job surfaces perf
@@ -42,6 +45,9 @@ _TIMED = [
     (("kv_quant", "formats", "fp", "tok_per_s"), "higher"),
     (("kv_quant", "formats", "int8", "tok_per_s"), "higher"),
     (("kv_quant", "formats", "int4", "tok_per_s"), "higher"),
+    (("tiered", "stall_tick_frac"), "lower"),
+    (("tiered", "prefetch_hit_rate"), "higher"),
+    (("tiered", "tok_per_s"), "higher"),
 ]
 
 # informative context, printed when present in both, never thresholded.
@@ -51,6 +57,9 @@ _CONTEXT = [
     ("kv_quant", "formats", "int4", "peak_concurrency"),
     ("kv_quant", "quality", "int8", "first_token_max_logit_err"),
     ("kv_quant", "quality", "int4", "first_token_max_logit_err"),
+    ("tiered", "context_over_pool"),
+    ("tiered", "prefetch_depth_auto"),
+    ("tiered", "n_evictions"),
 ]
 
 

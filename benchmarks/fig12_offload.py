@@ -4,17 +4,63 @@ Host/accelerator split maps to Python-host / XLA-jit (DESIGN.md §2-C4):
   * "lazy code load into L2" -> first-call jit staging (compile) time,
   * low vs high code utilization -> 1 call vs 1000 calls amortization,
   * host-only baseline -> interpreted (op-by-op, un-jitted) execution.
+
+Also home to :func:`measure_offload_bandwidth` — the paper's other
+offload axis, DATA movement between the host and the accelerator
+(HyperRAM <-> L2 in the SoC).  The serving engine's tiered page pool
+imports it lazily to size its prefetch depth: how many page-restore
+transfers one decode tick's worth of host->device bandwidth can hide.
 """
 from __future__ import annotations
 
 import time
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_fn
 
 M = 256
+
+
+def measure_offload_bandwidth(nbytes: int = 1 << 20,
+                              iters: int = 5) -> Dict[str, float]:
+    """Measured host<->device transfer bandwidth at a given payload size.
+
+    Times real page-sized data movement — ``jax.device_put`` of a pinned
+    host buffer (host->device restore) and ``np.asarray`` of a device
+    array (device->host eviction) — the exact two primitives the tiered
+    page pool issues per page.  Payloads are float32 so quantized pools
+    (int8/int4 pages are 4-8x smaller) just pass a smaller ``nbytes``.
+
+    Returns ``{"h2d_bytes_per_s", "d2h_bytes_per_s", "latency_s"}``
+    where ``latency_s`` is the median one-way host->device time for the
+    payload — what the engine's auto prefetch depth divides a tick's
+    duration by.
+    """
+    n = max(int(nbytes) // 4, 1)
+    host = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    dev = jax.device_put(host)
+    jax.block_until_ready(dev)
+
+    h2d, d2h = [], []
+    for _ in range(max(int(iters), 1)):
+        buf = host.copy()      # defeat any backend zero-copy aliasing
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.device_put(buf))
+        h2d.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        np.asarray(dev).copy()
+        d2h.append(time.perf_counter() - t0)
+    h2d.sort(), d2h.sort()
+    lat_h2d = h2d[len(h2d) // 2]
+    lat_d2h = d2h[len(d2h) // 2]
+    nb = n * 4
+    return {"h2d_bytes_per_s": nb / max(lat_h2d, 1e-9),
+            "d2h_bytes_per_s": nb / max(lat_d2h, 1e-9),
+            "latency_s": lat_h2d}
 
 
 def run():
@@ -47,6 +93,12 @@ def run():
         total = t_stage + n * t_acc
         emit(f"fig12/amortized_n{n}", total / n,
              f"overhead_frac={t_stage / total:.3f}")
+    # data-movement axis: the bandwidth the tiered pool's prefetch
+    # depth model consumes (1 MiB payload ~ a few KV pages).
+    bw = measure_offload_bandwidth()
+    emit("fig12/h2d_gbps", bw["latency_s"] * 1e6,
+         f"h2d_bytes_per_s={bw['h2d_bytes_per_s']:.3g},"
+         f"d2h_bytes_per_s={bw['d2h_bytes_per_s']:.3g}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,12 @@ Measures, on host CPU, what the serving rework buys on the hot path
     both (on host CPU the collectives cost more than the striping saves
     — the win at this scale is MEMORY; the combine exists so a
     production-sized pool never has to replicate onto every chip).
+  * tiered page pool — a pinned host tier behind the device pool:
+    an oversized context (>= 4x the device pool) completes where the
+    single-tier baseline capacity-faults, and a slotted workload under
+    eviction pressure reports the fraction of decode ticks stalled on
+    host->device page transfers (must stay < 10% at the auto prefetch
+    depth) with tokens bit-identical to an all-resident pool.
   * mixed-priority sessions — staggered arrivals through the session API
     (``submit()``/``tick()``): deadline-critical short requests landing
     behind a queue of best-effort long prompts.  At the SAME pool
@@ -563,6 +569,99 @@ def _quantized_pool(smoke: bool):
          f"{quality['int4']['first_token_argmax_agree_pct']}")
 
 
+def _tiered(smoke: bool):
+    """Two-tiered page pool: contexts beyond the device pool + stalls.
+
+    Headline contract (ROADMAP): with a pinned host tier behind the
+    device pool, (a) a request whose context is >= 4x the DEVICE pool
+    completes — the single-tier baseline capacity-rejects it — and
+    (b) on a slotted workload under enough pressure to force page
+    evict/prefetch cycles, the fraction of decode ticks stalled waiting
+    on a host->device transfer stays < 10% at the AUTO prefetch depth
+    (restores issued ahead of the decode window overlap compute), while
+    the emitted tokens stay bit-identical to an all-resident engine."""
+    cfg = _cfg(None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    page_size, num_pages, max_new = 8, 8, 8 if smoke else 16
+    pool_rows = page_size * num_pages
+
+    # (a) oversized context: >= 4x the device pool, host-tier resident.
+    span = 4 * pool_rows
+    big = _prompts(1, span - max_new, cfg.vocab_size)[0]
+    ov_base = dict(max_batch=2, max_prompt=16, max_new_tokens=max_new,
+                   page_size=page_size, num_pages=num_pages, max_seq=48)
+    eng_b = ServingEngine(cfg, params, ServeConfig(
+        strict_iotlb=False, **ov_base))
+    [rej] = eng_b.run([Request(0, list(big))])
+    assert rej.failed and not rej.out_tokens, \
+        "baseline must capacity-reject the oversized context"
+    eng_o = ServingEngine(cfg, params, ServeConfig(
+        host_pool_pages=span // page_size, **ov_base))
+    t0 = time.perf_counter()
+    [done] = eng_o.run([Request(0, list(big))])
+    dt_ov = time.perf_counter() - t0
+    assert done.done and not done.failed and \
+        len(done.out_tokens) == max_new, "oversized context must complete"
+
+    # (b) slotted pressure: every admitted window only fits by evicting
+    # colder pages to the host tier; auto-depth prefetch hides restores.
+    n_req = 6 if smoke else 12
+    key = jax.random.PRNGKey(41)
+    prompts = []
+    for i in range(n_req):
+        key, k = jax.random.split(key)
+        ln = 18 + (i % 4) * 6
+        prompts.append([int(t) for t in
+                        jax.random.randint(k, (ln,), 0, cfg.vocab_size)])
+    sl_base = dict(max_batch=4, max_prompt=16, max_new_tokens=max_new,
+                   page_size=page_size, max_seq=48)
+    eng_r = ServingEngine(cfg, params, ServeConfig(
+        num_pages=64, **sl_base))
+    ref = {r.rid: r.out_tokens
+           for r in eng_r.run([Request(i, list(p))
+                               for i, p in enumerate(prompts)])}
+    eng_t = ServingEngine(cfg, params, ServeConfig(
+        num_pages=num_pages, host_pool_pages=64,
+        prefetch_depth="auto", **sl_base))
+    eng_t.warmup()
+    t0 = time.perf_counter()
+    out = eng_t.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    dt_sl = time.perf_counter() - t0
+    toks = {r.rid: r.out_tokens for r in out}
+    assert toks == ref, "tiered tokens diverge from the all-resident pool"
+    st = eng_t.tier_stats()
+    assert st["n_evictions"] > 0, \
+        "pressure workload must exercise page eviction"
+    assert st["stall_tick_frac"] < 0.10, \
+        f"decode ticks stalled on transfers must stay < 10% at auto " \
+        f"prefetch depth, got {st['stall_tick_frac']:.1%}"
+    gen = sum(len(t) for t in toks.values())
+    _BENCH["tiered"] = {
+        "device_pool_rows": pool_rows,
+        "context_rows": span,
+        "context_over_pool": round(span / pool_rows, 1),
+        "oversized_completed": int(done.done),
+        "baseline_rejected": int(rej.failed),
+        "stall_tick_frac": round(st["stall_tick_frac"], 4),
+        "prefetch_hit_rate": round(st["prefetch_hit_rate"], 3),
+        "prefetch_depth_auto": eng_t._prefetch_depth(),
+        "n_evictions": st["n_evictions"],
+        "n_restores": st["n_restores"],
+        "n_spills": st["n_spills"],
+        "tok_per_s": round(gen / dt_sl, 1),
+    }
+    emit("serve/tiered_context", span / pool_rows,
+         f"context_rows={span};device_pool_rows={pool_rows};"
+         f"oversized_completed=1;baseline_rejected=1;"
+         f"run_us={dt_ov * 1e6:.0f}")
+    emit("serve/tiered_stall", st["stall_tick_frac"] * 100,
+         f"stall_tick_frac_pct={st['stall_tick_frac'] * 100:.1f};"
+         f"prefetch_hit_rate={st['prefetch_hit_rate']:.2f};"
+         f"prefetch_depth={eng_t._prefetch_depth()};"
+         f"evictions={st['n_evictions']};restores={st['n_restores']};"
+         f"tok_per_s={gen / dt_sl:.1f};identical_tokens=1")
+
+
 def run(smoke: bool = False):
     quants = [("bf16", None)] if smoke else \
         [("bf16", None),
@@ -588,6 +687,7 @@ def run(smoke: bool = False):
             _mixed_priority(cfg, params, n_low=4, n_high=2)
             _sharded_pool(smoke=True)
             _quantized_pool(smoke=True)
+            _tiered(smoke=True)
             continue
         for bsz in (1, 2, 4):
             # contiguous layout here: the TTFT probes time the contiguous
@@ -619,6 +719,7 @@ def run(smoke: bool = False):
     if not smoke:
         _sharded_pool(smoke=False)
         _quantized_pool(smoke=False)
+        _tiered(smoke=False)
     _write_bench_json(smoke)
 
 

@@ -51,9 +51,10 @@ from repro.kernels.paged_flash_decode import (decode_kernel_config,
                                               paged_flash_decode_partials)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
-                                 paged_gather, paged_gather_quant,
-                                 paged_scatter, paged_scatter_quant,
-                                 rms_norm, rope, shard_local_pages)
+                                 page_resident_rows, paged_gather,
+                                 paged_gather_quant, paged_scatter,
+                                 paged_scatter_quant, rms_norm, rope,
+                                 shard_local_pages)
 
 NEG_INF = -1e30
 # per-shard score-chunk budget (bytes) used to pick the query chunk size.
@@ -186,7 +187,7 @@ def _chunked_attention_local(q, k, v, q0, kv_valid):
     return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, v.shape[-1])
 
 
-def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
+def _resume_attention_local(q, k_all, v_all, q0, kv_valid, kv_ok=None):
     """Causal attention of a RESUMED prefill chunk against the slot's full
     cached window (history rows [0, q0) plus the chunk's own rows, which
     the caller has already scattered into the cache).
@@ -198,6 +199,11 @@ def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
     the result is bitwise the single-pass chunk attention restricted to
     the same key set — resuming changes WHERE keys are read from, never
     what is summed.
+
+    kv_ok: optional (B, Skv) bool residency mask (paged windows:
+    :func:`~repro.models.common.page_resident_rows`) ANDed into the
+    causal/validity mask — all-True on every legal dispatch, so the AND
+    is bit-preserving; see that helper's docstring.
 
     Queries are processed in SCORE_BYTES_BUDGET-sized chunks (the key
     axis is never split, so every query row still sees one exact softmax
@@ -219,6 +225,8 @@ def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
         qpos = q0[:, None] + c0 + jnp.arange(qc, dtype=jnp.int32)[None, :]
         mask = (kpos[None, None, :] <= qpos[:, :, None]) & \
             (kpos[None, None, :] < kv_valid[:, None, None])
+        if kv_ok is not None:
+            mask = mask & kv_ok[:, None, :]
         s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         o = jnp.einsum("bqkgs,bskd->bqkgd", p, v_all,
@@ -237,9 +245,14 @@ def _resume_attention_local(q, k_all, v_all, q0, kv_valid):
     return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, v_all.shape[-1])
 
 
-def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes):
+def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes,
+                            kv_ok=None):
     """Flash-decoding: partial softmax over the local cache slice, combined
-    across the seq mesh axes with a max/denominator reduction."""
+    across the seq mesh axes with a max/denominator reduction.
+
+    kv_ok: optional (B, Skv) bool residency mask ANDed into the validity
+    predicate (see :func:`~repro.models.common.page_resident_rows`) —
+    all-True on every legal dispatch, so bit-preserving."""
     b, sq, hq, dh = q.shape
     kv = k_loc.shape[2]
     g = hq // kv
@@ -250,8 +263,10 @@ def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes):
     kpos = k0 + jnp.arange(k_loc.shape[1], dtype=jnp.int32)
     # kv_valid: scalar or (B,) (continuous batching: per-slot fill levels).
     kv_b = jnp.broadcast_to(jnp.atleast_1d(kv_valid), (b,))
-    s = jnp.where(kpos[None, None, None, None, :]
-                  < kv_b[:, None, None, None, None], s, NEG_INF)
+    mask = kpos[None, :] < kv_b[:, None]
+    if kv_ok is not None:
+        mask = mask & kv_ok
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     # fully-masked shards (cache slice beyond kv_valid) contribute zeros.
     p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
@@ -554,7 +569,9 @@ def _paged_decode(q, k, v, cache, pages, pos_b):
                                     pages, fmt, q.dtype)
             vw = paged_gather_quant(new_cache["v"], new_cache["v_scale"],
                                     pages, fmt, q.dtype)
-        o = _decode_attention_local(q, kw, vw, jnp.int32(0), pos_b + 1, ())
+        o = _decode_attention_local(
+            q, kw, vw, jnp.int32(0), pos_b + 1, (),
+            kv_ok=page_resident_rows(pages, cache["k"].shape[1]))
         return o, new_cache
     if fmt is None:
         return _paged_flash_striped(cache, pages, k, v, q, t, t >= 0, t,
@@ -584,7 +601,9 @@ def _paged_resume(q, k, v, cache, pages, t, ok, off_b, len_b):
             new_cache = {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs}
             kw = paged_gather_quant(pk, pks, pages, fmt, q.dtype)
             vw = paged_gather_quant(pv, pvs, pages, fmt, q.dtype)
-        o = _resume_attention_local(q, kw, vw, off_b, off_b + len_b)
+        o = _resume_attention_local(
+            q, kw, vw, off_b, off_b + len_b,
+            kv_ok=page_resident_rows(pages, cache["k"].shape[1]))
         return o, new_cache
     qpos = off_b[:, None] + jnp.arange(q.shape[1], dtype=jnp.int32)[None]
     if fmt is None:

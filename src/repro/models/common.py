@@ -173,6 +173,19 @@ def contig_scatter(buf: jax.Array, rows: jax.Array, t: jax.Array,
     return flat.reshape(buf.shape)
 
 
+def page_resident_rows(pages: jax.Array, page_size: int) -> jax.Array:
+    """(B, P*page_size) bool: True where the logical row's page-table
+    entry is mapped.  The RESIDENCY mask for attention over a
+    :func:`paged_gather` window — under the two-tiered pool a page may be
+    parked on the host (entry -1), and its garbage-gathered rows must
+    never reach a softmax.  The serving engine already gates dispatches
+    on full residency, so in every legal dispatch this mask is all-True
+    over the valid window and the AND below it leaves the attention mask
+    — and therefore the logits — bit-identical (defense in depth, not a
+    semantic change)."""
+    return jnp.repeat(pages >= 0, page_size, axis=1)
+
+
 def paged_gather(pool: jax.Array, pages: jax.Array) -> jax.Array:
     """Gather a slot's logical cache window out of a paged row pool.
 

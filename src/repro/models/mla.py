@@ -28,9 +28,10 @@ from repro.models.attention import (NEG_INF, _combine_page_partials,
                                     sdpa, sharded_paged_scatter)
 from repro.models.common import (ParamSpec, broadcast_offset, chunk_lengths,
                                  chunk_valid_mask, contig_scatter, dense,
-                                 paged_gather, paged_gather_quant,
-                                 paged_scatter, paged_scatter_quant,
-                                 rms_norm, rope, shard_local_pages)
+                                 page_resident_rows, paged_gather,
+                                 paged_gather_quant, paged_scatter,
+                                 paged_scatter_quant, rms_norm, rope,
+                                 shard_local_pages)
 
 
 def mla_dims(cfg):
@@ -238,7 +239,9 @@ def _mla_paged_resume(p, qq, entry, cache, pages, t, ok, off_b, len_b, cfg,
             new_cache = {"ckv": pl, "ckv_scale": pls}
             buf = paged_gather_quant(pl, pls, pages, fmt, entry.dtype)
         k_full, v_w = expand_window(buf, p["w_uk"], p["w_uv"])
-        o = _resume_attention_local(qq, k_full, v_w, off_b, off_b + len_b)
+        o = _resume_attention_local(
+            qq, k_full, v_w, off_b, off_b + len_b,
+            kv_ok=page_resident_rows(pages, pool.shape[1]))
         return o, new_cache
 
     pspec = _pool_spec(pool.ndim)
@@ -465,8 +468,13 @@ def apply_mla(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                          preferred_element_type=jnp.float32)
         sc = sc * (scale_dim ** -0.5)
         kpos = jnp.arange(buf.shape[1], dtype=jnp.int32)
-        sc = jnp.where(kpos[None, None, None, :]
-                       <= pos_b[:, None, None, None], sc, -1e30)
+        mask = kpos[None, :] <= pos_b[:, None]
+        if pages is not None:
+            # residency, ANDed in (all-True on any legal dispatch —
+            # see common.page_resident_rows): rows under a host-parked
+            # page never reach the softmax.
+            mask = mask & page_resident_rows(pages, cache["ckv"].shape[1])
+        sc = jnp.where(mask[:, None, None, :], sc, -1e30)
         pr = jax.nn.softmax(sc, axis=-1)
         ctx_c = jnp.einsum("bqhs,bsr->bqhr", pr.astype(x.dtype), c_all,
                           preferred_element_type=jnp.float32)

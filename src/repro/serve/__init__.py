@@ -99,6 +99,48 @@ pool-shaped cache leaves (``(num_pages, page_size)`` f32 on the same
 page-indexed data movement — COW privatize, swap-out/swap-in, stripe
 re-pinning, per-page byte accounting (``_page_nbytes`` prices packed
 rows + scales together) — move a page's scales with its rows.
+
+``ServeConfig.host_pool_pages`` adds a SECOND TIER under the device
+pool — the two-tier contract:
+
+  * RESIDENCY is per logical page, one of three states the allocator
+    tracks exactly: DEVICE (``page_table[slot, j] >= 0``), HOST
+    (``host_table[slot, j] >= 0`` — bytes parked in a pinned host
+    buffer per pool leaf), or IN-FLIGHT (``(slot, j)`` in
+    ``alloc.inflight`` — a host->device restore issued but not landed;
+    the destination page is claimed, the host slot still owns the
+    bytes, so cancellation is always clean).  Exactly one state per
+    page; eviction of an in-flight or shared (refcount > 1) page is
+    refused at the allocator.
+  * WHO MAY EVICT: only three engine sites, all page-granular and all
+    coldest-slot-first / lowest-page-first — admission (making room
+    for a new prompt), decode growth (``_grow_pages``), and the
+    END-OF-TICK prefetcher balancing the pool.  Every eviction
+    protects the tick's HELD set: slots whose next dispatch window is
+    being prefetched plus every slot that passed this tick's residency
+    gate — a gate-cleared dispatch can never lose a window page to a
+    colder slot's restore.  Eviction copies the page's bytes (all
+    pooled leaves — quantized rows and scales alike) into the host
+    tier BEFORE the physical page is freed.
+  * WHAT GATES A DISPATCH: residency of the slot's ATTENTION WINDOW.
+    A resumed prefill chunk attends [0, off + chunk_len); a decode
+    tick attends [0, pos] — ``alloc.blocked_pages`` over exactly those
+    pages must be empty or the slot sits out the tick (stalled ticks
+    are counted; all-blocked decode waits on the oldest transfer and,
+    if both tiers are saturated, falls back to a whole-request swap).
+    Restores land at tick START (``transfer_ticks`` models latency;
+    ``None`` uses real async ``jax.device_put`` readiness); new
+    prefetches are issued at tick END, deepest-need-first, up to
+    ``prefetch_depth`` (``"auto"`` sizes the depth from measured
+    host->device bandwidth x the decode-tick EMA).
+  * The INVARIANT over all of it: fp logits stay bit-identical to the
+    all-resident engine through arbitrary evict/prefetch/swap cycles,
+    at every shard count, lax and Pallas (tests/test_tiered_pool.py);
+    contexts larger than the device pool complete off the host tier
+    (the streamed oversized path — token-exact vs the teacher-forced
+    oracle), and ``swap_budget_bytes`` overflow spills parked
+    snapshots through the checkpoint layer (``spill_dir``) instead of
+    denying swaps.
 """
 from repro.serve.config import Request, ServeConfig  # noqa: F401
 from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401

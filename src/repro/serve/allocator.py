@@ -35,10 +35,34 @@ page axis), so the same (src, dst) copy, refcount, and reservation
 bookkeeping covers them — bytes-per-page pricing (swap budget, pool
 accounting) lives in ``engine._page_nbytes``, which sums every pooled
 leaf's per-page footprint whatever the format.
+
+TWO-TIERED POOL (``host_pages > 0``): every logical page of a slot is
+in exactly one of three residency states —
+
+  * DEVICE   — ``page_table[slot, j] >= 0`` (a physical pool page);
+  * HOST     — ``host_table[slot, j] >= 0`` (a pinned host-tier slot;
+               the device entry is -1);
+  * IN-FLIGHT — ``(slot, j) in inflight``: a device page has been
+               CLAIMED for an asynchronous host->device restore, but the
+               transfer has not landed.  The claimed page is held OUT of
+               the page table, the free list, and the refcounts until
+               ``finish_restore`` — it can be neither evicted nor
+               handed to another allocation — and the HOST slot keeps
+               ownership of the bytes until the restore completes, so a
+               cancelled transfer loses nothing.
+
+State transitions: ``evict`` (device -> host; only private refcount==1
+pages — a shared page is pinned on device by its sharers), ``begin_ /
+finish_ / cancel_restore`` (host -> in-flight -> device resp. back to
+host).  The allocator still only does the BOOKKEEPING: the engine moves
+the actual bytes (device page -> pinned host buffer at evict, async
+``jax.device_put`` at restore) and must copy them at the transition
+points documented on each method.  ``host_pages=0`` keeps every new
+path inert — the single-tier engine is bit-preserved.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,7 +71,8 @@ from repro.core.iotlb import PagedIotlb, Window
 
 class PageAllocator:
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 pages_per_slot: int, num_shards: int = 1):
+                 pages_per_slot: int, num_shards: int = 1,
+                 host_pages: int = 0):
         assert num_pages % num_shards == 0, \
             f"pool of {num_pages} pages does not stripe over {num_shards}"
         self.num_pages = num_pages
@@ -71,6 +96,15 @@ class PageAllocator:
         # them, so balance never strands a reservation.
         self.growth_due = np.zeros((max_batch,), np.int32)
         self.iotlb = PagedIotlb()
+        # -- host tier (two-tiered pool; inert when host_pages == 0) --
+        self.host_pages = host_pages
+        self.host_table = np.full((max_batch, pages_per_slot), -1, np.int32)
+        self._host_free: List[int] = list(range(host_pages))
+        self.host_reserved = 0      # bulk-reserved slots (oversized caches)
+        # (slot, j) -> (claimed device phys, source host slot) for every
+        # restore in flight.  The claimed page lives in NO other
+        # structure until finish_restore/cancel_restore.
+        self.inflight: Dict[Tuple[int, int], Tuple[int, int]] = {}
 
     # -- queries ------------------------------------------------------------
     @property
@@ -92,6 +126,68 @@ class PageAllocator:
 
     def mapped_count(self, slot: int) -> int:
         return int((self.page_table[slot] >= 0).sum())
+
+    def logical_count(self, slot: int) -> int:
+        """Logical pages ``slot`` owns in ANY residency state (device,
+        host, or in-flight) — the page count a whole-request swap must
+        snapshot and later restore."""
+        n = int((self.page_table[slot] >= 0).sum()) \
+            + int((self.host_table[slot] >= 0).sum())
+        return n + sum(1 for (s, _j) in self.inflight if s == slot)
+
+    def host_pages_used(self) -> int:
+        return self.host_pages - len(self._host_free)
+
+    def resident_run(self, slot: int, upto_j: int) -> bool:
+        """True iff logical pages [0, upto_j) of ``slot`` are ALL
+        device-resident — the gate a dispatch whose attention window
+        spans those pages must pass."""
+        if upto_j <= 0:
+            return True
+        return bool((self.page_table[slot, :upto_j] >= 0).all())
+
+    def missing_pages(self, slot: int, upto_j: int) -> List[int]:
+        """Logical pages in [0, upto_j) NOT device-resident, ascending —
+        the restore order for this slot's window."""
+        return [j for j in range(upto_j)
+                if self.page_table[slot, j] < 0]
+
+    def blocked_pages(self, slot: int, upto_j: int) -> List[int]:
+        """Logical pages in [0, upto_j) that GATE a dispatch: evicted to
+        host or mid-restore, ascending.  A page mapped NOWHERE does not
+        block — it has never been written (decode growth allocates it
+        fresh); only a page whose bytes live off-device does."""
+        return [j for j in range(upto_j)
+                if self.page_table[slot, j] < 0
+                and (self.host_table[slot, j] >= 0
+                     or (slot, j) in self.inflight)]
+
+    def host_avail(self) -> int:
+        """Host-tier slots free for new evictions: the free list minus
+        the bulk reservation oversized contexts hold."""
+        return len(self._host_free) - self.host_reserved
+
+    def reserve_host(self, n: int) -> bool:
+        """Reserve ``n`` host-tier pages in bulk (an oversized context's
+        contiguous cache is priced in pool-sized pages even though it is
+        one host buffer).  Aggregate accounting only — no specific slot
+        ids are taken; evictions simply see ``n`` fewer free slots."""
+        if self.host_avail() < n:
+            return False
+        self.host_reserved += n
+        return True
+
+    def release_host(self, n: int) -> None:
+        self.host_reserved -= n
+        assert self.host_reserved >= 0, "host reservation underflow"
+
+    def evictable(self, slot: int, j: int) -> bool:
+        """A page may move to the host tier only when it is device-
+        resident, PRIVATE (refcount 1 — sharers pin it on device), and
+        not the claimed target of an in-flight restore."""
+        phys = int(self.page_table[slot, j])
+        return phys >= 0 and int(self.refcount[phys]) == 1 \
+            and (slot, j) not in self.inflight
 
     def reserved_free(self) -> int:
         """Free pages not spoken for by outstanding growth reservations."""
@@ -162,7 +258,14 @@ class PageAllocator:
 
     def release_slot(self, slot: int) -> None:
         """Drop every reference ``slot`` holds (and its unrealized growth
-        reservation); pages with no remaining sharer return to the pool."""
+        reservation); pages with no remaining sharer return to the pool.
+        Host-tier slots free too, and in-flight restores are cancelled
+        (the claimed device page AND the source host slot both return)."""
+        for (s, j) in [k for k in self.inflight if k[0] == slot]:
+            dst, h = self.inflight.pop((s, j))
+            self._free[self.shard_of(dst)].append(dst)
+            self._host_free.append(h)
+            self.host_table[s, j] = -1
         for j, phys in enumerate(self.page_table[slot]):
             if phys >= 0:
                 self.iotlb.unmap(f"slot{slot}p{j}")
@@ -170,8 +273,67 @@ class PageAllocator:
                 self.refcount[p] -= 1
                 if self.refcount[p] == 0:
                     self._free[self.shard_of(p)].append(p)
+            h = int(self.host_table[slot, j])
+            if h >= 0:
+                self._host_free.append(h)
         self.page_table[slot] = -1
+        self.host_table[slot] = -1
         self.growth_due[slot] = 0
+
+    # -- two-tier residency transitions -------------------------------------
+    def evict(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
+        """DEVICE -> HOST: move logical page ``j`` of ``slot`` to the
+        host tier.  Returns (device phys, host slot) — the caller MUST
+        copy the device page's bytes into pinned host buffer ``host``
+        BEFORE its next allocation reuses ``phys`` — or None when the
+        page is not evictable (see :meth:`evictable`) or the host tier
+        is full."""
+        if not self.evictable(slot, j) or self.host_avail() <= 0:
+            return None
+        phys = int(self.page_table[slot, j])
+        host = self._host_free.pop(0)
+        self.page_table[slot, j] = -1
+        self.host_table[slot, j] = host
+        self.refcount[phys] = 0
+        self._free[self.shard_of(phys)].append(phys)
+        self.iotlb.unmap(f"slot{slot}p{j}")
+        return phys, host
+
+    def begin_restore(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
+        """HOST -> IN-FLIGHT: claim a free device page as the restore
+        target for host-resident page ``j`` of ``slot``.  Returns
+        (claimed device phys, source host slot) for the caller to start
+        the asynchronous transfer from, or None when the page is not
+        host-resident, already in flight, or the device pool has no free
+        page.  The claimed page joins NO table until finish_restore; the
+        host slot keeps the bytes."""
+        if int(self.host_table[slot, j]) < 0 or (slot, j) in self.inflight:
+            return None
+        dst = self._pop_free()
+        if dst is None:
+            return None
+        host = int(self.host_table[slot, j])
+        self.inflight[(slot, j)] = (dst, host)
+        return dst, host
+
+    def finish_restore(self, slot: int, j: int) -> int:
+        """IN-FLIGHT -> DEVICE: the transfer landed — map the claimed
+        page, free the host slot.  The caller must have written the
+        page's bytes to device phys before calling.  Returns the phys."""
+        dst, host = self.inflight.pop((slot, j))
+        self.page_table[slot, j] = dst
+        self.host_table[slot, j] = -1
+        self.refcount[dst] = 1
+        self._host_free.append(host)
+        self.iotlb.map(self._window(slot, j, dst))
+        return dst
+
+    def cancel_restore(self, slot: int, j: int) -> None:
+        """IN-FLIGHT -> HOST: abandon the transfer — the claimed device
+        page returns to the free list; the host slot still owns the
+        bytes, so nothing is lost."""
+        dst, _host = self.inflight.pop((slot, j))
+        self._free[self.shard_of(dst)].append(dst)
 
     # -- access checks ------------------------------------------------------
     def check_write(self, slot: int, row: int, length: int = 1, *,

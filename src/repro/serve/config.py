@@ -8,7 +8,7 @@ instead of deep inside the allocator or scheduler ticks later.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import numpy as np
 
@@ -88,7 +88,46 @@ class ServeConfig:
     # queue past the budget, that victim is not swappable: the growing
     # request takes the capacity-fault path instead (recorded as a
     # ``swap_budget`` fault; strict mode raises), so the host never holds
-    # unbounded swapped state.
+    # unbounded swapped state — unless ``spill_dir`` is set, in which
+    # case the coldest swapped request spills to durable storage first.
+    spill_dir: Optional[str] = None
+    # Directory for spilling swapped requests through the checkpoint
+    # layer (checkpoint/checkpoint.py) when ``swap_budget_bytes`` is hit:
+    # host RAM becomes a CACHE over a durable tier instead of a hard cap.
+    # The coldest queued SwappedRequest (the tail — re-admission is FIFO
+    # from the head) writes its page/slot snapshots to an atomic
+    # checkpoint and drops them from host memory; swap-in restores them
+    # from disk bit-for-bit.  None = the pre-spill denial behavior.
+    host_pool_pages: int = 0
+    # Pages of the pinned HOST tier of a TWO-TIERED page pool (the
+    # paper's small fast memory backed by large slow HyperRAM, at page
+    # granularity).  0 = single-tier (the pre-tiering engine, all paths
+    # bit-identical).  > 0: pool pressure EVICTS cold pages (least-
+    # recently-dispatched slots first) to the host tier instead of
+    # swapping a whole victim request, and each prefill-resume/decode
+    # dispatch is GATED on its slot's attention window being device-
+    # resident, with asynchronous prefetches issued ahead of the decode
+    # window so transfers overlap compute.  Also admits OVERSIZED
+    # requests (page demand beyond the device pool, up to the host
+    # tier's capacity; fp format only) whose context lives host-side and
+    # streams through the device per dispatch — contexts far larger than
+    # the device pool complete instead of capacity-faulting.  Paged
+    # engine only.  Logits stay bit-identical to the all-resident
+    # engine: gating guarantees a dispatched window is fully resident,
+    # and paging is pure addressing.
+    prefetch_depth: Any = "auto"
+    # Restores issued per tick ahead of the decode window when the pool
+    # is tiered.  "auto": derived from a measured host<->device bandwidth
+    # model (benchmarks/fig12_offload.measure_offload_bandwidth feeding
+    # a transfers-per-tick cost model; conservative constants when the
+    # benchmark module is unavailable).  An int pins the depth —
+    # deterministic, for tests.
+    transfer_ticks: Optional[int] = None
+    # None: restores are REAL async jax.device_put transfers, applied
+    # when the device signals ready (``is_ready``).  An int T models the
+    # transfer latency instead: a restore completes exactly T ticks
+    # after issue — deterministic stall/prefetch accounting for tests
+    # and for pricing prefetch depth against a known latency.
 
     def __post_init__(self):
         def bad(field, why):
@@ -112,7 +151,27 @@ class ServeConfig:
         if self.kv_format not in KV_FORMATS:
             bad("kv_format", f"must be one of {KV_FORMATS}, "
                 f"got {self.kv_format!r}")
+        if isinstance(self.host_pool_pages, bool) or \
+                not isinstance(self.host_pool_pages, int) or \
+                self.host_pool_pages < 0:
+            bad("host_pool_pages", "must be a non-negative int "
+                f"(0 = single-tier pool), got {self.host_pool_pages!r}")
+        if self.prefetch_depth != "auto" and (
+                isinstance(self.prefetch_depth, bool)
+                or not isinstance(self.prefetch_depth, int)
+                or self.prefetch_depth <= 0):
+            bad("prefetch_depth", "must be 'auto' or a positive int, "
+                f"got {self.prefetch_depth!r}")
+        if self.transfer_ticks is not None and (
+                isinstance(self.transfer_ticks, bool)
+                or not isinstance(self.transfer_ticks, int)
+                or self.transfer_ticks <= 0):
+            bad("transfer_ticks", "must be a positive int of engine ticks "
+                f"(None = real async transfers), got {self.transfer_ticks!r}")
         if not self.paged:
+            if self.host_pool_pages:
+                bad("host_pool_pages", "needs the paged engine "
+                    "(paged=True); only pool pages can tier to host")
             if self.kv_format != "fp":
                 bad("kv_format", f"({self.kv_format!r}) needs the paged "
                     "engine (paged=True); only pool pages carry per-row "

@@ -66,13 +66,16 @@ single-pass, never-preempted, unshared path.
 from __future__ import annotations
 
 import contextlib
-from typing import List, Optional, Tuple
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.checkpoint import checkpoint as checkpointing
 from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
 from repro.distributed.sharding import mesh_axes_for
 from repro.kernels.paged_flash_decode import use_pallas_decode
@@ -83,11 +86,37 @@ from repro.models.model import cache_specs
 from repro.serve.allocator import PageAllocator
 from repro.serve.config import Request, ServeConfig
 from repro.serve.scheduler import Scheduler, SwappedRequest
-from repro.train.step import (make_chunked_prefill_step, make_decode_step,
+from repro.train.step import (make_chunked_prefill_resume_step,
+                              make_chunked_prefill_step, make_decode_step,
                               make_paged_chunked_prefill_step,
                               make_paged_decode_step)
 
 _DEFER = "defer"                    # admission verdict: retry after frees
+_OVERSIZED = "oversized"            # admission verdict: host-tier context
+
+# conservative host->device fallback bandwidth (bytes/s) when the
+# measured model (benchmarks/fig12_offload.measure_offload_bandwidth)
+# is unavailable — sized so the auto prefetch depth stays modest.
+_FALLBACK_H2D_BPS = 1e9
+
+
+@dataclasses.dataclass
+class _OversizedRequest:
+    """A request whose page demand exceeds the DEVICE pool: its whole
+    contiguous cache lives in the host tier (numpy) and streams through
+    the device one dispatch at a time — chunked prefill, then one decode
+    token per tick — so contexts far larger than the device pool
+    complete instead of capacity-faulting.  fp-format only (the
+    contiguous layout has no quantized pages); tokens are identical to
+    an all-resident engine because contiguous-vs-paged is pure
+    addressing."""
+    req: Request
+    cache: Any                  # contiguous batch-1 cache, numpy leaves
+    cap: int                    # page-rounded row capacity
+    n_host_pages: int           # host-tier pages reserved for accounting
+    prefill_done: int = 0
+    pos: int = 0                # next cache write row once prefilled
+    last_token: int = 0
 
 
 class RequestHandle:
@@ -109,7 +138,10 @@ class RequestHandle:
         """'pending' | 'running' | 'swapped' | 'done' | 'failed'."""
         if self.req.done:
             return "failed" if self.req.failed else "done"
-        return self._eng.sched.state_of(self.req)
+        st = self._eng.sched.state_of(self.req)
+        if st == "unknown" and self._eng._is_oversized(self.req):
+            return "running"    # streaming from the host tier, slotless
+        return st
 
     @property
     def tokens_so_far(self) -> List[int]:
@@ -221,7 +253,8 @@ class ServingEngine:
                                     donate_argnums=1)
             self.alloc = PageAllocator(self.num_pages, ps, bsz,
                                        self.pages_per_slot,
-                                       num_shards=self.pool_shards)
+                                       num_shards=self.pool_shards,
+                                       host_pages=serve_cfg.host_pool_pages)
             # which cache leaves are shared page POOLS (axis 1 = pages)
             # vs per-slot state (axis 1 = batch) — drives swap and COW.
             specs = cache_specs(cfg, bsz, 0, num_pages=self.num_pages,
@@ -287,6 +320,36 @@ class ServingEngine:
                 if not pooled)
         else:
             self._page_nbytes = self._slot_state_nbytes = 0
+        # -- two-tier state (inert when host_pool_pages == 0) ----------------
+        # The host tier is one pinned numpy buffer per POOLED cache leaf,
+        # page-indexed on axis 0: evicted pages park here byte-exact
+        # (quantized formats ride free — packed int4 pages are 4x denser
+        # per host slot exactly as they are per device page).
+        self.tiered = bool(serve_cfg.paged and serve_cfg.host_pool_pages)
+        self._host_tier: List[np.ndarray] = []
+        if self.tiered:
+            self._host_tier = [
+                np.zeros((serve_cfg.host_pool_pages, leaf.shape[0])
+                         + leaf.shape[2:], leaf.dtype)
+                for leaf, pooled in zip(flat_cache, self._pooled) if pooled]
+        # (slot, j) -> in-flight restore: the async jax.device_put
+        # arrays, issue tick, and whether a stall ever blocked on it.
+        self._inflight_data: Dict[Tuple[int, int], dict] = {}
+        self._held_slots: set = set()   # blocked mid-restore this tick
+        self._tick_ema: Optional[float] = None   # seconds per tick
+        self._h2d_bps: Optional[float] = None    # measured lazily
+        self._oversized: List[_OversizedRequest] = []
+        self._ov_prefill = None     # lazy jits (oversized contexts only)
+        self._ov_decode = None
+        self._spill_seq = 0         # checkpoint step counter (spill_dir)
+        self.n_evictions = 0
+        self.n_restores = 0
+        self.prefetch_hits = 0      # restores that landed fully overlapped
+        self.prefetch_late = 0      # restores a stall tick blocked on
+        self.stall_ticks = 0        # decode ticks with every candidate held
+        self.decode_ticks = 0       # decode ticks with any candidate at all
+        self.n_oversized = 0
+        self.n_spills = 0
 
     def _kernel_ctx(self):
         """Context for jitted dispatches: installs the fused-Pallas-decode
@@ -376,9 +439,12 @@ class ServingEngine:
     def _admissible(self, slot: int, req: Request):
         """Vet a request for ``slot``: (verdict, share) where verdict is
         True (admit), False (rejected), or _DEFER (transient page
-        exhaustion — retry after completions free pages) and ``share`` is
-        the (resident slot, rows) prefix-sharing plan (None, 0) when not
-        sharing.  No cache region is written either way."""
+        exhaustion — retry after completions free pages) or _OVERSIZED
+        (host-tier streaming; slot not consumed), and ``share`` is the
+        (resident slot, rows) prefix-sharing plan (None, 0) when not
+        sharing.  No REQUEST cache region is written either way (the
+        tiered engine may evict cold pages of other slots to the host
+        tier to clear room — byte-exact, addressing only)."""
         no_share = (None, 0)
         if not req.prompt:
             # an empty prompt has nothing to prefill (and length 0 is the
@@ -402,16 +468,22 @@ class ServingEngine:
         # row capacity.  The prompt no longer has to fit ONE chunk —
         # resumable prefill spreads it over several ticks.
         base = slot * self._slot_span
-        if span > self.sc.slot_rows:
-            self._fault_reject(req, "miss", base, span)
-            return False, no_share
         needed = self._claim_count(req)
         demand = (self._max_pages(req) if self.sc.reserve_decode_pages
                   else needed)
-        if demand > self.num_pages:
-            # can never fit, even with the whole pool free.
-            self._fault_reject(req, "capacity", base,
-                               demand * self.sc.page_size)
+        if span > self.sc.slot_rows or demand > self.num_pages:
+            # cannot fit a slot / the pool even with everything free.
+            # The TIERED engine streams such a context from the host
+            # tier instead of faulting (fp only; _vet_oversized); the
+            # single-tier engine keeps its capacity fault bit-for-bit.
+            verdict = self._vet_oversized(span)
+            if verdict is not False:
+                return verdict, no_share    # _OVERSIZED or _DEFER
+            if span > self.sc.slot_rows:
+                self._fault_reject(req, "miss", base, span)
+            else:
+                self._fault_reject(req, "capacity", base,
+                                   demand * self.sc.page_size)
             return False, no_share
         if self.sched.swapped:
             # preempted work drains first: fresh admissions would starve
@@ -419,10 +491,41 @@ class ServingEngine:
             return _DEFER, no_share
         share = (self.sched.shared_prefix(req.prompt, self.sc.page_size)
                  if self._can_share else no_share)
+        if self.tiered and share[0] is not None:
+            share = self._clamp_share(share)
         demand -= (share[1] // self.sc.page_size)   # shared pages are free
         if demand > self.alloc.reserved_free():
-            return _DEFER, no_share           # pages come back on completion
+            if not (self.tiered and self._evict_pages(
+                    demand - self.alloc.reserved_free(),
+                    protect=self._held_slots)):
+                return _DEFER, no_share   # pages come back on completion
         return True, share
+
+    def _vet_oversized(self, span: int):
+        """Can this span stream from the host tier?  _OVERSIZED (yes),
+        _DEFER (would fit but the tier is transiently busy), or False
+        (not servable — fall through to the capacity fault)."""
+        if not (self.tiered and self.sc.kv_format == "fp"):
+            return False
+        n_host = -(-span // self.sc.page_size)
+        if n_host > self.alloc.host_pages:
+            return False
+        if self.alloc.host_avail() < n_host:
+            return _DEFER
+        return _OVERSIZED
+
+    def _clamp_share(self, share):
+        """Prefix sharing refcount-maps the source slot's PHYSICAL device
+        pages; rows whose page was evicted to host cannot be shared.
+        Clamp the plan to the source's leading device-resident pages
+        (below one page it degrades to no sharing, like shared_prefix)."""
+        src, rows = share
+        ps = self.sc.page_size
+        run = 0
+        while run * ps < rows and self.alloc.page_table[src, run] >= 0:
+            run += 1
+        rows = min(rows, run * ps)
+        return (src, rows) if rows >= ps else (None, 0)
 
     def _claim_pages(self, slot: int, req: Request,
                      share) -> Tuple[int, List[Tuple[int, int]]]:
@@ -498,6 +601,11 @@ class ServingEngine:
                     if verdict is _DEFER:
                         queue.defer(req)
                         break
+                    if verdict is _OVERSIZED:
+                        # streams from the host tier: consumes no slot —
+                        # keep popping for this one.
+                        self._admit_oversized(req)
+                        continue
                     if verdict:
                         got = req
                 if got is None:
@@ -569,9 +677,33 @@ class ServingEngine:
         fresh admissions fill [0, chunk), resumed slots [done, done+chunk).
         Slots whose prompt completes this tick sample their first token."""
         work = self.sched.prefill_plan()
+        if self.tiered and work:
+            # residency gate: a resumed chunk attends the WHOLE cached
+            # history [0, off + len), so every page under it must be
+            # device-resident; held slots wait for their prefetch.
+            work = [(slot, off, toks) for slot, off, toks in work
+                    if not self.alloc.blocked_pages(
+                        slot,
+                        (off + len(toks) - 1) // self.sc.page_size + 1)]
         if not work:
             return
         self._prefilled_since_step = True
+        # trace invariance: fresh admissions (offset 0) and resumed chunks
+        # dispatch as SEPARATE waves.  The all-fresh trace (offsets=None,
+        # single-pass chunk kernel) and the resume trace (full-window
+        # gather) sum in different orders, so a mixed wave would let the
+        # schedule — admissions staggered by tiered page pressure — shift
+        # a fresh slot's logits by ~1e-7.  Splitting pins each chunk's
+        # trace to its own offset, keeping logits bitwise
+        # schedule-invariant (the tiered-vs-resident contract).
+        for group in ([w for w in work if w[1] == 0],
+                      [w for w in work if w[1] > 0]):
+            if group:
+                self._prefill_dispatch(group)
+
+    def _prefill_dispatch(self, work) -> None:
+        """Issue one batched prefill step for ``work`` (same-trace chunks)."""
+        self.sched.mark_dispatch([w[0] for w in work], self.tick_no)
         bsz, sp, ps = self.sc.max_batch, self.sc.max_prompt, self.sc.page_size
         if self.sc.paged:
             copies = []
@@ -649,6 +781,11 @@ class ServingEngine:
         self.completed.append(req)
         self.sched.release(slot)    # release slot
         if self.sc.paged:
+            # drop this slot's pending restore transfers BEFORE the
+            # allocator cancels their bookkeeping — a stale entry here
+            # would try to finish_restore a key the allocator forgot.
+            for key in [k for k in self._inflight_data if k[0] == slot]:
+                self._inflight_data.pop(key)
             self.alloc.release_slot(slot)   # refs return to the pool
 
     # -- device <-> host page movement --------------------------------------
@@ -689,12 +826,40 @@ class ServingEngine:
         release its pages, and park it on the swap queue."""
         meta = self.sched.slots[slot]
         req = meta.req
-        n_mapped = self.alloc.mapped_count(slot)
-        phys = np.asarray(
-            [int(p) for p in self.alloc.page_table[slot, :n_mapped]])
+        n_logical = self.alloc.logical_count(slot)
+        # in-flight restores cancel cleanly (the host slot keeps the
+        # bytes until finish_restore), so mid-transfer pages read as
+        # host-tier below; their pending device arrays are dropped.
+        for key in [k for k in self.alloc.inflight if k[0] == slot]:
+            self.alloc.cancel_restore(*key)
+            self._inflight_data.pop(key, None)
         flat, _ = jax.tree.flatten(self.cache)
-        pool_rows = [np.asarray(leaf[:, phys]) for leaf, pooled
-                     in zip(flat, self._pooled) if pooled]
+        if not self.tiered:
+            phys = np.asarray(
+                [int(p) for p in self.alloc.page_table[slot, :n_logical]])
+            pool_rows = [np.asarray(leaf[:, phys]) for leaf, pooled
+                         in zip(flat, self._pooled) if pooled]
+        else:
+            # assemble the snapshot from BOTH tiers, logical order: a
+            # device page gathers off the pool, an evicted page copies
+            # straight out of its pinned host buffer.
+            pool_leaves = [leaf for leaf, pooled
+                           in zip(flat, self._pooled) if pooled]
+            pool_rows = []
+            for li, leaf in enumerate(pool_leaves):
+                cols = []
+                for j in range(n_logical):
+                    phys = int(self.alloc.page_table[slot, j])
+                    if phys >= 0:
+                        cols.append(np.asarray(leaf[:, phys]))
+                    else:
+                        h = int(self.alloc.host_table[slot, j])
+                        assert h >= 0, "logical page in neither tier"
+                        cols.append(self._host_tier[li][h])
+                pool_rows.append(
+                    np.stack(cols, axis=1) if cols else
+                    np.zeros((leaf.shape[0], 0) + leaf.shape[2:],
+                             leaf.dtype))
         slot_rows = [np.asarray(leaf[:, slot]) for leaf, pooled
                      in zip(flat, self._pooled) if not pooled]
         nbytes = sum(a.nbytes for a in pool_rows) + \
@@ -703,13 +868,14 @@ class ServingEngine:
             req=req, prefill_done=meta.prefill_done, order=meta.order,
             pos=int(self.positions[slot]),
             last_token=int(self.last_token[slot]),
-            n_pages=n_mapped, n_max=self._max_pages(req),
+            n_pages=n_logical, n_max=self._max_pages(req),
             growth_due=int(self.alloc.growth_due[slot]),
             pool_rows=pool_rows, slot_rows=slot_rows, nbytes=nbytes))
         self.alloc.release_slot(slot)
         self.sched.release(slot)
         req.preempts += 1
         self.n_preemptions += 1
+        self._enforce_swap_budget()
 
     def _swap_in(self, slot: int, sw: SwappedRequest) -> None:
         """Re-admit a swapped request: fresh pages, exact bytes back."""
@@ -740,14 +906,26 @@ class ServingEngine:
         mapped pages to restore, plus one growth page of headroom so the
         next decode tick makes progress instead of re-thrashing."""
         while self.sched.swapped and self.sched.free_slots():
+            # hoist the slot choice: the old code re-queried
+            # free_slots() AFTER popping the queue, so anything between
+            # the vet and the placement that took a slot would silently
+            # re-pair (or IndexError on an empty list).  Choose first,
+            # then assert the pairing still holds at placement.
+            slot = self.sched.free_slots()[0]
             sw = self.sched.swapped[0]
             need = sw.n_pages + (sw.growth_due if
                                  self.sc.reserve_decode_pages
                                  else int(sw.n_pages < sw.n_max))
-            if need > self.alloc.reserved_free():
+            short = need - self.alloc.reserved_free()
+            if short > 0 and not (self.tiered and self._evict_pages(
+                    short, protect=self._held_slots)):
                 break
             self.sched.swapped.pop(0)
-            self._swap_in(self.sched.free_slots()[0], sw)
+            if sw.spill_step is not None:
+                self._unspill(sw)
+            assert self.sched.slots[slot] is None, \
+                "chosen free slot was taken before placement"
+            self._swap_in(slot, sw)
 
     # -- steady-state decode tick -------------------------------------------
     def _grow_pages(self, active: List[int]) -> None:
@@ -768,6 +946,15 @@ class ServingEngine:
             j = wr // ps
             if self.alloc.page_table[i, j] < 0:
                 grown = self.alloc.alloc(i, j)
+                if not grown and self.tiered and self._evict_pages(
+                        1, protect=self._held_slots | set(active)):
+                    # page-granular relief: a cold page moves to the host
+                    # tier instead of a whole request swapping out.  EVERY
+                    # slot dispatching this tick is protected — it already
+                    # passed the residency gate, so stealing one of its
+                    # window pages now would corrupt the very dispatch
+                    # that gate cleared.
+                    grown = self.alloc.alloc(i, j)
                 while not grown and self.sc.preemption == "swap":
                     v = self.sched.victim(exclude=i)
                     if v is None or not self._swappable(v):
@@ -783,12 +970,14 @@ class ServingEngine:
                         # NEVER the victim here.  (Not taken at uniform
                         # priority, so the legacy youngest-first behavior
                         # is bit-preserved.)
-                        if not self._swap_fits_budget(i):
+                        if not (self._swap_fits_budget(i)
+                                or self._spill_until_fits(i)):
                             self._deny_swap_budget(i)
                         elif self._swappable(i):
                             self._swap_out(i)
                         break
-                    if not self._swap_fits_budget(v):
+                    if not (self._swap_fits_budget(v)
+                            or self._spill_until_fits(v)):
                         self._deny_swap_budget(v)
                         break
                     self._swap_out(v)
@@ -830,8 +1019,8 @@ class ServingEngine:
         re-admittable later, so its mapped pages (plus a growth page if
         it is not fully grown) have to fit the pool."""
         meta = self.sched.slots[slot]
-        n_mapped = self.alloc.mapped_count(slot)
-        return n_mapped + int(n_mapped < self._max_pages(meta.req)) \
+        n_logical = self.alloc.logical_count(slot)
+        return n_logical + int(n_logical < self._max_pages(meta.req)) \
             <= self.num_pages
 
     def _swap_fits_budget(self, slot: int) -> bool:
@@ -840,7 +1029,7 @@ class ServingEngine:
         budget = self.sc.swap_budget_bytes
         if budget is None:
             return True
-        est = self.alloc.mapped_count(slot) * self._page_nbytes \
+        est = self.alloc.logical_count(slot) * self._page_nbytes \
             + self._slot_state_nbytes
         return self.sched.swap_bytes() + est <= budget
 
@@ -851,24 +1040,390 @@ class ServingEngine:
         the host holding unbounded memory."""
         self.iotlb.faults.append(FaultRecord(
             "swap_budget", slot * self._slot_span,
-            self.alloc.mapped_count(slot) * self.sc.page_size, True))
+            self.alloc.logical_count(slot) * self.sc.page_size, True))
         self.n_swap_budget_denials += 1
+
+    def _spill_until_fits(self, slot: int) -> bool:
+        """Whether durable spill lets the budget absorb swapping ``slot``:
+        with a ``spill_dir`` the answer is always yes — ``_swap_out``
+        re-establishes the cap afterwards by spilling parked snapshots
+        (coldest-first, the new arrival included) to disk, where the
+        byte budget does not apply.  False without a spill_dir, so the
+        budget-denial path is untouched when spilling is off."""
+        del slot    # any snapshot can spill; the cap bounds host bytes only
+        return self.sc.spill_dir is not None
+
+    def _enforce_swap_budget(self) -> None:
+        """Spill parked snapshots coldest-first — the queue TAIL
+        re-admits last — until host-resident swap bytes are back under
+        ``swap_budget_bytes``.  A spilled entry keeps only shape/dtype
+        skeletons in memory, so the cap is always reachable."""
+        budget = self.sc.swap_budget_bytes
+        if budget is None or self.sc.spill_dir is None:
+            return
+        k = len(self.sched.swapped) - 1
+        while self.sched.swap_bytes() > budget and k >= 0:
+            if self.sched.swapped[k].spill_step is None:
+                self._spill(self.sched.swapped[k])
+            k -= 1
+
+    def _spill(self, sw: SwappedRequest) -> None:
+        """Swap queue -> disk: checkpoint the snapshot atomically, keep
+        only shape/dtype skeletons in host memory (nbytes -> 0)."""
+        tree = {"pool": {f"p{i}": a for i, a in enumerate(sw.pool_rows)},
+                "slot": {f"s{i}": a for i, a in enumerate(sw.slot_rows)}}
+        checkpointing.save(self.sc.spill_dir, tree, step=self._spill_seq)
+        sw.spill_step = self._spill_seq
+        self._spill_seq += 1
+        sw.pool_rows = [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        for a in sw.pool_rows]
+        sw.slot_rows = [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        for a in sw.slot_rows]
+        sw.nbytes = 0
+        self.n_spills += 1
+
+    def _unspill(self, sw: SwappedRequest) -> None:
+        """Disk -> swap queue: re-materialize a spilled snapshot (the
+        skeletons carry shape/dtype, so nothing was allocated meanwhile)."""
+        tree, _ = checkpointing.restore(
+            self.sc.spill_dir,
+            {"pool": {f"p{i}": a for i, a in enumerate(sw.pool_rows)},
+             "slot": {f"s{i}": a for i, a in enumerate(sw.slot_rows)}},
+            step=sw.spill_step)
+        sw.pool_rows = [np.asarray(tree["pool"][f"p{i}"])
+                        for i in range(len(sw.pool_rows))]
+        sw.slot_rows = [np.asarray(tree["slot"][f"s{i}"])
+                        for i in range(len(sw.slot_rows))]
+        sw.nbytes = sum(a.nbytes for a in sw.pool_rows) + \
+            sum(a.nbytes for a in sw.slot_rows)
+        sw.spill_step = None
+
+    # -- tiered pool: page-granular offload + async prefetch -----------------
+    def _evict_pages(self, n: int, protect=frozenset()) -> bool:
+        """Move ``n`` cold pages device -> host (coldest slot first,
+        lowest page first — its longest-parked rows).  Returns True iff
+        all ``n`` moved.  ``protect`` slots are never victims: the
+        requester itself, plus every slot currently held mid-restore
+        (stealing their pages back would livelock the rotation).  Bytes
+        are copied into the pinned host buffer before the device page
+        can be reused (eviction and allocation never interleave here)."""
+        if not self.tiered or n <= 0:
+            return n <= 0
+        flat, _ = jax.tree.flatten(self.cache)
+        pool_leaves = [leaf for leaf, pooled
+                       in zip(flat, self._pooled) if pooled]
+        done = 0
+        for slot in self.sched.cold_order(exclude=protect):
+            for j in range(self.alloc.pages_per_slot):
+                if done >= n:
+                    return True
+                got = self.alloc.evict(slot, j)
+                if got is None:
+                    continue
+                phys, host = got
+                for li, leaf in enumerate(pool_leaves):
+                    self._host_tier[li][host] = np.asarray(leaf[:, phys])
+                self.n_evictions += 1
+                done += 1
+        return done >= n
+
+    def _issue_restore(self, slot: int, j: int, protect) -> bool:
+        """Start one async host -> device page restore: claim a target
+        page (evicting a cold one if the pool is full), then launch
+        ``jax.device_put`` of the pinned host bytes — the transfer
+        overlaps subsequent ticks' compute and lands in
+        ``_apply_restores``."""
+        if not self.alloc.free_pages and \
+                not self._evict_pages(1, protect=protect):
+            return False
+        got = self.alloc.begin_restore(slot, j)
+        if got is None:
+            return False
+        dst, host = got
+        # .copy(): on the CPU backend device_put can be ZERO-copy — the
+        # resulting array would alias the pinned host row, whose slot is
+        # freed at finish_restore and rewritten by a later eviction
+        # while the (async) apply may not have read it yet.
+        self._inflight_data[(slot, j)] = {
+            "dst": dst, "tick": self.tick_no, "waited": False,
+            "arrs": [jax.device_put(buf[host].copy())
+                     for buf in self._host_tier]}
+        self.n_restores += 1
+        return True
+
+    def _restore_ready(self, info) -> bool:
+        if self.sc.transfer_ticks is not None:    # modeled, deterministic
+            return self.tick_no - info["tick"] >= self.sc.transfer_ticks
+        return all(a.is_ready() for a in info["arrs"])
+
+    def _apply_restores(self, keys) -> None:
+        """Land finished restores: one batched ``.at[:, dst].set`` per
+        pool leaf, then the allocator maps the pages in."""
+        if not keys:
+            return
+        infos = [self._inflight_data.pop(k) for k in keys]
+        dst = jnp.asarray([info["dst"] for info in infos], jnp.int32)
+        per_leaf = [[info["arrs"][li] for info in infos]
+                    for li in range(len(self._host_tier))]
+        it = iter(per_leaf)
+        self._map_cache(
+            lambda leaf: leaf.at[:, dst].set(
+                jnp.stack([jnp.asarray(a, leaf.dtype) for a in next(it)],
+                          axis=1)),
+            lambda leaf: leaf)
+        for (slot, j), info in zip(keys, infos):
+            self.alloc.finish_restore(slot, j)
+            if info["waited"]:
+                self.prefetch_late += 1
+            else:
+                self.prefetch_hits += 1
+
+    def _tier_tick(self) -> None:
+        """Once per tick, BEFORE dispatch planning: land finished
+        restores and refresh the held set.  New restores are issued at
+        the END of the tick (``_tier_prefetch``) — never here — so a
+        slot whose window just completed always gets its dispatch in
+        before any eviction can steal the restored pages back (the
+        alternative ping-pongs: restore, steal, re-restore, forever)."""
+        self._apply_restores([k for k, info in self._inflight_data.items()
+                              if self._restore_ready(info)])
+        self._held_slots = {slot for slot, _ in self._tier_needs()}
+
+    def _tier_needs(self) -> List[Tuple[int, int]]:
+        """(slot, page) pairs off-device in some slot's next dispatch
+        window, coldest slot first, ascending page — the prefetch work
+        list.  A slot mid-prefill needs its NEXT chunk's rows (plus the
+        attended history); a prompt-complete slot needs [0, pos]."""
+        ps = self.sc.page_size
+        needs: List[Tuple[int, int]] = []
+        for slot in self.sched.cold_order():
+            meta = self.sched.slots[slot]
+            if meta.prefilled:
+                last_row = int(self.positions[slot])
+            else:
+                off = meta.prefill_done
+                ln = min(self.sched.chunk, len(meta.req.prompt) - off)
+                last_row = off + ln - 1
+            needs.extend((slot, j) for j in
+                         self.alloc.blocked_pages(slot, last_row // ps + 1))
+        return needs
+
+    def _tier_prefetch(self) -> None:
+        """END of tick: issue restores for blocked windows — coldest
+        slot first, ascending page — keeping up to the prefetch depth in
+        flight.  Every slot that could dispatch this tick already did
+        (and is now warm), so evicting a victim page here never undoes
+        un-dispatched work.  The COLDEST blocked slot may, as a last
+        resort, evict pages of other held slots (never vice versa), so
+        exactly one slot always accumulates its window monotonically and
+        the rotation cannot livelock."""
+        needs = self._tier_needs()
+        held = {slot for slot, _ in needs}
+        self._held_slots = held
+        depth = self._prefetch_depth()
+        coldest = needs[0][0] if needs else None
+        for slot, j in needs:
+            if len(self._inflight_data) >= depth:
+                break
+            if (slot, j) in self.alloc.inflight:
+                continue
+            ok = self._issue_restore(slot, j, protect=held | {slot})
+            if not ok and slot == coldest:
+                ok = self._issue_restore(slot, j, protect={slot})
+            if not ok:
+                break
+
+    def _blocked_decode(self, slots: List[int]) -> set:
+        """Decode candidates whose attention window [0, pos] has a page
+        off-device — they sit this tick out (their restores are already
+        in the prefetch queue)."""
+        ps = self.sc.page_size
+        return {i for i in slots if self.alloc.blocked_pages(
+            i, int(self.positions[i]) // ps + 1)}
+
+    def _await_restore(self) -> None:
+        """EVERY decode candidate is residency-blocked (the caller
+        counted the stall): block on the oldest in-flight restore and
+        land whatever is ready.  In modeled-latency mode the tick clock
+        itself advances the transfer, so only the accounting happens.
+        With nothing in flight at all, both tiers are saturated by held
+        slots — relieve pressure the pre-tier way (whole-request swap of
+        the coldest resident)."""
+        if not self._inflight_data:
+            self._tier_prefetch()   # issue what the pool allows right now
+        if self._inflight_data:
+            oldest = min(self._inflight_data,
+                         key=lambda k: self._inflight_data[k]["tick"])
+            info = self._inflight_data[oldest]
+            info["waited"] = True
+            if self.sc.transfer_ticks is None:
+                jax.block_until_ready(info["arrs"])
+            self._apply_restores(
+                [k for k, i in self._inflight_data.items()
+                 if self._restore_ready(i)])
+            return
+        if self.sc.preemption == "swap":
+            for v in self.sched.cold_order():
+                if self._swappable(v) and (self._swap_fits_budget(v)
+                                           or self._spill_until_fits(v)):
+                    self._swap_out(v)
+                    return
+
+    def _prefetch_depth(self) -> int:
+        """Restores to keep in flight: the pinned knob, or ("auto") the
+        pages one tick's worth of measured host->device bandwidth moves —
+        deep enough to hide the transfer behind compute, shallow enough
+        not to flood the pool with speculative pages."""
+        if self.sc.prefetch_depth != "auto":
+            return int(self.sc.prefetch_depth)
+        tick_s = self._tick_ema if self._tick_ema else 1e-2
+        pages = tick_s * self._h2d_bandwidth() / max(self._page_nbytes, 1)
+        return max(1, min(8, int(pages)))
+
+    def _h2d_bandwidth(self) -> float:
+        """Measured host->device bytes/s (lazy, cached).  The measurement
+        lives beside the figure it reproduces
+        (benchmarks/fig12_offload.measure_offload_bandwidth); src/ must
+        not hard-depend on benchmarks/, so a missing module falls back
+        to a conservative constant."""
+        if self._h2d_bps is None:
+            try:
+                from benchmarks.fig12_offload import \
+                    measure_offload_bandwidth
+                bw = measure_offload_bandwidth(
+                    nbytes=max(self._page_nbytes, 1 << 16), iters=2)
+                self._h2d_bps = float(bw["h2d_bytes_per_s"])
+            except Exception:
+                self._h2d_bps = _FALLBACK_H2D_BPS
+        return self._h2d_bps
+
+    def tier_stats(self) -> dict:
+        """Tiered-pool telemetry (all zeros on a single-tier engine)."""
+        hits, late = self.prefetch_hits, self.prefetch_late
+        return {
+            "n_evictions": self.n_evictions,
+            "n_restores": self.n_restores,
+            "prefetch_hits": hits,
+            "prefetch_late": late,
+            "prefetch_hit_rate": hits / max(hits + late, 1),
+            "decode_ticks": self.decode_ticks,
+            "stall_ticks": self.stall_ticks,
+            "stall_tick_frac": self.stall_ticks / max(self.decode_ticks, 1),
+            "n_oversized": self.n_oversized,
+            "n_spills": self.n_spills,
+            "host_pages_used": (self.alloc.host_pages_used()
+                                if self.sc.paged else 0),
+        }
+
+    # -- oversized contexts: host-resident cache, streamed dispatches --------
+    def _is_oversized(self, req: Request) -> bool:
+        return any(ov.req is req for ov in self._oversized)
+
+    def _admit_oversized(self, req: Request) -> None:
+        """Admit a context too large for the device pool: its contiguous
+        batch-1 cache lives in HOST memory (priced against the host tier
+        in pool pages) and every dispatch streams it through the device."""
+        ps = self.sc.page_size
+        span = len(req.prompt) + self.sc.max_new_tokens
+        n_host = -(-span // ps)
+        ok = self.alloc.reserve_host(n_host)
+        assert ok, "host capacity was vetted in _admissible"
+        cap = n_host * ps
+        cache = jax.tree.map(np.asarray, init_cache(self.cfg, 1, cap))
+        if self._ov_prefill is None:
+            self._ov_prefill = jax.jit(
+                make_chunked_prefill_resume_step(self.cfg))
+            self._ov_decode = jax.jit(make_decode_step(self.cfg))
+        self._oversized.append(_OversizedRequest(
+            req=req, cache=cache, cap=cap, n_host_pages=n_host))
+        self.n_oversized += 1
+
+    def _oversized_tick(self) -> None:
+        for ov in list(self._oversized):
+            self._ov_dispatch(ov)
+
+    def _ov_dispatch(self, ov: _OversizedRequest) -> None:
+        """One streamed dispatch for an oversized context: upload the
+        host cache, run one prefill chunk (or one decode token), pull
+        the cache back.  Same chunking, sampling, and termination rules
+        as the slotted path, so tokens match an all-resident engine."""
+        req = ov.req
+        cache_dev = jax.tree.map(jnp.asarray, ov.cache)
+        if ov.prefill_done < len(req.prompt):
+            sp = self.sc.max_prompt
+            off = ov.prefill_done
+            toks = req.prompt[off:off + sp]
+            toks_np = np.zeros((1, sp), np.int32)
+            toks_np[0, :len(toks)] = toks
+            logits, cache_dev = self._ov_prefill(
+                self.params, cache_dev, jnp.asarray(toks_np),
+                jnp.asarray([len(toks)], jnp.int32),
+                jnp.asarray([off], jnp.int32))
+            ov.cache = jax.tree.map(np.asarray, cache_dev)
+            ov.prefill_done = off + len(toks)
+            if ov.prefill_done < len(req.prompt):
+                return                  # intermediate chunk: no sample
+            tok = int(np.asarray(self._sample(logits))[0])
+            ov.pos = len(req.prompt)
+            self.sched.note_first_token(req, self.tick_no)
+        else:
+            logits, cache_dev = self._ov_decode(
+                self.params, cache_dev,
+                jnp.asarray([[ov.last_token]], jnp.int32),
+                jnp.asarray([ov.pos], jnp.int32))
+            ov.cache = jax.tree.map(np.asarray, cache_dev)
+            ov.pos += 1
+            tok = int(np.asarray(self._sample(logits))[0])
+        ov.last_token = tok
+        req.out_tokens.append(tok)
+        if self.sc.record_logits:
+            req.logits.append(np.asarray(logits)[0].copy())
+        if tok == self.sc.eos_id or \
+                len(req.out_tokens) >= self.sc.max_new_tokens:
+            req.done = True
+            self.sched.note_terminal(req)
+            self.completed.append(req)
+            self.alloc.release_host(ov.n_host_pages)
+            self._oversized.remove(ov)
 
     def step(self):
         """One engine tick: advance any unfinished prefill by one chunk
         (unless this tick's admission wave already did), then one decode
         step for every prompt-complete slot — at most ONE prefill and ONE
         decode dispatch per tick."""
+        t0 = time.perf_counter()
+        if self.tiered:
+            self._tier_tick()
         if self.sc.paged and self.sched.has_prefill_work() \
                 and not self._prefilled_since_step:
             self._prefill_tick()
         self._prefilled_since_step = False
         if self.sc.paged:
-            self._grow_pages(self.sched.decode_slots())
-        active = self.sched.decode_slots()
+            runnable = self.sched.decode_slots()
+            if self.tiered and runnable:
+                # residency gate: a held slot sits the tick out while
+                # its prefetch lands (overlap, not a stall); only when
+                # EVERY candidate is held has the tick truly stalled on
+                # the transfer tier.
+                self.decode_ticks += 1
+                blocked = self._blocked_decode(runnable)
+                if len(blocked) == len(runnable):
+                    self.stall_ticks += 1
+                    self._await_restore()
+                    blocked = self._blocked_decode(
+                        self.sched.decode_slots())
+                runnable = [i for i in runnable if i not in blocked]
+            self._grow_pages(runnable)
+            runnable = set(runnable)
+            active = [i for i in self.sched.decode_slots()
+                      if i in runnable]   # growth may have swapped slots
+        else:
+            active = self.sched.decode_slots()
         self.active_ticks += len(active)
         if not active:
+            self._end_tick(t0)
             return
+        self.sched.mark_dispatch(active, self.tick_no)
         # host-side staging: ONE mask/position build + one transfer per
         # tick, not one .at[i].set dispatch per active slot.
         mask_np = np.zeros((self.sc.max_batch,), bool)
@@ -898,6 +1453,21 @@ class ServingEngine:
             if tok == self.sc.eos_id or \
                     len(req.out_tokens) >= self.sc.max_new_tokens:
                 self._finish(i)
+        self._end_tick(t0)
+
+    def _end_tick(self, t0: float) -> None:
+        """Per-tick epilogue: oversized streams advance (one dispatch
+        each, outside the slot budget), the prefetcher issues restores
+        for next tick's blocked windows (AFTER dispatches, so evictions
+        never steal pages a slot restored but had not yet used), and the
+        tick-time EMA feeding the auto prefetch depth updates."""
+        if self._oversized:
+            self._oversized_tick()
+        if self.tiered:
+            self._tier_prefetch()
+            dt = time.perf_counter() - t0
+            self._tick_ema = (dt if self._tick_ema is None
+                              else 0.9 * self._tick_ema + 0.1 * dt)
 
     # -- session API ---------------------------------------------------------
     def submit(self, req: Request) -> RequestHandle:
@@ -931,7 +1501,7 @@ class ServingEngine:
         the engine: subsequent ``submit()``/``run()`` raise.  Returns the
         requests finished during this call, in completion order."""
         start = len(self.completed)
-        while self.sched.has_work():
+        while self.sched.has_work() or self._oversized:
             self.tick()
         self._closed = True
         return self.completed[start:]
@@ -945,6 +1515,6 @@ class ServingEngine:
         start = len(self.completed)
         for req in requests:
             self.submit(req)
-        while self.sched.has_work():
+        while self.sched.has_work() or self._oversized:
             self.tick()
         return self.completed[start:]

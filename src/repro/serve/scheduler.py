@@ -46,6 +46,12 @@ class SlotMeta:
     req: Request
     prefill_done: int           # prompt rows materialized so far
     order: int                  # admission sequence number (larger=younger)
+    last_dispatch_tick: int = 0
+    # Engine tick this slot last took part in a prefill/decode dispatch
+    # — the COLDNESS signal of the tiered pool: eviction takes pages
+    # from the least-recently-dispatched slots first (parked sessions
+    # before anything actively decoding), and prefetch serves the
+    # coldest blocked slot first so nothing starves.
 
     @property
     def prefilled(self) -> bool:
@@ -70,6 +76,12 @@ class SwappedRequest:
     pool_rows: List[Any]        # per pooled cache leaf: (n_pages, ps, ...)
     slot_rows: List[Any]        # per slot cache leaf: that slot's row
     nbytes: int = 0             # host bytes this snapshot occupies
+    spill_step: Optional[int] = None
+    # When the swap budget forced this snapshot to DURABLE storage
+    # (ServeConfig.spill_dir), the checkpoint step holding its
+    # pool_rows/slot_rows; the host lists are emptied (nbytes -> 0) and
+    # swap-in restores them from disk first.  None = resident in host
+    # memory (the pre-spill behavior).
 
 
 class Scheduler:
@@ -209,6 +221,27 @@ class Scheduler:
     def decode_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots)
                 if s is not None and s.prefilled]
+
+    # -- tiered-pool coldness policy ----------------------------------------
+    def mark_dispatch(self, slots: List[int], tick_no: int) -> None:
+        """Stamp the slots that took part in this tick's dispatch —
+        keeps ``last_dispatch_tick`` the LRU signal eviction and
+        prefetch order both read."""
+        for i in slots:
+            meta = self.slots[i]
+            if meta is not None:
+                meta.last_dispatch_tick = tick_no
+
+    def cold_order(self, exclude=()) -> List[int]:
+        """Resident slots coldest-first: least-recently-dispatched, then
+        oldest admission — parked sessions lead.  Eviction walks this
+        order forward (take pages from the coldest), prefetch serves
+        blocked slots in this order (the coldest blocked slot gets its
+        window restored first, so rotation is fair and no slot starves)."""
+        out = [(meta.last_dispatch_tick, meta.order, i)
+               for i, meta in enumerate(self.slots)
+               if meta is not None and i not in exclude]
+        return [i for _, _, i in sorted(out)]
 
     # -- preemption policy --------------------------------------------------
     def victim(self, exclude: int) -> Optional[int]:

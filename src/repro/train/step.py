@@ -163,6 +163,27 @@ def make_chunked_prefill_step(cfg: ArchConfig):
     return prefill
 
 
+def make_chunked_prefill_resume_step(cfg: ArchConfig):
+    """RESUMABLE chunked prefill into a CONTIGUOUS cache.
+
+    The contiguous twin of :func:`make_paged_chunked_prefill_step`:
+    ``offsets`` is the (B,) start row of each slot's chunk, so a prompt
+    longer than one chunk fills across several dispatches (rows
+    [offset, offset + length), attending the cached history [0, offset)
+    too).  The tiered engine's OVERSIZED-context path uses this to
+    stream a host-resident contiguous cache through the device chunk by
+    chunk.  Returns each slot's last-valid-token logits, like the other
+    prefill builders."""
+    def prefill(params, cache, tokens, lengths, offsets):
+        logits, cache, _ = forward(params, tokens, cfg, cache=cache,
+                                   mode="chunk", pos=lengths,
+                                   offset=offsets)
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+        return last[:, 0, :], cache
+    return prefill
+
+
 def make_paged_decode_step(cfg: ArchConfig):
     """Decode against a PAGED cache (models.init_paged_cache): the extra
     ``pages`` (B, P) argument is the engine's per-slot page table mapping

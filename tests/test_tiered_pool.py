@@ -1,0 +1,387 @@
+"""Tiered page pool: allocator state machine + engine bit-identity.
+
+Three layers of coverage for the two-tier (device + pinned host) pool:
+
+  * allocator walker — random evict / restore / touch / release
+    sequences against ``PageAllocator`` asserting, after EVERY step,
+    that no physical or host page has two owners, that per-tier byte
+    accounting balances exactly (device free + mapped + in-flight ==
+    num_pages; host free + occupied == host_pages), and that an
+    in-flight page can never be evicted.  A seeded walker always runs;
+    a hypothesis-driven twin explores adversarial sequences when the
+    library is installed (CI: requirements-dev.txt).
+  * engine bit-identity — the tiered engine (pool pressure forcing
+    evict/prefetch cycles, modeled transfer latency for determinism)
+    must emit tokens AND per-token logits BIT-IDENTICAL to an
+    all-resident engine: GQA and MLA, fp and int4 page formats,
+    multi-chunk resumable prefill and COW prefix sharing, at 1 and 8
+    pool shards (subprocess, lax and Pallas decode paths).
+  * capabilities — an OVERSIZED context (>= 4x the device pool)
+    completes host-side where the single-tier baseline rejects it, and
+    the swap queue spills to durable storage through the checkpoint
+    layer when ``swap_budget_bytes`` is exceeded.
+"""
+import importlib.util
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, forward, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.allocator import PageAllocator
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+GQA = ArchConfig(name="tp", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+MLA = ArchConfig(name="tp_mla", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                 kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                 v_head_dim=16, decode_margin=32,
+                 pattern=(("scan", "mla_mlp", 2),), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# allocator state machine
+# ---------------------------------------------------------------------------
+
+def _check_invariants(al: PageAllocator):
+    """The two-tier ownership and accounting invariants."""
+    num_pages, host_pages = al.num_pages, al.host_pages
+    free = al.free_pages
+    mapped = [int(p) for row in al.page_table for p in row if p >= 0]
+    inflight_dst = [d for d, _h in al.inflight.values()]
+    # device ownership is disjoint: a phys page is free, mapped (shared
+    # pages appear once per mapping but own ONE physical page), or an
+    # in-flight restore target — never two of these at once.
+    assert not set(free) & set(mapped), "free page is also mapped"
+    assert not set(free) & set(inflight_dst), "free page is in flight"
+    assert not set(mapped) & set(inflight_dst), \
+        "mapped page claimed by a restore"
+    # device byte accounting balances exactly.
+    assert len(free) + len(set(mapped)) + len(inflight_dst) == num_pages
+    # refcounts price every mapping.
+    for p in set(mapped):
+        assert int(al.refcount[p]) == mapped.count(p), \
+            f"refcount mismatch on phys {p}"
+    # host ownership is disjoint + balanced: an in-flight page's host
+    # slot stays occupied (the bytes survive a cancelled transfer).
+    hosts = [int(h) for row in al.host_table for h in row if h >= 0]
+    assert len(hosts) == len(set(hosts)), "host slot has two owners"
+    assert not set(hosts) & set(al._host_free), \
+        "occupied host slot is also free"
+    assert len(hosts) + len(al._host_free) == host_pages
+    assert 0 <= al.host_reserved <= len(al._host_free)
+    for (s, j), (_d, h) in al.inflight.items():
+        assert int(al.host_table[s, j]) == h, \
+            "in-flight source host slot not owned by its page"
+
+
+def _walk(al: PageAllocator, rng, steps: int = 400):
+    """Random evict/prefetch/touch walk; invariants hold at every step."""
+    B, P = al.page_table.shape
+    for _ in range(steps):
+        op = rng.integers(0, 7)
+        slot = int(rng.integers(0, B))
+        j = int(rng.integers(0, P))
+        if op == 0:
+            # growth allocates only never-materialized pages (the
+            # residency gate keeps host/in-flight pages out of alloc).
+            if al.page_table[slot, j] < 0 and al.host_table[slot, j] < 0 \
+                    and (slot, j) not in al.inflight:
+                al.alloc(slot, j)
+        elif op == 1:
+            was_inflight = (slot, j) in al.inflight
+            got = al.evict(slot, j)
+            assert not (was_inflight and got is not None), \
+                "an in-flight page must never be evicted"
+        elif op == 2:
+            al.begin_restore(slot, j)
+        elif op == 3 and al.inflight:
+            k = list(al.inflight)[int(rng.integers(0, len(al.inflight)))]
+            al.finish_restore(*k)
+        elif op == 4 and al.inflight:
+            k = list(al.inflight)[int(rng.integers(0, len(al.inflight)))]
+            al.cancel_restore(*k)
+        elif op == 5:
+            al.release_slot(slot)
+        elif op == 6:
+            n = int(rng.integers(1, 4))
+            if al.reserve_host(n):
+                al.release_host(n)
+        _check_invariants(al)
+
+
+def _fresh_alloc(num_pages=12, host_pages=10, max_batch=4, pages_per_slot=6):
+    return PageAllocator(num_pages, 4, max_batch, pages_per_slot,
+                         host_pages=host_pages)
+
+
+def test_allocator_walker_random():
+    for seed in range(8):
+        _walk(_fresh_alloc(), np.random.default_rng(seed))
+
+
+def test_allocator_walker_tight_tiers():
+    # host tier smaller than the device pool: evictions run dry, restores
+    # race the free list — the saturation corners.
+    for seed in range(8):
+        _walk(_fresh_alloc(num_pages=6, host_pages=3),
+              np.random.default_rng(100 + seed))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_allocator_walker_hypothesis():
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 3),
+                              st.integers(0, 5)),
+                    min_size=1, max_size=120),
+           st.integers(0, 2 ** 31 - 1))
+    def run(ops, seed):
+        al = _fresh_alloc(num_pages=8, host_pages=5)
+        rng = np.random.default_rng(seed)
+        for op, slot, j in ops:
+            if op == 0:
+                if al.page_table[slot, j] < 0 \
+                        and al.host_table[slot, j] < 0 \
+                        and (slot, j) not in al.inflight:
+                    al.alloc(slot, j)
+            elif op == 1:
+                was = (slot, j) in al.inflight
+                got = al.evict(slot, j)
+                assert not (was and got is not None)
+            elif op == 2:
+                al.begin_restore(slot, j)
+            elif op == 3 and al.inflight:
+                k = list(al.inflight)[int(rng.integers(0, len(al.inflight)))]
+                al.finish_restore(*k)
+            elif op == 4 and al.inflight:
+                k = list(al.inflight)[int(rng.integers(0, len(al.inflight)))]
+                al.cancel_restore(*k)
+            elif op == 5:
+                al.release_slot(slot)
+            elif op == 6:
+                if al.reserve_host(1 + j):
+                    al.release_host(1 + j)
+            _check_invariants(al)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# engine bit-identity through evict/prefetch cycles
+# ---------------------------------------------------------------------------
+
+def _mk_prompts(vocab: int):
+    """Multi-chunk prompts (> the 8-token chunk budget) plus a pair
+    sharing a page-aligned 8-row prefix (COW prefix sharing engages)."""
+    rng = np.random.default_rng(3)
+    p = [rng.integers(1, vocab - 1, size=n).tolist() for n in (5, 11, 19)]
+    shared = rng.integers(1, vocab - 1, size=8).tolist()
+    p.append(shared + rng.integers(1, vocab - 1, size=3).tolist())
+    p.append(shared + rng.integers(1, vocab - 1, size=5).tolist())
+    return p
+
+
+def _serve(cfg, sc, prompts):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, sc)
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    toks = {r.rid: tuple(r.out_tokens) for r in out}
+    lgts = {r.rid: np.stack(r.logits) for r in out if r.logits}
+    return toks, lgts, eng
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA], ids=["gqa", "mla"])
+@pytest.mark.parametrize("kvf", ["fp", "int4"])
+def test_engine_bit_identity_tiered_vs_resident(cfg, kvf):
+    prompts = _mk_prompts(cfg.vocab_size)
+    base = dict(max_batch=4, max_prompt=8, max_new_tokens=6, page_size=4,
+                max_seq=32, paged=True, kv_format=kvf, record_logits=True)
+    ref_t, ref_l, _ = _serve(cfg, ServeConfig(**base, num_pages=40), prompts)
+    # device pool far below the working set -> every window only
+    # completes through evict/prefetch cycles; modeled transfer latency
+    # makes the stall/overlap schedule deterministic.
+    toks, lgts, eng = _serve(cfg, ServeConfig(
+        **base, num_pages=8, host_pool_pages=40,
+        transfer_ticks=1, prefetch_depth=2), prompts)
+    assert eng.tier_stats()["n_evictions"] > 0, \
+        "pool pressure must actually exercise the tier"
+    assert toks == ref_t
+    assert set(lgts) == set(ref_l)
+    for rid in ref_l:
+        np.testing.assert_array_equal(lgts[rid], ref_l[rid])
+
+
+def test_tiered_matches_teacher_forced_oracle():
+    prompts = _mk_prompts(GQA.vocab_size)
+    params = init_params(GQA, jax.random.PRNGKey(0))
+    toks, _, _ = _serve(GQA, ServeConfig(
+        max_batch=4, max_prompt=8, max_new_tokens=4, page_size=4,
+        max_seq=32, num_pages=8, host_pool_pages=40, transfer_ticks=1,
+        prefetch_depth=2), prompts)
+    for rid, p in enumerate(prompts):
+        seq = list(p)
+        for _ in range(4):
+            lg, _, _ = forward(params, jnp.asarray(seq, jnp.int32)[None, :],
+                               GQA, mode="train")
+            seq.append(int(jnp.argmax(lg[0, -1])))
+        assert list(toks[rid]) == seq[len(p):], f"rid {rid}"
+
+
+def test_tiered_real_async_transfers():
+    # transfer_ticks=None: restores are REAL jax.device_put transfers,
+    # landed on device readiness — still bit-identical, only the
+    # stall/hit accounting loses determinism.
+    prompts = _mk_prompts(GQA.vocab_size)
+    base = dict(max_batch=4, max_prompt=8, max_new_tokens=6, page_size=4,
+                max_seq=32, record_logits=True)
+    ref_t, ref_l, _ = _serve(GQA, ServeConfig(**base, num_pages=40), prompts)
+    toks, lgts, eng = _serve(GQA, ServeConfig(
+        **base, num_pages=8, host_pool_pages=40), prompts)
+    assert eng.tier_stats()["n_evictions"] > 0
+    assert toks == ref_t
+    for rid in ref_l:
+        np.testing.assert_array_equal(lgts[rid], ref_l[rid])
+
+
+# ---------------------------------------------------------------------------
+# sharded legs: 1 vs 8 pool shards, lax vs Pallas decode (subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARD_BODY = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_test_mesh
+
+CFG = ArchConfig(name='tp', family='dense', n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+params = init_params(CFG, jax.random.PRNGKey(0))
+rng = np.random.default_rng(3)
+prompts = [rng.integers(1, 99, size=n).tolist() for n in (5, 11, 19, 9)]
+
+def serve(mesh_shape, tiered, pallas):
+    mesh = make_test_mesh(mesh_shape, ('data', 'model'))
+    kw = dict(max_batch=4, max_prompt=8, max_new_tokens=6, page_size=4,
+              max_seq=32, record_logits=True, use_pallas_decode=pallas)
+    if tiered:
+        kw.update(num_pages=8, host_pool_pages=40, transfer_ticks=1,
+                  prefetch_depth=2)
+    else:
+        kw.update(num_pages=40)
+    with use_rules(mesh, 'fsdp_sp'):
+        eng = ServingEngine(CFG, params, ServeConfig(**kw))
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    toks = {r.rid: tuple(r.out_tokens) for r in out}
+    lgts = {r.rid: np.stack(r.logits) for r in out}
+    return toks, lgts, eng
+
+# each tiered leg is compared against an ALL-RESIDENT engine with the
+# SAME mesh shape and decode path: lax vs Pallas (and 1- vs 8-way
+# flash-decoding combines) sum in different orders, so the bitwise
+# contract is per-path — tiering must be invisible, not normalizing.
+for shape, shards in (((8, 1), 1), ((1, 8), 8)):
+    for pallas in (False, True):
+        ref_t, ref_l, _ = serve(shape, tiered=False, pallas=pallas)
+        toks, lgts, eng = serve(shape, tiered=True, pallas=pallas)
+        assert eng.pool_shards == shards
+        assert eng.tier_stats()['n_evictions'] > 0, (shards, pallas)
+        assert toks == ref_t, (shards, pallas, toks, ref_t)
+        for rid in ref_l:
+            np.testing.assert_array_equal(lgts[rid], ref_l[rid])
+print('SUBPROC_OK')
+"""
+
+
+def test_tiered_sharded_bit_identity_8dev():
+    code = ("import os\n"
+            'os.environ["XLA_FLAGS"] = '
+            '"--xla_force_host_platform_device_count=8"\n'
+            + textwrap.dedent(_SHARD_BODY))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0 and "SUBPROC_OK" in r.stdout, \
+        r.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# oversized contexts + durable spill
+# ---------------------------------------------------------------------------
+
+def test_oversized_context_completes_where_baseline_rejects():
+    # device pool: 8 pages x 4 rows = 32 rows.  Context: 128 rows = 4x.
+    rng = np.random.default_rng(9)
+    max_new = 4
+    big = rng.integers(1, 99, size=128 - max_new).tolist()
+    base = dict(max_batch=2, max_prompt=8, max_new_tokens=max_new,
+                page_size=4, num_pages=8, max_seq=32)
+    params = init_params(GQA, jax.random.PRNGKey(0))
+
+    eng_b = ServingEngine(GQA, params, ServeConfig(
+        strict_iotlb=False, **base))
+    [rej] = eng_b.run([Request(0, list(big))])
+    assert rej.failed and not rej.out_tokens
+
+    eng = ServingEngine(GQA, params, ServeConfig(
+        host_pool_pages=32, **base))
+    [done] = eng.run([Request(0, list(big))])
+    assert done.done and not done.failed
+    assert len(done.out_tokens) == max_new
+    assert eng.tier_stats()["n_oversized"] == 1
+    # greedy tokens agree with the teacher-forced oracle (the streamed
+    # host-resident path is a different dispatch shape than the slotted
+    # engine, so the contract here is argmax agreement, not bitwise).
+    seq = list(big)
+    for _ in range(max_new):
+        lg, _, _ = forward(params, jnp.asarray(seq, jnp.int32)[None, :],
+                           GQA, mode="train")
+        seq.append(int(jnp.argmax(lg[0, -1])))
+    assert list(done.out_tokens) == seq[len(big):]
+
+
+def test_swap_spill_to_durable_storage(tmp_path):
+    # Overcommitted pool + swap preemption + a budget far below one
+    # swapped request's bytes: every enqueued victim must spill through
+    # the checkpoint layer, and re-admission restores it bit-for-bit.
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, 99, size=n).tolist()
+               for n in (9, 13, 11, 10)]
+    base = dict(max_batch=3, max_prompt=16, max_new_tokens=8, page_size=4,
+                max_seq=24, num_pages=9, reserve_decode_pages=False,
+                preemption="swap")
+    ref_t, _, _ = _serve(GQA, ServeConfig(
+        **dict(base, num_pages=40, reserve_decode_pages=True)), prompts)
+    toks, _, eng = _serve(GQA, ServeConfig(
+        **base, swap_budget_bytes=1, spill_dir=str(tmp_path)), prompts)
+    assert eng.n_preemptions > 0, "overcommit must actually preempt"
+    assert eng.tier_stats()["n_spills"] > 0, \
+        "budget of 1 byte must force every swap to spill"
+    assert eng.n_swap_budget_denials == 0, \
+        "spilling replaces denial while the spill dir has room"
+    assert toks == ref_t
+
+
+# ---------------------------------------------------------------------------
+# bandwidth probe
+# ---------------------------------------------------------------------------
+
+def test_measure_offload_bandwidth():
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parent.parent))
+    from benchmarks.fig12_offload import measure_offload_bandwidth
+    bw = measure_offload_bandwidth(nbytes=1 << 14, iters=2)
+    assert set(bw) == {"h2d_bytes_per_s", "d2h_bytes_per_s", "latency_s"}
+    assert all(v > 0 for v in bw.values())
