@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke test-sharded test-quant-pool test-tiered bench-smoke bench-serve bench serve-demo
+.PHONY: test smoke test-sharded test-quant-pool test-tiered test-router bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,6 +37,15 @@ test-quant-pool:
 # runs on a plain single-device host, mirroring test-sharded).
 test-tiered:
 	$(PY) -m pytest -x -q tests/test_tiered_pool.py
+
+# replica-router leg (CI): the wire format (round-trip exactness +
+# strict rejection, hypothesis twins when installed) and the router
+# tier — 1-replica bit-identity vs a bare engine, routing policies,
+# cross-replica migration bit-identity, and the multi-replica x
+# 8-device sharded leg (that test spawns its own subprocess with
+# XLA_FLAGS set, so this also runs on a plain single-device host).
+test-router:
+	$(PY) -m pytest -x -q tests/test_router.py tests/test_wire_properties.py
 
 # tiny end-to-end pass of every serving-benchmark section (CI): asserts
 # the benchmark itself still runs, so it cannot silently rot.

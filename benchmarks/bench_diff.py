@@ -14,6 +14,9 @@ direction:
   * tiered-pool transfer stalls / overlap   — ``tiered.stall_tick_frac``
     (lower), ``tiered.prefetch_hit_rate`` and ``tiered.tok_per_s``
     (higher)
+  * replica-router placement + throughput   — ``router.affinity.
+    prefix_hit_rate`` and aggregate tokens/s per routing policy and at
+    1 vs N replicas (all higher)
 
 Exit status is nonzero when any metric regresses by more than
 ``--threshold`` percent (default 10), so the CI job surfaces perf
@@ -48,6 +51,13 @@ _TIMED = [
     (("tiered", "stall_tick_frac"), "lower"),
     (("tiered", "prefetch_hit_rate"), "higher"),
     (("tiered", "tok_per_s"), "higher"),
+    (("router", "affinity", "prefix_hit_rate"), "higher"),
+    (("router", "affinity", "tok_per_tick"), "higher"),
+    (("router", "random", "tok_per_tick"), "higher"),
+    (("router", "affinity", "tok_per_s"), "higher"),
+    (("router", "random", "tok_per_s"), "higher"),
+    (("router", "tok_per_s_1replica"), "higher"),
+    (("router", "tok_per_s_fleet"), "higher"),
 ]
 
 # informative context, printed when present in both, never thresholded.
@@ -60,6 +70,10 @@ _CONTEXT = [
     ("tiered", "context_over_pool"),
     ("tiered", "prefetch_depth_auto"),
     ("tiered", "n_evictions"),
+    ("router", "replicas"),
+    ("router", "affinity", "shared_admissions"),
+    ("router", "random", "shared_admissions"),
+    ("router", "migrations_saturated"),
 ]
 
 

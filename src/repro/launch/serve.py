@@ -7,6 +7,11 @@ request TTFT (in engine ticks) plus the scheduler's deadline ledger.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce \
       --quant w4a16 --requests 6
+
+``--replicas N`` (N > 1) serves the same traffic through the replica
+router instead of a bare engine: N engine replicas behind the wire
+boundary, prefix-affinity placement, cross-replica migration — the
+session surface (submit/stream/drain) is unchanged.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ from repro.configs import all_archs, get_config, reduce_config
 from repro.core.quant import QuantConfig
 from repro.models import init_params
 from repro.models.model import quantize_for_serving
-from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve import (Request, Router, RouterConfig, ServeConfig,
+                         ServingEngine)
 
 
 def main():
@@ -37,6 +43,13 @@ def main():
     ap.add_argument("--ttft-deadline", type=int, default=8,
                     help="deadline (engine ticks) stamped on the "
                     "high-priority half of the requests")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas; > 1 serves through the "
+                    "replica router (prefix-affinity placement, "
+                    "wire-format boundary, cross-replica migration)")
+    ap.add_argument("--routing", default="affinity",
+                    choices=["affinity", "least_loaded", "random"],
+                    help="router placement policy (--replicas > 1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -71,35 +84,56 @@ def main():
                                                    cfg.vocab_size)],
             priority=prio, ttft_deadline=deadline))
     kv_format = "fp" if args.kv_bits == 0 else f"int{args.kv_bits}"
-    eng = ServingEngine(cfg, params, ServeConfig(
-        max_batch=args.max_batch, max_prompt=32,
-        max_new_tokens=args.max_new_tokens, kv_format=kv_format))
+    sc = ServeConfig(max_batch=args.max_batch, max_prompt=32,
+                     max_new_tokens=args.max_new_tokens,
+                     kv_format=kv_format)
+    if args.replicas > 1:
+        sess = Router(cfg, params, sc,
+                      RouterConfig(replicas=args.replicas,
+                                   routing=args.routing))
+        first_eng = sess.replicas[0].eng
+        print(f"router: {args.replicas} replicas, "
+              f"routing={args.routing}")
+    else:
+        sess = first_eng = ServingEngine(cfg, params, sc)
     if kv_format != "fp":
         print(f"KV pool pages stored as {kv_format} "
-              f"({eng.pool_bytes_per_shard() / 1e3:.1f}KB pool/shard)")
-    handles = [eng.submit(r) for r in reqs]
+              f"({first_eng.pool_bytes_per_shard() / 1e3:.1f}KB "
+              f"pool/shard{'/replica' if args.replicas > 1 else ''})")
+    handles = [sess.submit(r) for r in reqs]
 
     # stream the first high-priority request token by token (this drives
-    # engine ticks, so everything else keeps decoding underneath it)...
+    # engine/router ticks, so everything else keeps decoding beneath)...
     demo = next((h for h in handles if h.req.priority > 0), handles[0])
     print(f"streaming req {demo.req.rid}: ", end="", flush=True)
     for tok in demo.stream():
         print(tok, end=" ", flush=True)
     print()
-    # ...then finish the rest and close the engine.
-    eng.drain()
+    # ...then finish the rest and close the session.
+    sess.drain()
 
     for h in handles:
         r = h.req
         tag = f" prio={r.priority}"
+        if args.replicas > 1:
+            tag += f" replica={h.replica}"
         if r.ttft_deadline is not None:
             tag += (f" ttft={r.ttft_ticks}t/"
                     f"{r.ttft_deadline}t "
                     f"{'MISS' if r.deadline_miss else 'hit'}")
         print(f"req {r.rid}: {len(r.prompt)} prompt -> {r.out_tokens}"
               f"  [{h.status}{tag}]")
-    print(f"deadline ledger: {eng.sched.deadline_hits} hit / "
-          f"{eng.sched.deadline_misses} miss")
+    if args.replicas > 1:
+        st = sess.stats()
+        hits = sum(s["deadline_hits"] for s in st["per_replica"])
+        misses = sum(s["deadline_misses"] for s in st["per_replica"])
+        print(f"deadline ledger: {hits} hit / {misses} miss")
+        print(f"router: assigned={st['assigned']} "
+              f"prefix_hits={st['n_prefix_hits']}/{st['n_routed']} "
+              f"migrations={st['n_migrations']}")
+    else:
+        print(f"deadline ledger: {sess.sched.deadline_hits} hit / "
+              f"{sess.sched.deadline_misses} miss")
 
 
 if __name__ == "__main__":

@@ -119,9 +119,14 @@ pool — the two-tier contract:
     protects the tick's HELD set: slots whose next dispatch window is
     being prefetched plus every slot that passed this tick's residency
     gate — a gate-cleared dispatch can never lose a window page to a
-    colder slot's restore.  Eviction copies the page's bytes (all
-    pooled leaves — quantized rows and scales alike) into the host
-    tier BEFORE the physical page is freed.
+    colder slot's restore.  Eviction snapshots the page's bytes
+    (all pooled leaves — quantized rows and scales alike) as
+    independent device slices and issues the device->host copy ASYNC,
+    mirroring the restore path: the physical page is reusable
+    immediately and the copy overlaps compute, while any reader of the
+    host bytes (a restore of that host slot, a swap-out snapshot)
+    forces the landing first — blocking only when the copy is
+    genuinely unfinished (``evict_stalls`` counts those).
   * WHAT GATES A DISPATCH: residency of the slot's ATTENTION WINDOW.
     A resumed prefill chunk attends [0, off + chunk_len); a decode
     tick attends [0, pos] — ``alloc.blocked_pages`` over exactly those
@@ -141,6 +146,44 @@ pool — the two-tier contract:
     oracle), and ``swap_budget_bytes`` overflow spills parked
     snapshots through the checkpoint layer (``spill_dir``) instead of
     denying swaps.
+
+Above the single engine sits the REPLICA TIER — two modules, same
+one-way layering (wire depends on config only; router depends on both
+plus the engine):
+
+  * :mod:`repro.serve.wire` — the BYTE BOUNDARY.  A versioned,
+    backend-agnostic frame (magic + version + message kind + sorted-key
+    JSON meta + raw C-order array blobs) for the four messages that
+    ever cross between router and replica: REQUEST (submission),
+    STATUS (per-request token/logits/terminal deltas), SNAPSHOT (the
+    swap-out serialization — pool rows, slot rows, and quantized-scale
+    leaves ride as ordinary arrays), STATS (load/capacity telemetry).
+    Decoding is strict: wrong magic/version/kind, malformed meta,
+    short or trailing bytes all raise ``WireError`` — never a
+    half-decoded message.
+  * :mod:`repro.serve.router` — the REPLICA TIER's policy + session.
+    ``Router`` owns N engine replicas (each with its OWN ServeConfig,
+    allocator, and sharded pool) behind the unchanged session surface:
+    ``submit(req) -> RouterHandle``, ``tick()`` fans out one engine
+    tick per replica then syncs status deltas, ``drain()`` finishes
+    and closes all.  WHO ROUTES: the router, never an engine —
+    prefix-affinity by default (whole-page prompt-prefix hashes map to
+    the replica already serving the longest match, so per-replica COW
+    prefix sharing keeps working across the fleet), least-loaded when
+    no prefix is known, seeded random as the baseline.  WHAT CROSSES
+    THE WIRE: everything — each router<->replica interaction is wire
+    bytes even in-process (``ReplicaEndpoint`` is the stand-in a real
+    RPC worker replaces), so client and engine never share a mutable
+    Request.  MIGRATION INVARIANTS: a parked request moves replicas
+    only as a wire SNAPSHOT, only when its home cannot re-admit it (no
+    free slot or too few reserved-free pages) while the receiver has
+    both and no queue of its own; the receiver re-stamps the
+    engine-local admission order and re-enters through the ordinary
+    swap-in path, and because status deltas sync BEFORE migration the
+    token stream resumes bit-for-bit.  With 1 replica the router is
+    BIT-identical (tokens + logits) to a bare engine at uniform
+    priority (tests/test_router.py).
 """
-from repro.serve.config import Request, ServeConfig  # noqa: F401
+from repro.serve.config import Request, RouterConfig, ServeConfig  # noqa: F401
 from repro.serve.engine import RequestHandle, ServingEngine  # noqa: F401
+from repro.serve.router import ReplicaEndpoint, Router, RouterHandle  # noqa: F401

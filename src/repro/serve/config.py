@@ -213,6 +213,52 @@ class ServeConfig:
 
 
 @dataclasses.dataclass
+class RouterConfig:
+    """Policy knobs of the replica router (:mod:`repro.serve.router`).
+
+    The router owns N :class:`~repro.serve.engine.ServingEngine`
+    replicas (each with its own ServeConfig, allocator, and sharded
+    pool) behind the session surface; every router<->replica interaction
+    crosses the :mod:`repro.serve.wire` byte boundary."""
+    replicas: int = 1
+    routing: str = "affinity"
+    # Placement policy for a fresh submission:
+    #   "affinity":     prefix-affinity first — hash the prompt's
+    #                   whole-page prefixes and route to the replica
+    #                   already serving a prompt with the longest
+    #                   matching prefix (COW prefix sharing is
+    #                   per-replica, so co-locating shared-prompt
+    #                   traffic keeps it working); least-loaded when no
+    #                   prefix is known.
+    #   "least_loaded": fewest live requests, lowest replica id on ties
+    #                   (the default admission policy under affinity).
+    #   "random":       seeded uniform choice — the baseline the router
+    #                   benchmark compares affinity against.
+    # With 1 replica every policy routes identically (replica 0), so a
+    # 1-replica router stays bit-identical to a bare engine.
+    migrate: bool = True
+    # Cross-replica migration of PARKED requests: when a replica cannot
+    # re-admit its coldest swapped snapshot (no free slot, or not enough
+    # reserved-free pages) while another replica has both, the snapshot
+    # crosses the wire (encode_snapshot/decode_snapshot) and resumes on
+    # the other replica bit-for-bit.  False = parked work waits for its
+    # home replica, the single-engine behavior.
+    seed: int = 0                   # RNG seed for routing="random"
+
+    def __post_init__(self):
+        def bad(field, why):
+            raise ValueError(f"RouterConfig.{field} {why}")
+        if isinstance(self.replicas, bool) or \
+                not isinstance(self.replicas, int) or self.replicas < 1:
+            bad("replicas", f"must be an int >= 1, got {self.replicas!r}")
+        if self.routing not in ("affinity", "least_loaded", "random"):
+            bad("routing", "must be 'affinity', 'least_loaded', or "
+                f"'random', got {self.routing!r}")
+        if not isinstance(self.migrate, bool):
+            bad("migrate", f"must be a bool, got {self.migrate!r}")
+
+
+@dataclasses.dataclass
 class Request:
     rid: int
     prompt: List[int]

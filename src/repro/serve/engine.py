@@ -335,6 +335,12 @@ class ServingEngine:
         # (slot, j) -> in-flight restore: the async jax.device_put
         # arrays, issue tick, and whether a stall ever blocked on it.
         self._inflight_data: Dict[Tuple[int, int], dict] = {}
+        # host slot -> in-flight EVICTION (device -> host), the mirror
+        # of the restore dict: the sliced-out device page arrays and the
+        # issue tick.  The allocator already marks the page host-resident;
+        # the BYTES land in the pinned buffer when the transfer completes
+        # (_land_evictions) or when a reader forces it (_flush_evictions).
+        self._evict_pending: Dict[int, dict] = {}
         self._held_slots: set = set()   # blocked mid-restore this tick
         self._tick_ema: Optional[float] = None   # seconds per tick
         self._h2d_bps: Optional[float] = None    # measured lazily
@@ -343,6 +349,7 @@ class ServingEngine:
         self._ov_decode = None
         self._spill_seq = 0         # checkpoint step counter (spill_dir)
         self.n_evictions = 0
+        self.evict_stalls = 0       # forced waits on an unfinished D2H copy
         self.n_restores = 0
         self.prefetch_hits = 0      # restores that landed fully overlapped
         self.prefetch_late = 0      # restores a stall tick blocked on
@@ -786,6 +793,8 @@ class ServingEngine:
             # would try to finish_restore a key the allocator forgot.
             for key in [k for k in self._inflight_data if k[0] == slot]:
                 self._inflight_data.pop(key)
+            if self.tiered:
+                self._drop_evictions(slot)
             self.alloc.release_slot(slot)   # refs return to the pool
 
     # -- device <-> host page movement --------------------------------------
@@ -842,7 +851,10 @@ class ServingEngine:
         else:
             # assemble the snapshot from BOTH tiers, logical order: a
             # device page gathers off the pool, an evicted page copies
-            # straight out of its pinned host buffer.
+            # straight out of its pinned host buffer — whose in-flight
+            # evictions must land first (residency gate on host reads).
+            self._flush_evictions(
+                int(h) for h in self.alloc.host_table[slot] if h >= 0)
             pool_leaves = [leaf for leaf, pooled
                            in zip(flat, self._pooled) if pooled]
             pool_rows = []
@@ -926,6 +938,42 @@ class ServingEngine:
             assert self.sched.slots[slot] is None, \
                 "chosen free slot was taken before placement"
             self._swap_in(slot, sw)
+
+    # -- cross-replica migration seam (router tier) -------------------------
+    def export_parked(self) -> Optional[SwappedRequest]:
+        """Pop this engine's COLDEST parked snapshot (the swap-queue
+        tail — the request this replica would re-admit LAST, the same
+        cold-first rule eviction and spill use) for cross-replica
+        migration, or None when nothing is parked.  A spilled snapshot
+        re-materializes from disk first: the wire format carries bytes,
+        not checkpoint step ids."""
+        sw = self.sched.pop_parked(coldest=True)
+        if sw is None:
+            return None
+        if sw.spill_step is not None:
+            self._unspill(sw)
+        return sw
+
+    def import_parked(self, sw: SwappedRequest) -> None:
+        """Adopt a snapshot another replica exported: re-stamp it into
+        the LOCAL admission order (cross-engine order values are
+        meaningless and could collide) and park it on the swap queue —
+        the normal ``_swap_in_ready`` path then restores its pages and
+        resumes decode bit-for-bit, exactly like a home-grown swap-in.
+        Raises when the snapshot can never fit this engine's pool."""
+        if self._closed:
+            raise RuntimeError(
+                "ServingEngine is closed: import_parked() after drain()")
+        if not self.sc.paged:
+            raise ValueError("import_parked needs the paged engine "
+                             "(snapshots hold page contents)")
+        if sw.n_pages + int(sw.n_pages < sw.n_max) > self.num_pages:
+            raise ValueError(
+                f"snapshot needs {sw.n_pages} pages (+growth headroom); "
+                f"this pool holds {self.num_pages}")
+        sw.order = self.sched.next_order()
+        self.sched.swapped.append(sw)
+        self._enforce_swap_budget()
 
     # -- steady-state decode tick -------------------------------------------
     def _grow_pages(self, active: List[int]) -> None:
@@ -1104,9 +1152,16 @@ class ServingEngine:
         lowest page first — its longest-parked rows).  Returns True iff
         all ``n`` moved.  ``protect`` slots are never victims: the
         requester itself, plus every slot currently held mid-restore
-        (stealing their pages back would livelock the rotation).  Bytes
-        are copied into the pinned host buffer before the device page
-        can be reused (eviction and allocation never interleave here)."""
+        (stealing their pages back would livelock the rotation).
+
+        The copy is ASYNC, mirroring the restore path: ``leaf[:, phys]``
+        materializes the page as its OWN device buffer — so the freed
+        physical page can be reallocated and rewritten immediately
+        without racing the transfer — and the device->host copy overlaps
+        later ticks' compute, landing in the pinned buffer at tick start
+        (``_land_evictions``) or, residency-gated, the moment anything
+        needs the host bytes (``_flush_evictions``; forced waits count
+        ``evict_stalls``)."""
         if not self.tiered or n <= 0:
             return n <= 0
         flat, _ = jax.tree.flatten(self.cache)
@@ -1121,11 +1176,55 @@ class ServingEngine:
                 if got is None:
                     continue
                 phys, host = got
-                for li, leaf in enumerate(pool_leaves):
-                    self._host_tier[li][host] = np.asarray(leaf[:, phys])
+                assert host not in self._evict_pending, \
+                    "host slot reissued with a copy still in flight"
+                arrs = [leaf[:, phys] for leaf in pool_leaves]
+                for a in arrs:
+                    a.copy_to_host_async()
+                self._evict_pending[host] = {"arrs": arrs,
+                                             "tick": self.tick_no}
                 self.n_evictions += 1
                 done += 1
         return done >= n
+
+    def _evict_ready(self, info) -> bool:
+        if self.sc.transfer_ticks is not None:    # modeled, deterministic
+            return self.tick_no - info["tick"] >= self.sc.transfer_ticks
+        return all(a.is_ready() for a in info["arrs"])
+
+    def _land_evictions(self) -> None:
+        """Land the in-flight evictions whose transfer has completed
+        (called once per tick, with restores, at ``_tier_tick``)."""
+        for host in [h for h, info in self._evict_pending.items()
+                     if self._evict_ready(info)]:
+            info = self._evict_pending.pop(host)
+            for li, a in enumerate(info["arrs"]):
+                self._host_tier[li][host] = np.asarray(a)
+
+    def _flush_evictions(self, hosts) -> None:
+        """Residency gate on the HOST tier: force-land any pending
+        eviction into the given host slots before their bytes are read
+        (restore issue, swap-out assembly).  A landing the transfer had
+        not finished on its own is a counted stall — the price of the
+        overlap, the mirror of ``prefetch_late``."""
+        for host in list(hosts):
+            info = self._evict_pending.pop(int(host), None)
+            if info is None:
+                continue
+            if not self._evict_ready(info):
+                self.evict_stalls += 1
+            for li, a in enumerate(info["arrs"]):
+                self._host_tier[li][host] = np.asarray(a)
+
+    def _drop_evictions(self, slot: int) -> None:
+        """Discard pending evictions into ``slot``'s host slots (the
+        request is finishing or being snapshot — the bytes are moot).
+        Must run BEFORE ``alloc.release_slot`` returns those host slots
+        to the free list: a later eviction reusing one would otherwise
+        be corrupted by this stale landing."""
+        for h in self.alloc.host_table[slot]:
+            if h >= 0:
+                self._evict_pending.pop(int(h), None)
 
     def _issue_restore(self, slot: int, j: int, protect) -> bool:
         """Start one async host -> device page restore: claim a target
@@ -1140,6 +1239,9 @@ class ServingEngine:
         if got is None:
             return False
         dst, host = got
+        # the source host slot may still have its eviction in flight:
+        # land it first (counted as a stall if the copy wasn't done).
+        self._flush_evictions([host])
         # .copy(): on the CPU backend device_put can be ZERO-copy — the
         # resulting array would alias the pinned host row, whose slot is
         # freed at finish_restore and rewritten by a later eviction
@@ -1185,6 +1287,7 @@ class ServingEngine:
         slot whose window just completed always gets its dispatch in
         before any eviction can steal the restored pages back (the
         alternative ping-pongs: restore, steal, re-restore, forever)."""
+        self._land_evictions()
         self._apply_restores([k for k, info in self._inflight_data.items()
                               if self._restore_ready(info)])
         self._held_slots = {slot for slot, _ in self._tier_needs()}
@@ -1302,6 +1405,7 @@ class ServingEngine:
         hits, late = self.prefetch_hits, self.prefetch_late
         return {
             "n_evictions": self.n_evictions,
+            "evict_stalls": self.evict_stalls,
             "n_restores": self.n_restores,
             "prefetch_hits": hits,
             "prefetch_late": late,

@@ -1,0 +1,425 @@
+"""Replica router: N serving engines behind one session surface.
+
+The multi-host shape (ROADMAP: "replicated engines behind a router"):
+a :class:`Router` owns N :class:`~repro.serve.engine.ServingEngine`
+replicas — each with its OWN ServeConfig, allocator, and (sharded) page
+pool — and re-exposes the session API unchanged: ``submit(req)`` returns
+a handle, ``tick()`` fans out one tick per replica, ``drain()`` finishes
+and closes all of them.
+
+Every router<->replica interaction crosses the :mod:`repro.serve.wire`
+byte boundary, even in-process (:class:`ReplicaEndpoint` is the
+in-process stand-in a real RPC worker replaces):
+
+  * submission  — ``encode_request`` / ``decode_request``: the replica
+    decodes its OWN copy of the Request, so client and engine never
+    share mutable state;
+  * progress    — per-request STATUS deltas polled once per tick and
+    patched onto the client-side Request (tokens, logits rows, terminal
+    and deadline fields), which keeps the handles pure host reads;
+  * migration   — a parked (swapped-out) request crosses replicas as a
+    wire-encoded swap SNAPSHOT;
+  * telemetry   — STATS messages feed the placement and migration
+    policies.
+
+POLICY lives here, not in the engines:
+
+  * placement (``RouterConfig.routing``) — prefix-affinity by default:
+    the prompt's whole-page prefixes are hashed (the page size is the
+    sharing granule) and a prompt routes to the replica already serving
+    the longest matching prefix, so per-replica COW prefix sharing keeps
+    working across a fleet; least-loaded (fewest live requests, lowest
+    replica id on ties) when no prefix is known, or always; seeded
+    random as the benchmark baseline.
+  * migration (``RouterConfig.migrate``) — when a replica cannot
+    re-admit its coldest parked snapshot (no free slot or not enough
+    reserved-free pages) while another replica has both AND no queue of
+    its own, the snapshot is exported (``Scheduler.pop_parked``,
+    unspilled if needed), wire-encoded, and imported on the receiver,
+    where the ordinary swap-in path resumes it bit-for-bit.
+
+Bit-exactness discipline extends to this tier: with 1 replica every
+routing policy degenerates to replica 0 and the router is BIT-identical
+(tokens and logits) to a bare engine at uniform priority; a migrated
+request resumes bit-for-bit because the snapshot is the same swap
+serialization single-engine preemption already round-trips
+(tests/test_router.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.serve import wire
+from repro.serve.config import Request, RouterConfig, ServeConfig
+from repro.serve.engine import RequestHandle, ServingEngine
+
+
+class ReplicaEndpoint:
+    """Byte-boundary adapter around ONE engine replica.
+
+    Everything the router sends in or reads out is wire bytes — the
+    exact surface a remote worker process would expose over a socket.
+    The endpoint keeps the engine-side Request objects (decoded from the
+    wire, never the client's) and, per request, how many tokens it has
+    already reported, so each ``poll()`` emits only the delta."""
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        self.eng = ServingEngine(cfg, params, serve_cfg)
+        self._reqs: Dict[int, Request] = {}     # rid -> engine-side copy
+        self._sent: Dict[int, int] = {}         # rid -> tokens reported
+
+    def submit(self, blob: bytes) -> None:
+        req = wire.decode_request(blob)
+        self._reqs[req.rid] = req
+        self._sent[req.rid] = len(req.out_tokens)
+        self.eng.submit(req)
+
+    def tick(self) -> None:
+        self.eng.tick()
+
+    def warmup(self) -> None:
+        self.eng.warmup()
+
+    def poll(self) -> List[bytes]:
+        """One STATUS delta per tracked request; terminal requests are
+        reported one final time (done/failed set) and then forgotten."""
+        out = []
+        record_logits = self.eng.sc.record_logits
+        for rid, req in list(self._reqs.items()):
+            sent = self._sent[rid]
+            delta = wire.StatusDelta(
+                rid=rid, state=RequestHandle(self.eng, req).status,
+                new_tokens=req.out_tokens[sent:],
+                done=req.done, failed=req.failed, preempts=req.preempts,
+                submit_tick=req.submit_tick,
+                first_token_tick=req.first_token_tick,
+                deadline_miss=req.deadline_miss,
+                new_logits=req.logits[sent:] if record_logits else [])
+            out.append(wire.encode_status(delta))
+            self._sent[rid] = len(req.out_tokens)
+            if req.done:
+                del self._reqs[rid], self._sent[rid]
+        return out
+
+    def export_parked(self) -> Optional[bytes]:
+        """Wire-encode and forget this replica's coldest parked
+        snapshot (None when nothing is parked).  The router polls
+        BEFORE migrating, so every token the request emitted here has
+        already been reported."""
+        sw = self.eng.export_parked()
+        if sw is None:
+            return None
+        self._reqs.pop(sw.req.rid, None)
+        self._sent.pop(sw.req.rid, None)
+        return wire.encode_snapshot(sw)
+
+    def import_parked(self, blob: bytes) -> None:
+        sw = wire.decode_snapshot(blob)
+        self._reqs[sw.req.rid] = sw.req
+        self._sent[sw.req.rid] = len(sw.req.out_tokens)
+        self.eng.import_parked(sw)
+
+    def stats(self) -> bytes:
+        """Wire-encoded load/capacity telemetry (the control plane the
+        router's placement + migration policies read)."""
+        eng = self.eng
+        parked = eng.sched.swapped
+        tail_need = None
+        if parked:
+            sw = parked[-1]         # the export candidate (coldest)
+            tail_need = sw.n_pages + (
+                sw.growth_due if eng.sc.reserve_decode_pages
+                else int(sw.n_pages < sw.n_max))
+        return wire.encode_stats({
+            "live": len(self._reqs),
+            "free_slots": len(eng.sched.free_slots()),
+            "pending": len(eng.sched.pending),
+            "parked": len(parked),
+            "parked_tail_need": tail_need,
+            "reserved_free": (eng.alloc.reserved_free()
+                              if eng.sc.paged else 0),
+            "pages_in_use": eng.pages_in_use() if eng.sc.paged else 0,
+            "has_work": bool(eng.sched.has_work() or eng._oversized),
+            "deadline_hits": eng.sched.deadline_hits,
+            "deadline_misses": eng.sched.deadline_misses,
+            "tick_no": eng.tick_no,
+        })
+
+    def close(self) -> List[bytes]:
+        """Drain + close the engine; returns the final deltas."""
+        self.eng.drain()
+        return self.poll()
+
+
+class RouterHandle:
+    """Client-side view of one routed request — the same surface as
+    :class:`~repro.serve.engine.RequestHandle`, reading the CLIENT copy
+    of the Request (kept current by the router's per-tick delta sync;
+    the engine-side copy lives across the wire)."""
+
+    def __init__(self, router: "Router", req: Request):
+        self._router = router
+        self.req = req
+
+    @property
+    def status(self) -> str:
+        """'pending' | 'running' | 'swapped' | 'done' | 'failed'."""
+        if self.req.done:
+            return "failed" if self.req.failed else "done"
+        return self._router._state.get(self.req.rid, "pending")
+
+    @property
+    def replica(self) -> int:
+        """The replica currently serving this request (migration moves
+        it mid-flight)."""
+        return self._router._home[self.req.rid]
+
+    @property
+    def tokens_so_far(self) -> List[int]:
+        return list(self.req.out_tokens)
+
+    def stream(self):
+        """Yield tokens incrementally, driving ``router.tick()`` (all
+        replicas keep serving underneath) whenever none are buffered."""
+        sent = 0
+        while True:
+            while sent < len(self.req.out_tokens):
+                yield self.req.out_tokens[sent]
+                sent += 1
+            if self.req.done:
+                return
+            self._router.tick()
+
+    def result(self) -> Request:
+        while not self.req.done:
+            self._router.tick()
+        return self.req
+
+    def __repr__(self):
+        return (f"RouterHandle(rid={self.req.rid}, status={self.status!r}, "
+                f"replica={self._router._home.get(self.req.rid)}, "
+                f"tokens={len(self.req.out_tokens)})")
+
+
+class Router:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
+                 router_cfg: Optional[RouterConfig] = None):
+        self.rc = router_cfg or RouterConfig()
+        self.sc = serve_cfg
+        # each replica gets its OWN ServeConfig instance: replicas must
+        # never share mutable config state (a remote worker wouldn't).
+        self.replicas = [
+            ReplicaEndpoint(cfg, params, dataclasses.replace(serve_cfg))
+            for _ in range(self.rc.replicas)]
+        self._home: Dict[int, int] = {}         # rid -> replica index
+        self._client: Dict[int, Request] = {}   # rid -> client-side req
+        self._state: Dict[int, str] = {}        # rid -> last wire state
+        self._live: List[int] = [0] * self.rc.replicas
+        self.assigned: List[int] = [0] * self.rc.replicas
+        # prefix hash -> [owning replica, live refcount]: first owner
+        # wins; entries die with their last referencing request, so
+        # affinity follows the traffic instead of growing forever.
+        self._aff: Dict[int, List[int]] = {}
+        self._req_hashes: Dict[int, List[int]] = {}
+        self._rng = random.Random(self.rc.seed)
+        self.completed: List[Request] = []
+        self.tick_no = 0
+        self.n_routed = 0
+        self.n_prefix_hits = 0
+        self.n_migrations = 0
+        self._closed = False
+
+    # -- placement -----------------------------------------------------------
+    def _prefix_hashes(self, prompt: List[int]) -> List[int]:
+        """One digest per whole-page prompt prefix (ascending length) —
+        the granule at which the engines' COW prefix sharing can map
+        pages, so a hash hit means the owning replica may already hold
+        physical pages for exactly those rows.  blake2b, not Python
+        hash(): stable across processes, which is what a wire-remoted
+        router needs."""
+        ps = self.sc.page_size if self.sc.paged else 0
+        if ps <= 0:
+            return []
+        h = hashlib.blake2b(digest_size=8)
+        out = []
+        for k in range(len(prompt) // ps):
+            h.update(np.asarray(prompt[k * ps:(k + 1) * ps],
+                                np.int64).tobytes())
+            out.append(int.from_bytes(h.copy().digest(), "little"))
+        return out
+
+    def _least_loaded(self) -> int:
+        return min(range(len(self.replicas)),
+                   key=lambda i: (self._live[i], i))
+
+    def _route(self, req: Request) -> int:
+        hashes = self._prefix_hashes(req.prompt)
+        hit = False
+        if self.rc.routing == "random":
+            r = self._rng.randrange(len(self.replicas))
+        else:
+            r = None
+            if self.rc.routing == "affinity":
+                for h in reversed(hashes):      # longest known prefix
+                    owner = self._aff.get(h)
+                    if owner is not None:
+                        r, hit = owner[0], True
+                        break
+            if r is None:
+                r = self._least_loaded()
+        for h in hashes:
+            ent = self._aff.setdefault(h, [r, 0])
+            if ent[0] == r:
+                ent[1] += 1
+        self._req_hashes[req.rid] = hashes
+        self.n_routed += 1
+        self.n_prefix_hits += int(hit)
+        return r
+
+    def _forget(self, rid: int) -> None:
+        """A request reached a terminal state: release its affinity
+        refcounts and its replica's live count."""
+        self._live[self._home[rid]] -= 1
+        for h in self._req_hashes.pop(rid, []):
+            ent = self._aff.get(h)
+            if ent is not None and ent[0] == self._home[rid]:
+                ent[1] -= 1
+                if ent[1] <= 0:
+                    del self._aff[h]
+
+    # -- session surface -----------------------------------------------------
+    def submit(self, req: Request) -> RouterHandle:
+        """Route ``req`` to a replica (wire-encoded — the replica admits
+        its own decoded copy) and return a handle over the CLIENT copy,
+        which the per-tick delta sync keeps current."""
+        if self._closed:
+            raise RuntimeError(
+                "Router is closed: submit() after drain() — "
+                "construct a new router")
+        if req.rid in self._client:
+            raise ValueError(
+                f"duplicate rid {req.rid}: the router tracks requests "
+                "by rid across replicas, so rids must be unique")
+        r = self._route(req)
+        self._home[req.rid] = r
+        self._client[req.rid] = req
+        self._state[req.rid] = "pending"
+        self._live[r] += 1
+        self.assigned[r] += 1
+        self.replicas[r].submit(wire.encode_request(req))
+        return RouterHandle(self, req)
+
+    def tick(self) -> None:
+        """One router step: fan out one engine tick per replica, sync
+        every replica's status deltas onto the client-side requests,
+        then run the migration policy (parked snapshots move to a
+        replica that can actually run them)."""
+        self.tick_no += 1
+        for ep in self.replicas:
+            ep.tick()
+        self._sync()
+        if self.rc.migrate and len(self.replicas) > 1:
+            self._migrate()
+
+    def _sync(self, blobs_per_replica=None) -> None:
+        if blobs_per_replica is None:
+            blobs_per_replica = [ep.poll() for ep in self.replicas]
+        for blobs in blobs_per_replica:
+            for blob in blobs:
+                d = wire.decode_status(blob)
+                req = self._client[d.rid]
+                req.out_tokens.extend(d.new_tokens)
+                req.logits.extend(d.new_logits)
+                req.preempts = d.preempts
+                req.submit_tick = d.submit_tick
+                req.first_token_tick = d.first_token_tick
+                req.deadline_miss = d.deadline_miss
+                self._state[d.rid] = d.state
+                if d.done and not req.done:
+                    req.failed = d.failed
+                    req.done = True
+                    self._forget(d.rid)
+                    self.completed.append(req)
+
+    def _migrate(self) -> None:
+        """Move parked work to capacity: replica A's coldest swapped
+        snapshot migrates to replica B iff A cannot re-admit it right
+        now (no free slot, or fewer reserved-free pages than the
+        snapshot needs) while B has a free slot, enough pages, and no
+        pending/parked queue of its own.  The sync in ``tick()`` ran
+        first, so every token emitted on A is already on the client
+        side; B resumes the stream bit-for-bit."""
+        stats = [wire.decode_stats(ep.stats()) for ep in self.replicas]
+        for a, sa in enumerate(stats):
+            if not sa["parked"]:
+                continue
+            need = sa["parked_tail_need"]
+            if sa["free_slots"] > 0 and sa["reserved_free"] >= need:
+                continue            # A re-admits it itself next tick
+            for b, sb in enumerate(stats):
+                if b == a or sb["parked"] or sb["pending"]:
+                    continue
+                if sb["free_slots"] > 0 and sb["reserved_free"] >= need:
+                    blob = self.replicas[a].export_parked()
+                    if blob is None:        # raced empty; nothing to move
+                        break
+                    _, meta = wire.peek(blob)
+                    rid = meta["req"]["rid"]
+                    self.replicas[b].import_parked(blob)
+                    self._live[a] -= 1
+                    self._live[b] += 1
+                    self._home[rid] = b
+                    self._state[rid] = "swapped"
+                    self.n_migrations += 1
+                    # refresh the receiver's capacity view: one import
+                    # per tick per replica is plenty.
+                    stats[b] = wire.decode_stats(self.replicas[b].stats())
+                    break
+
+    def has_work(self) -> bool:
+        return any(wire.decode_stats(ep.stats())["has_work"]
+                   for ep in self.replicas)
+
+    def drain(self) -> List[Request]:
+        """Serve everything outstanding, then CLOSE every replica (and
+        the router: subsequent ``submit()`` raises).  Returns the
+        requests finished during this call, in completion order."""
+        start = len(self.completed)
+        while self.has_work():
+            self.tick()
+        self._sync([ep.close() for ep in self.replicas])
+        self._closed = True
+        return self.completed[start:]
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Submit-everything-then-tick shim (the router stays OPEN)."""
+        start = len(self.completed)
+        for req in requests:
+            self.submit(req)
+        while self.has_work():
+            self.tick()
+        return self.completed[start:]
+
+    def warmup(self) -> None:
+        for ep in self.replicas:
+            ep.warmup()
+
+    def stats(self) -> dict:
+        """Router-level counters plus each replica's decoded telemetry."""
+        return {
+            "replicas": len(self.replicas),
+            "routing": self.rc.routing,
+            "n_routed": self.n_routed,
+            "n_prefix_hits": self.n_prefix_hits,
+            "prefix_hit_rate": self.n_prefix_hits / max(self.n_routed, 1),
+            "n_migrations": self.n_migrations,
+            "assigned": list(self.assigned),
+            "per_replica": [wire.decode_stats(ep.stats())
+                            for ep in self.replicas],
+        }

@@ -180,6 +180,28 @@ class Scheduler:
         """Host bytes currently parked on the swap queue."""
         return sum(sw.nbytes for sw in self.swapped)
 
+    def pop_parked(self, coldest: bool = True) -> Optional[SwappedRequest]:
+        """Remove and return one parked snapshot, or None.
+
+        Re-admission drains the swap queue FIFO from the HEAD, so the
+        TAIL is the coldest entry — the request this engine would serve
+        last.  ``coldest=True`` (cross-replica migration's choice: the
+        same cold-first rule tiered eviction and durable spill already
+        use) pops the tail; False pops the head."""
+        if not self.swapped:
+            return None
+        return self.swapped.pop(-1 if coldest else 0)
+
+    def next_order(self) -> int:
+        """Claim the next admission-order stamp.  Snapshots imported
+        from ANOTHER engine are re-stamped with this before parking:
+        order values are an engine-local total order (victim choice and
+        cold ordering compare them), so a foreign stamp is meaningless
+        here and could collide with a resident's."""
+        order = self._order
+        self._order += 1
+        return order
+
     # -- slot table ---------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]

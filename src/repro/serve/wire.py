@@ -1,0 +1,381 @@
+"""Versioned wire format for the router <-> engine boundary.
+
+Every interaction between the :class:`repro.serve.router.Router` and an
+engine replica crosses THIS byte-level serialization, even in-process —
+the seam a real RPC transport (sockets, shared memory, a cluster fabric)
+plugs into later without touching either side.  Four message kinds:
+
+  * REQUEST — a :class:`repro.serve.config.Request` at submission (or
+    embedded in a snapshot mid-flight: ``out_tokens``/``logits`` carry
+    the partial output).
+  * STATUS — one per-request delta emitted by an engine endpoint each
+    poll: lifecycle state, the tokens (and, when ``record_logits``, the
+    logits rows) appended since the previous delta, and the terminal /
+    deadline bookkeeping fields.  Token indices are cumulative, so a
+    request migrated between replicas keeps one monotone stream.
+  * SNAPSHOT — a parked :class:`repro.serve.scheduler.SwappedRequest`:
+    the PR 3 swap serialization (pool page contents + per-slot recurrent
+    rows, logical order) as bytes.  Quantized pools ride free: packed
+    int8/int4 page rows and their f32 scale leaves are ordinary arrays
+    in ``pool_rows``.  A spilled snapshot must be re-materialized first
+    — the wire carries bytes, not checkpoint paths.
+  * STATS — an engine endpoint's load/capacity telemetry (JSON scalars),
+    the control-plane read the router's placement and migration policy
+    runs on.
+
+Layout (all little-endian)::
+
+    magic 'RSWF' | u16 version | u8 msg kind | u8 reserved
+    u32 meta_len | meta (canonical JSON, sorted keys)
+    u16 n_arrays
+    per array: u8 dtype_name_len | dtype_name | u8 ndim | u32 x ndim dims
+               | u64 nbytes | raw C-order bytes
+
+JSON carries the scalar/structured fields; ndarrays (logits rows, page
+contents, scales) are framed raw so every round trip is BIT-exact — the
+router tier inherits the repo's bit-exactness discipline through the
+serialization itself.  Any header violation (bad magic, truncation,
+trailing bytes, unexpected kind) and any version other than
+``WIRE_VERSION`` raises :class:`WireError`: a mixed-version deployment
+fails loudly at the first message, never by silently misparsing state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.config import Request
+from repro.serve.scheduler import SwappedRequest
+
+MAGIC = b"RSWF"
+WIRE_VERSION = 1
+
+MSG_REQUEST = 1
+MSG_STATUS = 2
+MSG_SNAPSHOT = 3
+MSG_STATS = 4
+
+_KIND_NAMES = {MSG_REQUEST: "request", MSG_STATUS: "status",
+               MSG_SNAPSHOT: "snapshot", MSG_STATS: "stats"}
+
+
+class WireError(ValueError):
+    """A malformed, truncated, or version-incompatible wire message."""
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a serialized dtype name, including the ml_dtypes extras
+    (bfloat16 et al.) jax pools may use — their string names are not
+    always registered with numpy itself."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError):
+            raise WireError(f"unknown array dtype {name!r} on the wire")
+
+
+def _pack(kind: int, meta: dict, arrays: List[np.ndarray]) -> bytes:
+    meta_b = json.dumps(meta, sort_keys=True,
+                        separators=(",", ":")).encode("utf-8")
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<HBB", WIRE_VERSION, kind, 0)
+    out += struct.pack("<I", len(meta_b))
+    out += meta_b
+    out += struct.pack("<H", len(arrays))
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        name = a.dtype.name.encode("ascii")
+        out += struct.pack("<B", len(name)) + name
+        out += struct.pack("<B", a.ndim)
+        if a.ndim:
+            out += struct.pack(f"<{a.ndim}I", *a.shape)
+        raw = a.tobytes()
+        out += struct.pack("<Q", len(raw)) + raw
+    return bytes(out)
+
+
+class _strict:
+    """Context manager for the typed decoders: a corrupted-but-parseable
+    meta dict (a bit flip can rename a JSON key, retype a field, or fail
+    a Request validator) must surface as WireError, never as a KeyError/
+    TypeError/ValueError leaking from the middle of reconstruction."""
+
+    def __init__(self, what: str):
+        self.what = what
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, etype, exc, tb):
+        if etype is None or issubclass(etype, WireError):
+            return False
+        if issubclass(etype, (KeyError, TypeError, ValueError,
+                              AttributeError, IndexError)):
+            raise WireError(
+                f"malformed {self.what} metadata: {exc!r}") from exc
+        return False
+
+
+class _Reader:
+    """Bounds-checked cursor: every short read is a WireError, not a
+    struct.error leaking from the middle of a parse."""
+
+    def __init__(self, blob: bytes):
+        self.blob = blob
+        self.off = 0
+
+    def take(self, n: int) -> bytes:
+        if self.off + n > len(self.blob):
+            raise WireError(
+                f"truncated wire message: wanted {n} bytes at offset "
+                f"{self.off}, have {len(self.blob) - self.off}")
+        out = self.blob[self.off:self.off + n]
+        self.off += n
+        return out
+
+    def unpack(self, fmt: str) -> tuple:
+        return struct.unpack(fmt, self.take(struct.calcsize(fmt)))
+
+
+def _unpack(blob: bytes, expect: Optional[int] = None
+            ) -> Tuple[int, dict, List[np.ndarray]]:
+    r = _Reader(blob)
+    if r.take(4) != MAGIC:
+        raise WireError("not a serve wire message (bad magic)")
+    version, kind, _ = r.unpack("<HBB")
+    if version != WIRE_VERSION:
+        raise WireError(
+            f"wire version mismatch: message speaks v{version}, this "
+            f"build speaks v{WIRE_VERSION} — refusing to parse")
+    if expect is not None and kind != expect:
+        raise WireError(
+            f"expected a {_KIND_NAMES.get(expect, expect)} message, got "
+            f"{_KIND_NAMES.get(kind, kind)}")
+    (meta_len,) = r.unpack("<I")
+    try:
+        meta = json.loads(r.take(meta_len).decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"unparseable wire metadata: {e}")
+    if not isinstance(meta, dict):
+        raise WireError(
+            f"wire metadata must be a JSON object, got {type(meta).__name__}")
+    (n_arrays,) = r.unpack("<H")
+    arrays = []
+    for _ in range(n_arrays):
+        (name_len,) = r.unpack("<B")
+        try:
+            name = r.take(name_len).decode("ascii")
+        except UnicodeDecodeError as e:
+            raise WireError(f"non-ascii array dtype name on the wire: {e}")
+        dtype = _np_dtype(name)
+        (ndim,) = r.unpack("<B")
+        shape = r.unpack(f"<{ndim}I") if ndim else ()
+        (nbytes,) = r.unpack("<Q")
+        want = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize \
+            if ndim else dtype.itemsize
+        if nbytes != want:
+            raise WireError(
+                f"array payload size mismatch: {nbytes} bytes framed for "
+                f"shape {tuple(shape)} dtype {dtype.name} ({want} bytes)")
+        # .copy(): frombuffer views are read-only and pin the whole blob.
+        arrays.append(np.frombuffer(r.take(nbytes), dtype)
+                      .reshape(shape).copy())
+    if r.off != len(blob):
+        raise WireError(
+            f"{len(blob) - r.off} trailing bytes after a complete "
+            f"{_KIND_NAMES.get(kind, kind)} message")
+    return kind, meta, arrays
+
+
+def peek(blob: bytes) -> Tuple[int, dict]:
+    """Header + metadata of a message without copying its arrays out —
+    the router reads routing keys (rid, page counts) this way."""
+    kind, meta, _ = _unpack(blob)
+    return kind, meta
+
+
+# ---------------------------------------------------------------------------
+# Request
+# ---------------------------------------------------------------------------
+
+def _req_meta(req: Request) -> dict:
+    return {
+        "rid": req.rid,
+        "prompt": [int(t) for t in req.prompt],
+        "priority": req.priority,
+        "ttft_deadline": req.ttft_deadline,
+        "out_tokens": [int(t) for t in req.out_tokens],
+        "done": req.done,
+        "failed": req.failed,
+        "preempts": req.preempts,
+        "submit_seq": req.submit_seq,
+        "submit_tick": req.submit_tick,
+        "first_token_tick": req.first_token_tick,
+        "deadline_miss": req.deadline_miss,
+        "n_logits": len(req.logits),
+    }
+
+
+def _req_from(meta: dict, logits: List[np.ndarray]) -> Request:
+    req = Request(rid=meta["rid"], prompt=list(meta["prompt"]),
+                  priority=meta["priority"],
+                  ttft_deadline=meta["ttft_deadline"])
+    req.out_tokens = list(meta["out_tokens"])
+    req.done = bool(meta["done"])
+    req.failed = bool(meta["failed"])
+    req.preempts = int(meta["preempts"])
+    req.submit_seq = meta["submit_seq"]
+    req.submit_tick = meta["submit_tick"]
+    req.first_token_tick = meta["first_token_tick"]
+    req.deadline_miss = meta["deadline_miss"]
+    req.logits = list(logits)
+    return req
+
+
+def encode_request(req: Request) -> bytes:
+    return _pack(MSG_REQUEST, _req_meta(req), list(req.logits))
+
+
+def decode_request(blob: bytes) -> Request:
+    _, meta, arrays = _unpack(blob, expect=MSG_REQUEST)
+    with _strict("request"):
+        if len(arrays) != meta["n_logits"]:
+            raise WireError(
+                f"request framed {meta['n_logits']} logits rows, "
+                f"carried {len(arrays)}")
+        return _req_from(meta, arrays)
+
+
+# ---------------------------------------------------------------------------
+# status / token deltas
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StatusDelta:
+    """One poll's worth of per-request progress from an engine endpoint.
+
+    ``new_tokens``/``new_logits`` are the suffix appended since the
+    endpoint's previous delta for this rid (cumulative indices — a
+    migrated request continues the same stream from its new replica);
+    the remaining fields are absolute so the client-side Request can be
+    patched to match the engine-side one exactly."""
+    rid: int
+    state: str                      # pending|running|swapped|done|failed
+    new_tokens: List[int]
+    done: bool = False
+    failed: bool = False
+    preempts: int = 0
+    submit_tick: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    deadline_miss: Optional[bool] = None
+    new_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+def encode_status(delta: StatusDelta) -> bytes:
+    meta = {
+        "rid": delta.rid,
+        "state": delta.state,
+        "new_tokens": [int(t) for t in delta.new_tokens],
+        "done": delta.done,
+        "failed": delta.failed,
+        "preempts": delta.preempts,
+        "submit_tick": delta.submit_tick,
+        "first_token_tick": delta.first_token_tick,
+        "deadline_miss": delta.deadline_miss,
+        "n_logits": len(delta.new_logits),
+    }
+    return _pack(MSG_STATUS, meta, list(delta.new_logits))
+
+
+def decode_status(blob: bytes) -> StatusDelta:
+    _, meta, arrays = _unpack(blob, expect=MSG_STATUS)
+    with _strict("status"):
+        if len(arrays) != meta["n_logits"]:
+            raise WireError(
+                f"status framed {meta['n_logits']} logits rows, "
+                f"carried {len(arrays)}")
+        return StatusDelta(
+            rid=meta["rid"], state=meta["state"],
+            new_tokens=list(meta["new_tokens"]),
+            done=bool(meta["done"]), failed=bool(meta["failed"]),
+            preempts=int(meta["preempts"]),
+            submit_tick=meta["submit_tick"],
+            first_token_tick=meta["first_token_tick"],
+            deadline_miss=meta["deadline_miss"],
+            new_logits=arrays)
+
+
+# ---------------------------------------------------------------------------
+# swap snapshot (cross-replica migration payload)
+# ---------------------------------------------------------------------------
+
+def encode_snapshot(sw: SwappedRequest) -> bytes:
+    if sw.spill_step is not None:
+        raise WireError(
+            "spilled snapshot: re-materialize (unspill) before wiring — "
+            "a checkpoint step id is meaningless on another replica")
+    meta = {
+        "req": _req_meta(sw.req),
+        "prefill_done": sw.prefill_done,
+        "order": sw.order,
+        "pos": sw.pos,
+        "last_token": sw.last_token,
+        "n_pages": sw.n_pages,
+        "n_max": sw.n_max,
+        "growth_due": sw.growth_due,
+        "nbytes": sw.nbytes,
+        "n_pool": len(sw.pool_rows),
+        "n_slot": len(sw.slot_rows),
+    }
+    arrays = list(sw.req.logits) + [np.asarray(a) for a in sw.pool_rows] \
+        + [np.asarray(a) for a in sw.slot_rows]
+    return _pack(MSG_SNAPSHOT, meta, arrays)
+
+
+def decode_snapshot(blob: bytes) -> SwappedRequest:
+    _, meta, arrays = _unpack(blob, expect=MSG_SNAPSHOT)
+    with _strict("snapshot"):
+        rq = meta["req"]
+        want = rq["n_logits"] + meta["n_pool"] + meta["n_slot"]
+        if len(arrays) != want:
+            raise WireError(f"snapshot framed {want} arrays, "
+                            f"carried {len(arrays)}")
+        n_lg = rq["n_logits"]
+        req = _req_from(rq, arrays[:n_lg])
+        pool_rows = arrays[n_lg:n_lg + meta["n_pool"]]
+        slot_rows = arrays[n_lg + meta["n_pool"]:]
+        return SwappedRequest(
+            req=req, prefill_done=int(meta["prefill_done"]),
+            order=int(meta["order"]), pos=int(meta["pos"]),
+            last_token=int(meta["last_token"]),
+            n_pages=int(meta["n_pages"]), n_max=int(meta["n_max"]),
+            growth_due=int(meta["growth_due"]),
+            pool_rows=pool_rows, slot_rows=slot_rows,
+            nbytes=int(meta["nbytes"]))
+
+
+# ---------------------------------------------------------------------------
+# endpoint stats (control plane)
+# ---------------------------------------------------------------------------
+
+def encode_stats(stats: Dict[str, Any]) -> bytes:
+    return _pack(MSG_STATS, dict(stats), [])
+
+
+def decode_stats(blob: bytes) -> Dict[str, Any]:
+    _, meta, arrays = _unpack(blob, expect=MSG_STATS)
+    if arrays:
+        raise WireError("stats messages carry no arrays")
+    return meta

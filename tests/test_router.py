@@ -1,0 +1,392 @@
+"""Replica router: wire-boundary session tier over N engine replicas.
+
+What must hold (the router inherits the repo's bit-exactness
+discipline):
+
+  * a 1-replica router is BIT-identical — tokens AND per-token logits —
+    to a bare ServingEngine serving the same requests at uniform
+    priority, for every routing policy (they all degenerate to
+    replica 0);
+  * the wire boundary really decouples: the engine-side Request is a
+    decoded COPY, never the client's object, yet the client handle sees
+    every token/terminal/deadline field the engine stamped;
+  * routing policy: prefix-affinity co-locates shared-prefix prompts on
+    one replica (and that replica's engine actually admits them shared),
+    least-loaded spreads disjoint prompts evenly, random is seeded and
+    reproducible;
+  * cross-replica migration: a request parked on a saturated replica
+    moves — as a wire swap snapshot — to a replica with capacity, and
+    its token/logits stream resumes BIT-for-bit vs a roomy single-engine
+    reference;
+  * lifecycle: stream()/result() drive all replicas, drain() closes the
+    router, duplicate rids are rejected;
+  * the engine-level export/import seam round-trips through wire bytes
+    bit-exactly on its own;
+  * an 8-device subprocess leg runs a 2-replica router with BOTH
+    replicas' pools page-striped over the mesh.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, init_params
+from repro.serve import (Request, Router, RouterConfig, ServeConfig,
+                         ServingEngine)
+from repro.serve import wire
+
+GQA = ArchConfig(name="rt", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(cfg, jax.random.PRNGKey(0))
+    return _PARAMS[cfg.name]
+
+
+def _prompts(sizes, seed=0, vocab=99):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=n).tolist() for n in sizes]
+
+
+def _reference(cfg, sc, prompts):
+    """Roomy bare-engine run: rid -> (tokens, stacked logits)."""
+    eng = ServingEngine(cfg, _params(cfg), sc)
+    hs = [eng.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    eng.drain()
+    return {h.req.rid: (list(h.req.out_tokens), np.stack(h.req.logits))
+            for h in hs}
+
+
+def _sc(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", 32)
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("record_logits", True)
+    return ServeConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity and the wire boundary
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("routing", ["affinity", "least_loaded", "random"])
+def test_one_replica_router_bit_identical_to_bare_engine(routing):
+    prompts = _prompts((7, 12, 5, 20))
+    ref = _reference(GQA, _sc(), prompts)
+    router = Router(GQA, _params(GQA), _sc(),
+                    RouterConfig(replicas=1, routing=routing))
+    hs = [router.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    router.drain()
+    for h in hs:
+        toks, lgts = ref[h.req.rid]
+        assert h.req.out_tokens == toks
+        np.testing.assert_array_equal(np.stack(h.req.logits), lgts)
+        assert h.status == "done"
+        assert h.req.submit_tick is not None
+        assert h.req.first_token_tick is not None
+
+
+def test_wire_boundary_decouples_client_and_engine_request():
+    prompts = _prompts((6, 9))
+    router = Router(GQA, _params(GQA), _sc(), RouterConfig(replicas=1))
+    hs = [router.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    ep = router.replicas[0]
+    # the replica admitted decoded COPIES: same rid, different object.
+    for h in hs:
+        eng_req = ep._reqs[h.req.rid]
+        assert eng_req is not h.req
+        assert eng_req.prompt == h.req.prompt
+    router.drain()
+    # ...yet the client copy ends bit-identical to the engine copy.
+    for eng_req in router.replicas[0].eng.completed:
+        client = next(h.req for h in hs if h.req.rid == eng_req.rid)
+        assert client.out_tokens == eng_req.out_tokens
+        assert client.preempts == eng_req.preempts
+        assert client.submit_tick == eng_req.submit_tick
+        assert client.first_token_tick == eng_req.first_token_tick
+        for a, b in zip(client.logits, eng_req.logits):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_handle_stream_and_result_drive_all_replicas():
+    prompts = _prompts((5, 8, 11))
+    ref = _reference(GQA, _sc(), prompts)
+    router = Router(GQA, _params(GQA), _sc(), RouterConfig(replicas=2))
+    hs = [router.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    streamed = list(hs[0].stream())
+    assert streamed == ref[0][0]
+    for h in hs[1:]:
+        assert h.result().out_tokens == ref[h.req.rid][0]
+    assert all(h.status == "done" for h in hs)
+
+
+def test_router_lifecycle_errors():
+    router = Router(GQA, _params(GQA), _sc(), RouterConfig(replicas=2))
+    router.submit(Request(rid=0, prompt=[1, 2, 3]))
+    with pytest.raises(ValueError, match="duplicate rid"):
+        router.submit(Request(rid=0, prompt=[4, 5]))
+    router.drain()
+    with pytest.raises(RuntimeError, match="closed"):
+        router.submit(Request(rid=1, prompt=[1, 2]))
+    with pytest.raises(ValueError, match="RouterConfig.replicas"):
+        RouterConfig(replicas=0)
+    with pytest.raises(ValueError, match="RouterConfig.routing"):
+        RouterConfig(routing="sticky")
+
+
+# ---------------------------------------------------------------------------
+# routing policy
+# ---------------------------------------------------------------------------
+
+def test_affinity_colocates_shared_prefixes_and_engine_shares():
+    # two prompt families, each sharing a whole-page prefix.
+    rng = np.random.default_rng(3)
+    fam_a = rng.integers(1, 99, size=16).tolist()
+    fam_b = rng.integers(1, 99, size=16).tolist()
+    prompts, fam = [], []
+    for i in range(3):
+        prompts.append(fam_a + rng.integers(1, 99, size=2 + i).tolist())
+        fam.append("a")
+        prompts.append(fam_b + rng.integers(1, 99, size=2 + i).tolist())
+        fam.append("b")
+    sc = _sc(max_batch=4, page_size=16, prefix_sharing=True)
+    ref = _reference(GQA, sc, prompts)
+    router = Router(GQA, _params(GQA), _sc(max_batch=4, page_size=16,
+                                           prefix_sharing=True),
+                    RouterConfig(replicas=2, routing="affinity"))
+    # family leaders first; let their prompts materialize so the
+    # repeats are admitted against resident, shareable pages.
+    hs = [router.submit(Request(rid=i, prompt=prompts[i]))
+          for i in range(2)]
+    router.tick()
+    router.tick()
+    hs += [router.submit(Request(rid=i, prompt=prompts[i]))
+           for i in range(2, len(prompts))]
+    router.drain()
+    # each family lands whole on one replica...
+    homes = {f: {router._home[h.req.rid]
+                 for h, ff in zip(hs, fam) if ff == f} for f in "ab"}
+    assert len(homes["a"]) == 1 and len(homes["b"]) == 1
+    # ...affinity registered the repeats as hits...
+    assert router.n_prefix_hits >= 4
+    # ...and the owning engines actually admitted them prefix-shared.
+    assert sum(ep.eng.n_shared_admissions for ep in router.replicas) >= 4
+    # routing never costs correctness.
+    for h in hs:
+        assert h.req.out_tokens == ref[h.req.rid][0]
+
+
+def test_least_loaded_spreads_disjoint_prompts():
+    prompts = _prompts((6, 7, 8, 9), seed=5)
+    router = Router(GQA, _params(GQA), _sc(),
+                    RouterConfig(replicas=2, routing="least_loaded"))
+    for i, p in enumerate(prompts):
+        router.submit(Request(rid=i, prompt=p))
+    assert router.assigned == [2, 2]
+    router.drain()
+    assert len(router.completed) == 4
+
+
+def test_random_routing_is_seeded():
+    prompts = _prompts((6, 7, 8, 9, 10, 11), seed=6)
+    picks = []
+    for _ in range(2):
+        router = Router(GQA, _params(GQA), _sc(max_batch=4),
+                        RouterConfig(replicas=3, routing="random", seed=7))
+        for i, p in enumerate(prompts):
+            router.submit(Request(rid=i, prompt=p))
+        picks.append([router._home[i] for i in range(len(prompts))])
+        router.drain()
+    assert picks[0] == picks[1]
+
+
+# ---------------------------------------------------------------------------
+# cross-replica migration
+# ---------------------------------------------------------------------------
+
+def _tight_sc(num_pages):
+    return _sc(max_new_tokens=12, page_size=4, num_pages=num_pages,
+               reserve_decode_pages=False, preemption="swap")
+
+
+def test_migration_resumes_bit_for_bit():
+    # a shared first page steers ALL requests to replica 0 (affinity);
+    # its 6-page pool then can't hold three growing requests, one gets
+    # swapped out, and replica 0 can never re-admit it (need > free) —
+    # while replica 1 sits empty.  The router must move the snapshot.
+    rng = np.random.default_rng(1)
+    shared = rng.integers(1, 99, size=4).tolist()
+    prompts = [shared + rng.integers(1, 99, size=8).tolist()
+               for _ in range(3)]
+    ref = _reference(GQA, _tight_sc(num_pages=None), prompts)
+
+    router = Router(GQA, _params(GQA), _tight_sc(num_pages=7),
+                    RouterConfig(replicas=2, routing="affinity"))
+    hs = [router.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    router.drain()
+    assert router.assigned == [3, 0], "affinity must pile on replica 0"
+    assert router.n_migrations >= 1, "saturation must trigger migration"
+    migrated = [rid for rid, home in router._home.items() if home == 1]
+    assert migrated, "a migrated request must now be homed on replica 1"
+    for h in hs:
+        toks, lgts = ref[h.req.rid]
+        assert h.req.out_tokens == toks
+        np.testing.assert_array_equal(np.stack(h.req.logits), lgts)
+        assert h.status == "done"
+    # the mover kept its preemption scar: it was swapped at least once.
+    assert all(h.req.preempts >= 1 for h in hs if h.req.rid in migrated)
+
+
+def test_migration_disabled_stays_home():
+    rng = np.random.default_rng(1)
+    shared = rng.integers(1, 99, size=4).tolist()
+    prompts = [shared + rng.integers(1, 99, size=8).tolist()
+               for _ in range(3)]
+    ref = _reference(GQA, _tight_sc(num_pages=None), prompts)
+    router = Router(GQA, _params(GQA), _tight_sc(num_pages=9),
+                    RouterConfig(replicas=2, routing="affinity",
+                                 migrate=False))
+    hs = [router.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    router.drain()
+    assert router.n_migrations == 0
+    assert all(home == 0 for home in router._home.values())
+    for h in hs:   # no migration still finishes correctly (swap cycles)
+        assert h.req.out_tokens == ref[h.req.rid][0]
+
+
+def test_engine_export_import_roundtrips_through_wire():
+    # the seam under the router: park a request via preemption on engine
+    # A, export -> wire bytes -> import into engine B, finish it there;
+    # tokens/logits must match the never-preempted reference.
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, 99, size=10).tolist() for _ in range(3)]
+    ref = _reference(GQA, _tight_sc(num_pages=None), prompts)
+
+    a = ServingEngine(GQA, _params(GQA), _tight_sc(num_pages=7))
+    hs = [a.submit(Request(rid=i, prompt=p))
+          for i, p in enumerate(prompts)]
+    for _ in range(60):
+        a.tick()
+        if a.sched.swapped:
+            break
+    assert a.sched.swapped, "tight pool must have parked a request"
+
+    sw = a.export_parked()
+    blob = wire.encode_snapshot(sw)
+    sw2 = wire.decode_snapshot(blob)
+    assert sw2.req is not sw.req
+
+    b = ServingEngine(GQA, _params(GQA), _tight_sc(num_pages=None))
+    b.import_parked(sw2)
+    b.drain()
+    moved = b.completed[-1]
+    assert moved.out_tokens == ref[moved.rid][0]
+    a.drain()
+    for eng_req in a.completed:
+        assert eng_req.out_tokens == ref[eng_req.rid][0]
+        np.testing.assert_array_equal(np.stack(eng_req.logits),
+                                      ref[eng_req.rid][1])
+    np.testing.assert_array_equal(np.stack(moved.logits), ref[moved.rid][1])
+
+
+def test_import_parked_guards():
+    a = ServingEngine(GQA, _params(GQA), _tight_sc(num_pages=7))
+    rng = np.random.default_rng(2)
+    for i in range(3):
+        a.submit(Request(rid=i, prompt=rng.integers(1, 99, 10).tolist()))
+    for _ in range(60):
+        a.tick()
+        if a.sched.swapped:
+            break
+    sw = a.export_parked()
+    assert sw is not None
+    # a closed engine refuses imports.
+    done = ServingEngine(GQA, _params(GQA), _tight_sc(num_pages=None))
+    done.drain()
+    with pytest.raises(RuntimeError, match="closed"):
+        done.import_parked(sw)
+    # a pool too small for the snapshot refuses it loudly.
+    tiny = ServingEngine(GQA, _params(GQA), _sc(
+        max_new_tokens=12, page_size=4, num_pages=2,
+        reserve_decode_pages=False, preemption="swap"))
+    with pytest.raises(ValueError, match="pages"):
+        tiny.import_parked(sw)
+
+
+# ---------------------------------------------------------------------------
+# sharded replicas (8 host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARD_BODY = r"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models import ArchConfig, init_params
+    from repro.serve import Request, Router, RouterConfig, ServeConfig, \
+        ServingEngine
+    from repro.distributed.sharding import use_rules
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = ArchConfig(name="rt8", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                     decode_margin=32, dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 99, size=n).tolist() for n in (7, 12, 5, 20)]
+
+    def sc():
+        return ServeConfig(max_batch=2, max_prompt=32, max_new_tokens=8,
+                           record_logits=True)
+
+    # reference: a bare SHARDED engine under the same mesh — sharded
+    # flash combines sum in their own order, so the bitwise contract is
+    # per-path (same rule the tiered 8-dev leg applies).
+    mesh = make_test_mesh((1, 8), ('data', 'model'))
+    with use_rules(mesh, 'fsdp_sp'):
+        eng = ServingEngine(cfg, params, sc())
+        assert eng.pool_shards > 1, "pool must be striped"
+        hs = [eng.submit(Request(rid=i, prompt=p))
+              for i, p in enumerate(prompts)]
+        eng.drain()
+    ref = {h.req.rid: (list(h.req.out_tokens), np.stack(h.req.logits))
+           for h in hs}
+
+    with use_rules(mesh, 'fsdp_sp'):
+        router = Router(cfg, params, sc(),
+                        RouterConfig(replicas=2, routing="least_loaded"))
+        for ep in router.replicas:
+            assert ep.eng.pool_shards > 1, "pool must be striped"
+        hs2 = [router.submit(Request(rid=i, prompt=p))
+               for i, p in enumerate(prompts)]
+        router.drain()
+    assert router.assigned == [2, 2]
+    for h in hs2:
+        toks, lgts = ref[h.req.rid]
+        assert h.req.out_tokens == toks, h.req.rid
+        np.testing.assert_array_equal(np.stack(h.req.logits), lgts)
+    print("SUBPROC_OK")
+"""
+
+
+def test_router_sharded_replicas_subprocess():
+    code = ('import os\n'
+            'os.environ["XLA_FLAGS"] = '
+            '"--xla_force_host_platform_device_count=8"\n'
+            + textwrap.dedent(_SHARD_BODY))
+    res = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "SUBPROC_OK" in res.stdout

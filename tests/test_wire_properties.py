@@ -1,0 +1,310 @@
+"""Wire format: round-trip exactness and strict rejection.
+
+Two layers, mirroring the allocator-walker pattern: seeded round-trip
+and rejection tests ALWAYS run; hypothesis-driven twins explore
+adversarial payloads and corruptions when the library is installed
+(CI: requirements-dev.txt).
+
+The properties:
+
+  * every message kind round-trips BIT-exactly — scalar fields equal,
+    every array (f32 logits rows, packed int8/int4 page rows, f32 scale
+    leaves, bfloat16 pools) bitwise identical with dtype and shape
+    preserved;
+  * decoding is strict — wrong magic, any version other than
+    WIRE_VERSION, wrong kind for the typed decoder, truncation at ANY
+    byte, trailing garbage, and array-size lies all raise WireError
+    (never a partial parse, never a struct.error leak);
+  * a spilled snapshot refuses to encode (the wire carries bytes, not
+    checkpoint step ids).
+"""
+import importlib.util
+import struct
+
+import numpy as np
+import pytest
+
+import ml_dtypes
+
+from repro.serve import wire
+from repro.serve.config import Request
+from repro.serve.scheduler import SwappedRequest
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+# ---------------------------------------------------------------------------
+# builders + equality
+# ---------------------------------------------------------------------------
+
+def _mk_request(rng, n_logits=3, vocab=32):
+    req = Request(rid=int(rng.integers(0, 1 << 30)),
+                  prompt=rng.integers(1, vocab, rng.integers(1, 20)).tolist(),
+                  priority=int(rng.integers(-2, 3)),
+                  ttft_deadline=(None if rng.random() < 0.5
+                                 else int(rng.integers(1, 50))))
+    req.out_tokens = rng.integers(0, vocab, rng.integers(0, 6)).tolist()
+    req.done = bool(rng.random() < 0.2)
+    req.failed = req.done and bool(rng.random() < 0.3)
+    req.preempts = int(rng.integers(0, 4))
+    req.submit_seq = None if rng.random() < 0.3 else int(rng.integers(0, 99))
+    req.submit_tick = None if rng.random() < 0.3 else int(rng.integers(0, 99))
+    req.first_token_tick = \
+        None if rng.random() < 0.5 else int(rng.integers(0, 99))
+    req.deadline_miss = \
+        None if rng.random() < 0.5 else bool(rng.random() < 0.5)
+    req.logits = [rng.standard_normal(vocab).astype(np.float32)
+                  for _ in range(n_logits)]
+    return req
+
+
+def _assert_req_equal(a: Request, b: Request):
+    for f in ("rid", "prompt", "priority", "ttft_deadline", "out_tokens",
+              "done", "failed", "preempts", "submit_seq", "submit_tick",
+              "first_token_tick", "deadline_miss"):
+        assert getattr(a, f) == getattr(b, f), f
+    assert len(a.logits) == len(b.logits)
+    for x, y in zip(a.logits, b.logits):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(x, y)
+
+
+def _mk_snapshot(rng, quantized=False, bf16=False):
+    """A snapshot shaped like the engine's swap-outs: per pooled leaf a
+    (n_pages, page_size, ...) block — for quantized pools packed int8
+    rows PLUS an f32 scale leaf — and per slot leaf one recurrent row."""
+    n_pages, ps = int(rng.integers(1, 4)), 4
+    if quantized:
+        pool_rows = [rng.integers(-128, 128, (n_pages, ps, 2, 8),
+                                  dtype=np.int8),
+                     rng.standard_normal((n_pages, ps)).astype(np.float32)]
+    elif bf16:
+        pool_rows = [rng.standard_normal((n_pages, ps, 2, 8))
+                     .astype(ml_dtypes.bfloat16)]
+    else:
+        pool_rows = [rng.standard_normal((n_pages, ps, 2, 8))
+                     .astype(np.float32) for _ in range(2)]
+    slot_rows = [rng.standard_normal((1, 16)).astype(np.float32)]
+    return SwappedRequest(
+        req=_mk_request(rng, n_logits=int(rng.integers(0, 3))),
+        prefill_done=int(rng.integers(0, 20)),
+        order=int(rng.integers(0, 99)),
+        pos=int(rng.integers(0, 32)),
+        last_token=int(rng.integers(0, 32)),
+        n_pages=n_pages, n_max=n_pages + int(rng.integers(0, 3)),
+        growth_due=int(rng.integers(0, 2)),
+        pool_rows=pool_rows, slot_rows=slot_rows,
+        nbytes=sum(a.nbytes for a in pool_rows + slot_rows))
+
+
+def _assert_snap_equal(a: SwappedRequest, b: SwappedRequest):
+    _assert_req_equal(a.req, b.req)
+    for f in ("prefill_done", "order", "pos", "last_token", "n_pages",
+              "n_max", "growth_due", "nbytes"):
+        assert getattr(a, f) == getattr(b, f), f
+    assert b.spill_step is None
+    for xs, ys in ((a.pool_rows, b.pool_rows), (a.slot_rows, b.slot_rows)):
+        assert len(xs) == len(ys)
+        for x, y in zip(xs, ys):
+            assert x.dtype == y.dtype and x.shape == y.shape
+            assert x.tobytes() == y.tobytes()   # bitwise, dtype-agnostic
+
+
+# ---------------------------------------------------------------------------
+# seeded round trips (always run)
+# ---------------------------------------------------------------------------
+
+def test_request_roundtrip_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        req = _mk_request(rng)
+        got = wire.decode_request(wire.encode_request(req))
+        assert got is not req
+        _assert_req_equal(req, got)
+
+
+def test_status_roundtrip_seeded():
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        d = wire.StatusDelta(
+            rid=int(rng.integers(0, 99)),
+            state=str(rng.choice(["pending", "running", "swapped", "done"])),
+            new_tokens=rng.integers(0, 99, rng.integers(0, 5)).tolist(),
+            done=bool(rng.random() < 0.3),
+            failed=bool(rng.random() < 0.1),
+            preempts=int(rng.integers(0, 3)),
+            submit_tick=None if rng.random() < 0.3 else int(rng.integers(99)),
+            first_token_tick=(None if rng.random() < 0.5
+                              else int(rng.integers(99))),
+            deadline_miss=(None if rng.random() < 0.5
+                           else bool(rng.random() < 0.5)),
+            new_logits=[rng.standard_normal(32).astype(np.float32)
+                        for _ in range(rng.integers(0, 3))])
+        got = wire.decode_status(wire.encode_status(d))
+        for f in ("rid", "state", "new_tokens", "done", "failed",
+                  "preempts", "submit_tick", "first_token_tick",
+                  "deadline_miss"):
+            assert getattr(d, f) == getattr(got, f), f
+        assert len(d.new_logits) == len(got.new_logits)
+        for x, y in zip(d.new_logits, got.new_logits):
+            np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("flavor", ["fp", "quantized", "bf16"])
+def test_snapshot_roundtrip_seeded(flavor):
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        sw = _mk_snapshot(rng, quantized=flavor == "quantized",
+                          bf16=flavor == "bf16")
+        got = wire.decode_snapshot(wire.encode_snapshot(sw))
+        _assert_snap_equal(sw, got)
+
+
+def test_stats_roundtrip_and_peek():
+    stats = {"live": 3, "free_slots": 1, "parked_tail_need": None,
+             "has_work": True, "reserved_free": 7}
+    blob = wire.encode_stats(stats)
+    assert wire.decode_stats(blob) == stats
+    kind, meta = wire.peek(blob)
+    assert kind == wire.MSG_STATS and meta == stats
+
+
+def test_spilled_snapshot_refuses_to_encode():
+    rng = np.random.default_rng(3)
+    sw = _mk_snapshot(rng)
+    sw.spill_step = 17
+    with pytest.raises(wire.WireError, match="spilled"):
+        wire.encode_snapshot(sw)
+
+
+# ---------------------------------------------------------------------------
+# strict rejection (always run)
+# ---------------------------------------------------------------------------
+
+def _blob():
+    return wire.encode_request(_mk_request(np.random.default_rng(4)))
+
+
+def test_version_mismatch_rejected():
+    blob = bytearray(_blob())
+    # the u16 version sits right after the 4-byte magic.
+    for bad in (0, wire.WIRE_VERSION + 1, 0xFFFF):
+        blob[4:6] = struct.pack("<H", bad)
+        with pytest.raises(wire.WireError, match="version mismatch"):
+            wire.decode_request(bytes(blob))
+
+
+def test_bad_magic_rejected():
+    blob = b"XXXX" + _blob()[4:]
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.decode_request(blob)
+
+
+def test_wrong_kind_rejected():
+    blob = wire.encode_stats({"a": 1})
+    with pytest.raises(wire.WireError, match="expected a request"):
+        wire.decode_request(blob)
+
+
+def test_truncation_rejected_at_every_boundary():
+    blob = _blob()
+    # every strict prefix fails loudly (WireError, nothing else).
+    for cut in range(len(blob)):
+        with pytest.raises(wire.WireError):
+            wire.decode_request(blob[:cut])
+
+
+def test_trailing_bytes_rejected():
+    with pytest.raises(wire.WireError, match="trailing"):
+        wire.decode_request(_blob() + b"\x00")
+
+
+def test_array_size_lie_rejected():
+    rng = np.random.default_rng(5)
+    req = _mk_request(rng, n_logits=1)
+    blob = bytearray(wire.encode_request(req))
+    # the last 8 bytes before the final array payload are its u64
+    # nbytes frame; inflate it so it disagrees with shape x itemsize.
+    payload = req.logits[0].nbytes
+    off = len(blob) - payload - 8
+    blob[off:off + 8] = struct.pack("<Q", payload + 4)
+    with pytest.raises(wire.WireError):
+        wire.decode_request(bytes(blob))
+
+
+def test_unknown_dtype_rejected():
+    a = np.zeros(3, np.float32)
+    blob = wire._pack(wire.MSG_STATUS, {"n_logits": 1}, [a])
+    bad = blob.replace(b"float32", b"flott32")
+    with pytest.raises(wire.WireError):
+        wire._unpack(bad)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis twins (CI)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _scalars = st.integers(min_value=-(1 << 31), max_value=(1 << 31) - 1)
+
+    @st.composite
+    def _requests(draw):
+        rng = np.random.default_rng(draw(st.integers(0, 1 << 32)))
+        return _mk_request(rng, n_logits=draw(st.integers(0, 4)))
+
+    @st.composite
+    def _snapshots(draw):
+        rng = np.random.default_rng(draw(st.integers(0, 1 << 32)))
+        flavor = draw(st.sampled_from(["fp", "quantized", "bf16"]))
+        return _mk_snapshot(rng, quantized=flavor == "quantized",
+                            bf16=flavor == "bf16")
+
+    @given(_requests())
+    @settings(max_examples=50, deadline=None)
+    def test_request_roundtrip_hypothesis(req):
+        _assert_req_equal(req,
+                          wire.decode_request(wire.encode_request(req)))
+
+    @given(_snapshots())
+    @settings(max_examples=30, deadline=None)
+    def test_snapshot_roundtrip_hypothesis(sw):
+        _assert_snap_equal(sw,
+                           wire.decode_snapshot(wire.encode_snapshot(sw)))
+
+    @given(st.dictionaries(st.text(min_size=1, max_size=8),
+                           st.one_of(st.none(), st.booleans(), _scalars,
+                                     st.text(max_size=8)),
+                           max_size=6))
+    @settings(max_examples=50, deadline=None)
+    def test_stats_roundtrip_hypothesis(stats):
+        assert wire.decode_stats(wire.encode_stats(stats)) == stats
+
+    @given(st.binary(max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_garbage_never_partially_parses(junk):
+        # arbitrary bytes either fail as WireError or (vanishingly
+        # unlikely) parse completely — never raise anything else.
+        try:
+            wire._unpack(junk)
+        except wire.WireError:
+            pass
+
+    @given(st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_corrupted_message_never_leaks(data):
+        blob = bytearray(
+            wire.encode_request(_mk_request(np.random.default_rng(6))))
+        i = data.draw(st.integers(0, len(blob) - 1))
+        blob[i] ^= data.draw(st.integers(1, 255))
+        try:
+            wire.decode_request(bytes(blob))
+        except wire.WireError:
+            pass
+else:  # pragma: no cover - exercised only without hypothesis
+    @pytest.mark.skip(reason="hypothesis not installed (CI installs it "
+                             "via requirements-dev.txt)")
+    def test_wire_hypothesis_twins():
+        ...
