@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke test-sharded test-quant-pool test-tiered test-router bench-smoke bench-serve bench serve-demo
+.PHONY: test smoke test-sharded test-quant-pool test-tiered test-spec test-router bench-smoke bench-serve bench serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,6 +37,15 @@ test-quant-pool:
 # runs on a plain single-device host, mirroring test-sharded).
 test-tiered:
 	$(PY) -m pytest -x -q tests/test_tiered_pool.py
+
+# speculative-decoding leg (CI): truncate_rows rollback invariants,
+# greedy bit-identity of the draft/verify path vs plain decode (fp +
+# int8 pages, self- and foreign-draft, overcommit/tiered cycles, draft
+# pool starvation), twin decode-page sharing, and the 8-device sharded
+# + Pallas leg (that test spawns its own subprocess with XLA_FLAGS
+# set, so this also runs on a plain single-device host).
+test-spec:
+	$(PY) -m pytest -x -q tests/test_spec.py
 
 # replica-router leg (CI): the wire format (round-trip exactness +
 # strict rejection, hypothesis twins when installed) and the router

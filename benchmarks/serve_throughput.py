@@ -40,6 +40,12 @@ Measures, on host CPU, what the serving rework buys on the hot path
     aggregate throughput on disjoint traffic, and the cross-replica
     migration count on a deliberately saturated replica (> 0: parked
     work moves to idle capacity instead of queueing).
+  * speculative decoding — draft/verify rounds vs the plain engine:
+    the self-draft leg (acceptance 1.0 by construction) gates tokens
+    per engine tick at >= 1.5x plain decode on EXACT tick counts, and
+    a foreign untrained drafter prices acceptance rate and draft
+    dispatch overhead — with every leg's emitted streams asserted
+    bit-identical to the baseline.
   * mixed-priority sessions — staggered arrivals through the session API
     (``submit()``/``tick()``): deadline-critical short requests landing
     behind a queue of best-effort long prompts.  At the SAME pool
@@ -825,6 +831,109 @@ def _router(smoke: bool):
          f"migrations_saturated={router.n_migrations}")
 
 
+def _spec(smoke: bool):
+    """Speculative decoding: draft/verify rounds vs the plain engine,
+    with the emitted streams asserted bit-identical in every leg.
+
+    Two legs price the two ends of the drafter-quality spectrum:
+
+      * self-draft — the target drafts for itself, so every proposal
+        verifies (acceptance 1.0 by construction).  This is the
+        deterministic ceiling, and carries the headline GATE: tokens
+        per ENGINE TICK must be >= 1.5x the plain engine's.  Tick
+        counts are exact, so the gate holds on any backend — wall
+        tokens/s is reported alongside but never gated (on host CPU
+        the k+1-row verify dispatch costs more than it saves; the
+        wall-clock win needs real accelerator decode latency).
+      * foreign draft — an untrained 1-layer drafter: near-zero
+        acceptance prices the draft + catch-up dispatch overhead
+        honestly while the emitted streams still match the baseline
+        byte for byte (rejected rows roll back page-granular through
+        ``Allocator.truncate_rows``).
+
+    f32 params so the bit-identity assert is a BITWISE contract, same
+    as tests/test_spec.py."""
+    cfg = ArchConfig(name="thr_spec", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab_size=256, decode_margin=32, dtype=jnp.float32)
+    dcfg = ArchConfig(name="thr_spec_draft", family="dense", n_layers=1,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, decode_margin=32, dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dparams = init_params(dcfg, jax.random.PRNGKey(1))
+    max_new = 8 if smoke else 24
+    spec_k = 4
+    key = jax.random.PRNGKey(61)
+    prompts = []
+    for i in range(4 if smoke else 8):
+        key, k = jax.random.split(key)
+        ln = 5 + (i * 3) % 11
+        prompts.append([int(t) for t in
+                        jax.random.randint(k, (ln,), 0, cfg.vocab_size)])
+    base = dict(max_batch=4, max_prompt=16, max_new_tokens=max_new,
+                page_size=4, max_seq=64)
+
+    def drive(sc, draft_model=None):
+        eng = ServingEngine(cfg, params, sc, draft_model=draft_model)
+        eng.warmup()
+        t0 = time.perf_counter()
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+        dt = time.perf_counter() - t0
+        toks = {r.rid: r.out_tokens for r in out}
+        return toks, sum(len(t) for t in toks.values()), eng, dt
+
+    ref, gen, eng_p, dt_p = drive(ServeConfig(**base))
+    toks, gen_s, eng_s, dt_s = drive(
+        ServeConfig(**base, spec_draft="self", spec_k=spec_k))
+    assert toks == ref, "self-draft speculation changed the stream"
+    st_s = eng_s.spec_stats()
+    assert st_s["acceptance_rate"] == 1.0, \
+        "self-draft must accept every proposal (it IS the target)"
+    tpt_plain = gen / eng_p.tick_no
+    tpt_spec = gen_s / eng_s.tick_no
+    speedup = tpt_spec / tpt_plain
+    assert speedup >= 1.5, \
+        f"self-draft k={spec_k} must land >= 1.5x tokens per engine " \
+        f"tick over plain decode, got {speedup:.2f}x " \
+        f"({eng_p.tick_no} -> {eng_s.tick_no} ticks)"
+
+    toks, _, eng_f, dt_f = drive(
+        ServeConfig(**base, spec_draft="self", spec_k=spec_k),
+        draft_model=(dcfg, dparams))
+    assert toks == ref, "rejected foreign drafts must roll back cleanly"
+    st_f = eng_f.spec_stats()
+    # extra drafter forwards (propose + catch-up) per emitted token: the
+    # price of speculating, paid whether or not the drafts land.
+    overhead_f = (st_f["draft_dispatches"]
+                  + st_f["catchup_dispatches"]) / gen
+    _BENCH["spec"] = {
+        "spec_k": spec_k,
+        "gen_tokens": gen,
+        "ticks_plain": eng_p.tick_no,
+        "ticks_self_draft": eng_s.tick_no,
+        "tok_per_tick_plain": round(tpt_plain, 3),
+        "tok_per_tick_self_draft": round(tpt_spec, 3),
+        "tick_speedup_self_draft": round(speedup, 2),
+        "acceptance_self_draft": round(st_s["acceptance_rate"], 3),
+        "acceptance_foreign_draft": round(st_f["acceptance_rate"], 3),
+        "draft_dispatch_per_token_foreign": round(overhead_f, 3),
+        "tok_per_s_plain": round(gen / dt_p, 1),
+        "tok_per_s_self_draft": round(gen_s / dt_s, 1),
+        "tok_per_s_foreign_draft": round(gen / dt_f, 1),
+        "identical_tokens": 1,
+    }
+    emit("serve/spec_speedup", speedup,
+         f"tick_speedup={speedup:.2f}x;spec_k={spec_k};"
+         f"ticks_plain={eng_p.tick_no};ticks_spec={eng_s.tick_no};"
+         f"acceptance=1.00;tok_per_s_plain={gen / dt_p:.1f};"
+         f"tok_per_s_spec={gen_s / dt_s:.1f};identical_tokens=1")
+    emit("serve/spec_acceptance", st_f["acceptance_rate"] * 100,
+         f"acceptance_foreign={st_f['acceptance_rate']:.2f};"
+         f"draft_dispatch_per_token={overhead_f:.2f};"
+         f"spec_rounds={st_f['spec_rounds']};"
+         f"tok_per_s_foreign={gen / dt_f:.1f};identical_tokens=1")
+
+
 def run(smoke: bool = False):
     quants = [("bf16", None)] if smoke else \
         [("bf16", None),
@@ -852,6 +961,7 @@ def run(smoke: bool = False):
             _quantized_pool(smoke=True)
             _tiered(smoke=True)
             _router(smoke=True)
+            _spec(smoke=True)
             continue
         for bsz in (1, 2, 4):
             # contiguous layout here: the TTFT probes time the contiguous
@@ -885,14 +995,20 @@ def run(smoke: bool = False):
         _quantized_pool(smoke=False)
         _tiered(smoke=False)
         _router(smoke=False)
+        _spec(smoke=False)
     _write_bench_json(smoke)
 
 
 def _write_bench_json(smoke: bool) -> None:
     """Persist the headline metrics as BENCH_serve.json (repo root, or
     the BENCH_SERVE_JSON env var) — the artifact CI uploads."""
+    # environment fingerprint for bench_diff.py: hostname-independent on
+    # purpose (CI runners churn) — backend/version/device-kind is what
+    # actually decides whether two artifacts' timings are comparable.
     _BENCH["meta"] = {"smoke": smoke, "backend": jax.default_backend(),
-                      "device_count": jax.device_count()}
+                      "device_count": jax.device_count(),
+                      "jax_version": jax.__version__,
+                      "device_kind": jax.devices()[0].device_kind}
     if jax.default_backend() != "tpu":
         _BENCH["meta"]["pallas_note"] = (
             "off-TPU the pallas decode numbers run the kernel under the "

@@ -1,0 +1,104 @@
+"""Speculative decoding on the session engine — draft/verify rounds
+with page-granular rollback, bit-identical to plain greedy decode.
+
+A drafter (a second, cheaper model with its OWN paged cache and page
+pool) proposes k greedy tokens per engine tick; the target model scores
+all k+1 candidate positions in ONE verify dispatch; the longest prefix
+the target agrees with commits, and the pages holding rejected rows
+roll back through ``Allocator.truncate_rows``.  The contract this
+example demonstrates:
+
+  * BIT-IDENTITY — whatever the drafter proposes, the emitted token
+    streams are byte-for-byte the plain engine's.  Speculation changes
+    how many engine ticks a stream costs, never its content.
+  * FEWER TICKS — with a well-matched drafter, k accepted drafts + 1
+    verified token land per tick instead of 1.  The 'self' drafter
+    (the target drafts for itself) shows the ceiling: acceptance 1.0,
+    ~(k+1)x fewer decode ticks.
+  * GRACEFUL DEGRADATION — a mismatched drafter just lowers the
+    acceptance rate; a starved draft pool turns slots back into plain
+    one-token-per-tick decode (counted, never corrupting).
+
+    PYTHONPATH=src python examples/speculative_serving.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+
+TARGET = ArchConfig(name="spec_target", family="dense", n_layers=4,
+                    d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                    vocab_size=512, decode_margin=32, dtype=jnp.float32)
+DRAFT = ArchConfig(name="spec_draft", family="dense", n_layers=1,
+                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                   vocab_size=512, decode_margin=32, dtype=jnp.float32)
+
+MAX_NEW = 24
+BASE = dict(max_batch=4, max_prompt=16, max_new_tokens=MAX_NEW,
+            page_size=4, max_seq=64)
+
+
+def fleet(prompts, sc, draft_model=None):
+    eng = ServingEngine(TARGET, PARAMS, sc, draft_model=draft_model)
+    done = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    return {r.rid: list(r.out_tokens) for r in done}, eng, \
+        {r.rid: r for r in done}
+
+
+if __name__ == "__main__":
+    PARAMS = init_params(TARGET, jax.random.PRNGKey(0))
+    DPARAMS = init_params(DRAFT, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 511, size=n).tolist()
+               for n in (6, 11, 9, 14)]
+
+    def per_request(reqs):
+        for rid in sorted(reqs):
+            r = reqs[rid]
+            rate = (r.spec_accepted / r.spec_drafted
+                    if r.spec_drafted else 0.0)
+            print(f"  req {rid}: {len(r.prompt)} prompt -> "
+                  f"{len(r.out_tokens)} tokens, acceptance {rate:.2f} "
+                  f"({r.spec_accepted}/{r.spec_drafted} drafts)")
+
+    print("=== plain greedy decode (baseline) ===")
+    base_toks, base_eng, _ = fleet(prompts, ServeConfig(**BASE))
+    print(f"{sum(len(t) for t in base_toks.values())} tokens "
+          f"in {base_eng.tick_no} engine ticks\n")
+
+    print("=== self-draft (the determinism showcase: acceptance 1.0) ===")
+    toks, eng, reqs = fleet(prompts, ServeConfig(**BASE, spec_draft="self",
+                                                 spec_k=4))
+    assert toks == base_toks, "speculation must never change the stream"
+    print(f"{sum(len(t) for t in toks.values())} tokens "
+          f"in {eng.tick_no} engine ticks "
+          f"({base_eng.tick_no / eng.tick_no:.1f}x fewer), "
+          "fleet tokens identical to baseline")
+    per_request(reqs)
+
+    print("\n=== separate draft model (untrained: low acceptance) ===")
+    toks, eng, reqs = fleet(prompts, ServeConfig(**BASE, spec_draft="self",
+                                                 spec_k=4),
+                            draft_model=(DRAFT, DPARAMS))
+    assert toks == base_toks, "rejected drafts roll back without a trace"
+    print(f"{sum(len(t) for t in toks.values())} tokens "
+          f"in {eng.tick_no} engine ticks — an untrained drafter wastes "
+          "verify rows but corrupts nothing")
+    per_request(reqs)
+
+    print("\n=== starved draft pool (degrades, never corrupts) ===")
+    toks, eng, reqs = fleet(prompts, ServeConfig(**BASE, spec_draft="self",
+                                                 spec_k=4,
+                                                 spec_draft_pages=8))
+    assert toks == base_toks
+    print(f"spec_disabled={eng.tier_stats()['spec_disabled']} slots fell "
+          f"back to plain decode; streams still bit-identical "
+          f"({eng.tick_no} ticks)")
+    per_request(reqs)

@@ -40,6 +40,18 @@ def main():
                     help="KV pool page storage: 0 = model dtype (the "
                     "bit-exact default), 8/4 = int8/int4 pages with "
                     "per-row scales (ServeConfig.kv_format)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="speculative decoding: 'self' (the target "
+                    "drafts for itself — the deterministic showcase) or "
+                    "an arch name whose REDUCED config drafts; emitted "
+                    "tokens stay bit-identical to plain greedy decode")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per engine tick, all "
+                    "verified in one dispatch (--spec-draft)")
+    ap.add_argument("--spec-draft-pages", type=int, default=None,
+                    help="draft pool page budget; too few degrades "
+                    "slots to plain decode instead of failing "
+                    "(--spec-draft)")
     ap.add_argument("--ttft-deadline", type=int, default=8,
                     help="deadline (engine ticks) stamped on the "
                     "high-priority half of the requests")
@@ -86,7 +98,9 @@ def main():
     kv_format = "fp" if args.kv_bits == 0 else f"int{args.kv_bits}"
     sc = ServeConfig(max_batch=args.max_batch, max_prompt=32,
                      max_new_tokens=args.max_new_tokens,
-                     kv_format=kv_format)
+                     kv_format=kv_format, spec_draft=args.spec_draft,
+                     spec_k=args.spec_k,
+                     spec_draft_pages=args.spec_draft_pages)
     if args.replicas > 1:
         sess = Router(cfg, params, sc,
                       RouterConfig(replicas=args.replicas,
@@ -134,6 +148,16 @@ def main():
     else:
         print(f"deadline ledger: {sess.sched.deadline_hits} hit / "
               f"{sess.sched.deadline_misses} miss")
+    if args.spec_draft:
+        engines = ([r.eng for r in sess.replicas] if args.replicas > 1
+                   else [sess])
+        for i, eng in enumerate(engines):
+            st = eng.spec_stats()
+            tag = f"replica {i}: " if args.replicas > 1 else ""
+            print(f"spec {tag}{st['spec_rounds']} rounds, "
+                  f"{st['draft_accepted']}/{st['draft_tokens']} drafts "
+                  f"accepted ({st['acceptance_rate']:.2f}), "
+                  f"{st['spec_disabled']} slots degraded")
 
 
 if __name__ == "__main__":

@@ -282,6 +282,46 @@ def _decode_attention_local(q, k_loc, v_loc, k0, kv_valid, seq_axes,
     return out.reshape(b, sq, hq, v_loc.shape[-1]).astype(q.dtype)
 
 
+def _verify_attention_local(q, k_all, v_all, q0, kv_valid, kv_ok=None):
+    """Speculative-VERIFY attention: score a block of candidate rows with
+    the decode step's OWN computation, one query row at a time.
+
+    q: (B, Sq, H, dh) — the k+1 verify rows of each slot, global positions
+    ``q0[b] + i``; k_all/v_all: (B, Skv, KV, dh) the slot-ordered logical
+    window (the caller has already scattered the candidate rows in);
+    q0/kv_valid: (B,) int32.
+
+    Row ``i`` is :func:`_decode_attention_local` at Sq=1 with validity
+    ``min(q0 + i + 1, kv_valid)`` — exactly the ``pos + 1`` a plain
+    decode step at position ``q0 + i`` would pass.  The rows go through
+    ``lax.map``, NOT one batched (B, Sq, ...) score: XLA reassociates
+    the key-axis max/sum reductions differently for different Sq shapes
+    (observed: 1-ulp logit drift once ~25 keys are live on the CPU
+    backend, even with the op order written out identically), and the
+    speculative bit-identity contract needs the verify logits at every
+    accepted position to be BITWISE the plain decode logits.  Sharing
+    the Sq=1 computation makes that hold by construction instead of by
+    op-order mirroring.  (:func:`_resume_attention_local` is softmax-
+    then-weight — a bitwise DIFFERENT op order — which is why verify
+    does not reuse it on the replicated pool; the striped pool's
+    per-page partials share one shard_map body with decode and need no
+    twin.)
+
+    Inactive slots (kv_valid 0) hit the decode path's fully-masked-row
+    case and contribute zeros.  kv_ok: optional (B, Skv) residency mask,
+    passed straight through to the decode computation.
+    """
+    def row(i):
+        o = _decode_attention_local(
+            jax.lax.dynamic_slice_in_dim(q, i, 1, axis=1),
+            k_all, v_all, jnp.int32(0),
+            jnp.minimum(q0 + i + 1, kv_valid), (), kv_ok=kv_ok)
+        return o[:, 0]
+
+    out = jax.lax.map(row, jnp.arange(q.shape[1], dtype=jnp.int32))
+    return jnp.moveaxis(out, 0, 1)
+
+
 def _seq_axes_info():
     """(mesh, seq mesh axes tuple) if seq is sharded under current rules."""
     mesh = current_mesh()
@@ -613,6 +653,47 @@ def _paged_resume(q, k, v, cache, pages, t, ok, off_b, len_b):
                                       off_b + len_b, mesh, axes, fmt)
 
 
+def _paged_verify(q, k, v, cache, pages, t, ok, off_b, len_b):
+    """Speculative VERIFY against the paged pool: scatter the candidate
+    rows at [offset, offset + len), then score every row with DECODE-
+    order numerics.
+
+    The shape is :func:`_paged_resume`'s; the numerics are
+    :func:`_paged_decode`'s.  On the STRIPED pool the two already share
+    one shard_map body (per-page flash partials + the pmax/psum combine,
+    parameterized only by per-row query positions), so verify delegates
+    to it exactly like resume does and is bitwise the decode path row by
+    row.  Only the REPLICATED pool needs a dedicated scorer
+    (:func:`_verify_attention_local`), because there resume uses the
+    softmax-order local path while decode uses flash order."""
+    fmt = cache_page_format(cache, q.shape[-1])
+    mesh, axes = paged_pool_axes(cache["k"].shape[0])
+    if mesh is None:
+        if fmt is None:
+            new_cache = {"k": paged_scatter(cache["k"], pages, k, t, ok),
+                         "v": paged_scatter(cache["v"], pages, v, t, ok)}
+            kw = paged_gather(new_cache["k"], pages)
+            vw = paged_gather(new_cache["v"], pages)
+        else:
+            pk, pks = paged_scatter_quant(cache["k"], cache["k_scale"],
+                                          pages, k, t, ok, fmt)
+            pv, pvs = paged_scatter_quant(cache["v"], cache["v_scale"],
+                                          pages, v, t, ok, fmt)
+            new_cache = {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs}
+            kw = paged_gather_quant(pk, pks, pages, fmt, q.dtype)
+            vw = paged_gather_quant(pv, pvs, pages, fmt, q.dtype)
+        o = _verify_attention_local(
+            q, kw, vw, off_b, off_b + len_b,
+            kv_ok=page_resident_rows(pages, cache["k"].shape[1]))
+        return o, new_cache
+    qpos = off_b[:, None] + jnp.arange(q.shape[1], dtype=jnp.int32)[None]
+    if fmt is None:
+        return _paged_flash_striped(cache, pages, k, v, q, t, ok, qpos,
+                                    off_b + len_b, mesh, axes)
+    return _paged_flash_striped_quant(cache, pages, k, v, q, t, ok, qpos,
+                                      off_b + len_b, mesh, axes, fmt)
+
+
 def _batch_spec(mesh, b: int):
     """Batch mesh axes, or None when the batch doesn't divide them."""
     spec = make_spec(("batch",))
@@ -747,7 +828,10 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
     """Full attention sublayer: QKV proj, RoPE, SDPA, out proj.
 
     mode: 'train' (no cache), 'prefill' (emit cache), 'decode' (use cache),
-    'chunk' (single-pass chunked prefill into an existing slot'd cache).
+    'chunk' (single-pass chunked prefill into an existing slot'd cache),
+    'verify' (speculative draft verification: like a resumable chunk, but
+    scored with decode-order numerics so each row's logits are bitwise a
+    plain decode step's at that position; requires pages + offset).
     pos: scalar int32 — first position of ``x`` in the sequence; in 'chunk'
     mode a (B,) vector of valid prompt lengths (0 = inactive slot) for a
     right-padded chunk whose tokens sit at positions [0, len); in 'decode'
@@ -775,7 +859,7 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
     off_b = None
-    if mode == "chunk" and offset is not None:
+    if mode in ("chunk", "verify") and offset is not None:
         off_b = broadcast_offset(offset, b)
         positions = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     elif mode == "chunk":
@@ -849,6 +933,19 @@ def apply_attention(p: dict, x: jax.Array, cfg, *, cache: Optional[dict],
                 "v": sharded_paged_scatter(cache["v"], pages, v, t, ok)}
         else:
             new_cache = cache_fill(cache, k, v, pos)
+    elif mode == "verify":
+        # speculative draft/verify: the chunk rows are the slot's last
+        # committed token + k draft proposals at rows [offset, offset+len);
+        # every row is scored with DECODE-order numerics under its own
+        # causal mask, so the logits at any accepted position are bitwise
+        # what a plain decode step there would have produced.
+        if pages is None or off_b is None:
+            raise ValueError("mode='verify' needs a paged cache and offsets")
+        len_b = chunk_lengths(pos, b)
+        ok = chunk_valid_mask(len_b, s)
+        t = off_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        o, new_cache = _paged_verify(q, k, v, cache, pages, t, ok,
+                                     off_b, len_b)
     elif mode == "decode":
         assert s == 1
         if pages is not None:

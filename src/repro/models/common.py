@@ -155,6 +155,17 @@ def broadcast_offset(offset, batch: int) -> jax.Array:
         jnp.atleast_1d(jnp.asarray(offset, jnp.int32)), (batch,))
 
 
+def verify_greedy_tokens(logits: jax.Array) -> jax.Array:
+    """(B, S) greedy token per row of a (B, S, V) speculative-VERIFY
+    logits block, argmaxed in f32 — the engine's temperature-0 sampler
+    numerics exactly (same upcast, same lowest-index tie break), so a
+    draft-vs-target acceptance comparison is decided by the very argmax
+    plain greedy decode would have emitted.  The single change point for
+    multi-token verify gathering: the serving engine and the drafter
+    both read proposals/verdicts through this."""
+    return jnp.argmax(logits.astype(jnp.float32), axis=-1)
+
+
 def contig_scatter(buf: jax.Array, rows: jax.Array, t: jax.Array,
                    valid: jax.Array) -> jax.Array:
     """Scatter per-slot rows into a CONTIGUOUS (B, cap, *rest) cache at

@@ -147,6 +147,60 @@ pool — the two-tier contract:
     snapshots through the checkpoint layer (``spill_dir``) instead of
     denying swaps.
 
+``ServeConfig.spec_draft`` turns a slot's decode loop into SPECULATIVE
+DECODING (:mod:`repro.serve.spec`) — the contract, layered on top of
+paged greedy decode:
+
+  * WHO OWNS WHAT: the engine owns the speculation POLICY — per-slot
+    draft length (``spec_k``, clamped so a round never overruns
+    ``max_new_tokens``), the single (B, k+1) VERIFY dispatch, and the
+    accept/rollback arithmetic.  ``SpecDrafter`` owns draft-side
+    EXECUTION: the draft model's own fp paged cache and
+    ``PageAllocator`` over a SEPARATE pool (``spec_draft_pages``), so
+    speculation can never evict, share, or COW a target page.  The
+    drafter never mirrors prefill/swap machinery — before proposing it
+    lazily re-prefills its cache from the target's committed stream,
+    which uniformly covers fresh admissions, prefix-shared admissions,
+    swap-ins, and the row a fully-accepted round leaves behind.
+  * WHAT ROLLS BACK: pages, not rows.  A round commits the longest
+    verified prefix, then ``Allocator.truncate_rows(slot, new_len)``
+    releases every whole page past the last committed row — respecting
+    refcounts (a prefix-shared page merely drops this slot's mapping)
+    and every residency state (device, host, in-flight).  Rejected
+    rows left on the kept boundary page are dead by masking: decode at
+    position p never attends rows > p, and the rows are overwritten
+    before the position reaches them.
+  * WHY GREEDY OUTPUT IS BIT-IDENTICAL: the verify dispatch scores
+    each candidate row with the decode step's OWN attention
+    computation (per-row ``lax.map`` at Sq=1 — see
+    ``_verify_attention_local``; on the striped pool the shard_map
+    body is already shared), so the logits at every accepted position
+    are BITWISE the logits plain decode would have produced there, and
+    the commit loop applies decode's exact emit/terminate rule.
+    Emitted tokens AND recorded logits are therefore identical to the
+    plain engine whatever the drafter proposes — through chunked
+    prefill, COW sharing, swap and tiered-pool cycles, fp and
+    quantized pages, shard counts, lax and Pallas
+    (tests/test_spec.py).  A drafter only moves THROUGHPUT: k accepted
+    drafts + 1 verified token per engine tick instead of 1.
+  * DEGRADATION: when the draft pool cannot back a slot, that slot's
+    drafter goes dead and the slot decodes speculation-free (the k=0
+    verify row is bitwise a plain decode step) — counted once in
+    ``tier_stats()['spec_disabled']``, re-armed on release.  Supported
+    architectures are vetted (``vet_spec_arch``): attention blocks
+    only — MoE capacity ranking and recurrent state couple tokens
+    across a dispatch and would break the bitwise contract.
+
+``ServeConfig.decode_sharing`` extends prefix sharing to DECODE pages:
+greedy requests with identical full prompts emit identical streams, so
+the scheduler twins them — the follower maps the leader's decode page
+at each growth boundary (one physical write serves both), the COW
+barrier stands down while the twin link holds, and the link breaks —
+restoring normal COW — the moment either side finishes, swaps, or (by
+the per-token equality ledger) diverges.  Mutually exclusive with
+``spec_draft``: speculative rollback truncates pages a twin may still
+read.
+
 Above the single engine sits the REPLICA TIER — two modules, same
 one-way layering (wire depends on config only; router depends on both
 plus the engine):

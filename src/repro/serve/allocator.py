@@ -280,6 +280,52 @@ class PageAllocator:
         self.host_table[slot] = -1
         self.growth_due[slot] = 0
 
+    def truncate_rows(self, slot: int, new_rows: int) -> int:
+        """Row-granular ROLLBACK: release every logical page of ``slot``
+        past the one covering row ``new_rows - 1`` (speculative decoding
+        rejects draft rows; pages are the claim unit, so rollback keeps
+        ``ceil(new_rows / page_size)`` pages — a partially-valid page
+        stays mapped, its garbage tail masked by kv_valid exactly like
+        rows past any slot's fill level).  Handles all three residency
+        states per released logical page:
+
+          * DEVICE — unmap the IOTLB window and drop this slot's
+            reference; the physical page returns to its home shard's
+            free list only at refcount 0 (a SHARED page rollback just
+            drops the reference — the sharer keeps the bytes, the same
+            contract as release_slot; the engine's COW barrier has
+            already privatized any shared page the speculation WROTE);
+          * HOST — free the host-tier slot;
+          * IN-FLIGHT — cancel the restore: claimed device page and
+            source host slot both return.
+
+        Returns the number of logical pages released, so the engine can
+        re-credit ``growth_due`` under reservation accounting."""
+        keep = 0 if new_rows <= 0 else -(-new_rows // self.page_size)
+        released = 0
+        for j in range(keep, self.pages_per_slot):
+            if (slot, j) in self.inflight:
+                dst, h = self.inflight.pop((slot, j))
+                self._free[self.shard_of(dst)].append(dst)
+                self._host_free.append(h)
+                self.host_table[slot, j] = -1
+                released += 1
+                continue
+            phys = int(self.page_table[slot, j])
+            if phys >= 0:
+                self.iotlb.unmap(f"slot{slot}p{j}")
+                self.refcount[phys] -= 1
+                if self.refcount[phys] == 0:
+                    self._free[self.shard_of(phys)].append(phys)
+                self.page_table[slot, j] = -1
+                released += 1
+            h = int(self.host_table[slot, j])
+            if h >= 0:
+                self._host_free.append(h)
+                self.host_table[slot, j] = -1
+                released += 1
+        return released
+
     # -- two-tier residency transitions -------------------------------------
     def evict(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
         """DEVICE -> HOST: move logical page ``j`` of ``slot`` to the

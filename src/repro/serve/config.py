@@ -56,6 +56,16 @@ class ServeConfig:
     # the first unshared row.  Engages only for fully-paged models —
     # recurrent state cannot be inherited — and is pure addressing:
     # logits are unchanged.
+    decode_sharing: bool = False
+    # Decode-token TWIN sharing: greedy requests with IDENTICAL full
+    # prompts emit identical streams (same params, argmax sampling), so
+    # their decode rows hold identical K/V — a follower slot maps its
+    # twin leader's physical decode pages instead of growing its own
+    # (both lanes write the same bytes, so no COW fires while the link
+    # holds; the scheduler's equality ledger breaks the link — and the
+    # normal COW barrier takes back over — at finish, swap-out, or any
+    # divergence).  Paged + greedy only; off by default (pure addressing,
+    # logits unchanged — the saving is pool pages, not compute).
     use_pallas_decode: bool = False
     # Route PAGE-STRIPED paged decode/resume attention through the fused
     # Pallas flash-decoding kernel (kernels/paged_flash_decode): page-
@@ -128,6 +138,36 @@ class ServeConfig:
     # transfer latency instead: a restore completes exactly T ticks
     # after issue — deterministic stall/prefetch accounting for tests
     # and for pricing prefetch depth against a known latency.
+    spec_draft: Optional[str] = None
+    # SPECULATIVE DECODING drafter.  None = off (the plain decode loop).
+    # "self" = the target model drafts for itself (same config + same
+    # params — acceptance is 1.0 by construction, the deterministic
+    # throughput leg: k+1 committed tokens per engine tick).  Any other
+    # string names a model config from repro.configs (reduced via
+    # reduce_config so the drafter stays small); the engine runs it per
+    # session with its OWN params and its OWN paged cache/allocator —
+    # draft pages never compete with (so can never evict) target pages —
+    # proposes spec_k greedy tokens per tick, and the target verifies all
+    # k+1 positions in ONE dispatch.  Rejected rows roll back at page
+    # granularity (Allocator.truncate_rows).  With greedy sampling the
+    # emitted stream is BIT-IDENTICAL to plain decode, whatever the
+    # drafter proposes — acceptance only changes how many target
+    # dispatches that stream costs.  Paged engine only; requires
+    # temperature == 0 (greedy verification is an argmax equality);
+    # attention + dense-MLP families only (MoE capacity routing couples
+    # tokens within a dispatch, so k+1-row verify logits would not be
+    # bitwise the 1-row decode logits; recurrent state has no pages to
+    # roll back; MLA decode runs in absorbed space with its own op
+    # order).
+    spec_k: int = 4
+    # Draft tokens proposed per engine tick when spec_draft is set;
+    # clamped per slot to the tokens the request can still emit.
+    spec_draft_pages: Optional[int] = None
+    # Device pages of the DRAFT pool.  None = full (max_batch slots'
+    # worth — the drafter can always follow).  Smaller values exercise
+    # the degradation path: a slot whose draft-pool claim fails decodes
+    # speculation-free (k_i = 0 — the verify dispatch degenerates to a
+    # bitwise plain decode step), counted in tier_stats()['spec_disabled'].
 
     def __post_init__(self):
         def bad(field, why):
@@ -168,7 +208,40 @@ class ServeConfig:
                 or self.transfer_ticks <= 0):
             bad("transfer_ticks", "must be a positive int of engine ticks "
                 f"(None = real async transfers), got {self.transfer_ticks!r}")
+        if isinstance(self.spec_k, bool) or not isinstance(self.spec_k, int) \
+                or self.spec_k < 1:
+            bad("spec_k", f"must be an int >= 1, got {self.spec_k!r}")
+        if self.spec_draft is not None:
+            if not isinstance(self.spec_draft, str) or not self.spec_draft:
+                bad("spec_draft", "must be 'self' or a model config name "
+                    f"(None = speculation off), got {self.spec_draft!r}")
+            if self.temperature > 0:
+                bad("spec_draft", "requires greedy sampling (temperature "
+                    "== 0): speculative verification commits by argmax "
+                    f"equality, got temperature={self.temperature}")
+        if self.spec_draft_pages is not None and (
+                isinstance(self.spec_draft_pages, bool)
+                or not isinstance(self.spec_draft_pages, int)
+                or self.spec_draft_pages <= 0):
+            bad("spec_draft_pages", "must be a positive int (None = a "
+                f"full draft pool), got {self.spec_draft_pages!r}")
+        if self.decode_sharing:
+            if self.temperature > 0:
+                bad("decode_sharing", "twin streams are only provably "
+                    "identical under greedy sampling (temperature == 0), "
+                    f"got temperature={self.temperature}")
+            if self.spec_draft is not None:
+                bad("decode_sharing", "incompatible with spec_draft: "
+                    "speculative rollback truncates decode pages a twin "
+                    "may still be reading")
         if not self.paged:
+            if self.decode_sharing:
+                bad("decode_sharing", "needs the paged engine "
+                    "(paged=True): twins share physical decode PAGES")
+            if self.spec_draft is not None:
+                bad("spec_draft", "needs the paged engine (paged=True); "
+                    "speculative rollback is page-granular "
+                    "(Allocator.truncate_rows)")
             if self.host_pool_pages:
                 bad("host_pool_pages", "needs the paged engine "
                     "(paged=True); only pool pages can tier to host")
@@ -276,6 +349,8 @@ class Request:
     done: bool = False
     failed: bool = False            # rejected by IOTLB containment
     preempts: int = 0               # times swapped out mid-decode
+    spec_drafted: int = 0           # draft tokens verified for this request
+    spec_accepted: int = 0          # of those, committed to the stream
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
     # per-emitted-token logits rows, populated when
     # ServeConfig.record_logits (bit-exactness tests / debugging)

@@ -80,16 +80,17 @@ from repro.core.iotlb import FaultRecord, Iotlb, IotlbFault, Window
 from repro.distributed.sharding import mesh_axes_for
 from repro.kernels.paged_flash_decode import use_pallas_decode
 from repro.models import init_cache, init_paged_cache
-from repro.models.common import is_spec_tree_leaf
+from repro.models.common import is_spec_tree_leaf, verify_greedy_tokens
 from repro.models.config import ArchConfig
-from repro.models.model import cache_specs
+from repro.models.model import cache_specs, init_params
 from repro.serve.allocator import PageAllocator
 from repro.serve.config import Request, ServeConfig
 from repro.serve.scheduler import Scheduler, SwappedRequest
+from repro.serve.spec import SpecDrafter, vet_spec_arch
 from repro.train.step import (make_chunked_prefill_resume_step,
                               make_chunked_prefill_step, make_decode_step,
                               make_paged_chunked_prefill_step,
-                              make_paged_decode_step)
+                              make_paged_decode_step, make_paged_verify_step)
 
 _DEFER = "defer"                    # admission verdict: retry after frees
 _OVERSIZED = "oversized"            # admission verdict: host-tier context
@@ -208,7 +209,8 @@ class _SchedQueue:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
+                 draft_model: Optional[Tuple[ArchConfig, Any]] = None):
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
@@ -357,6 +359,34 @@ class ServingEngine:
         self.decode_ticks = 0       # decode ticks with any candidate at all
         self.n_oversized = 0
         self.n_spills = 0
+        # -- speculative decoding (inert when spec_draft is None) ------------
+        self._drafter: Optional[SpecDrafter] = None
+        self._verify = None
+        self.n_spec_rounds = 0      # (slot, tick) verify rounds
+        self.n_draft_tokens = 0     # drafted tokens offered to verify
+        self.n_draft_accepted = 0   # drafted tokens accepted (emits - rounds)
+        self.n_twin_pages = 0       # decode pages twin-shared, not grown
+        if serve_cfg.spec_draft is not None:
+            vet_spec_arch(cfg, "target")
+            if not (self._pooled and all(self._pooled)):
+                raise ValueError(
+                    "speculative decoding needs every cache leaf paged: "
+                    "recurrent state has no page-granular rollback")
+            if draft_model is not None:
+                dcfg, dparams = draft_model
+            elif serve_cfg.spec_draft == "self":
+                # self-speculation: the target drafts for itself —
+                # acceptance 1.0 by construction (same argmax on the same
+                # committed stream), the deterministic throughput leg.
+                dcfg, dparams = cfg, params
+            else:
+                from repro.configs import get_config, reduce_config
+                dcfg = reduce_config(get_config(serve_cfg.spec_draft))
+                dparams = init_params(dcfg,
+                                      jax.random.PRNGKey(serve_cfg.seed))
+            self._verify = jax.jit(make_paged_verify_step(cfg),
+                                   donate_argnums=1)
+            self._drafter = SpecDrafter(dcfg, dparams, serve_cfg)
 
     def _kernel_ctx(self):
         """Context for jitted dispatches: installs the fused-Pallas-decode
@@ -618,10 +648,17 @@ class ServingEngine:
                 if got is None:
                     break               # out of requests, or deferred
                 start_row = 0
+                twin = None
                 if self.sc.paged:
+                    if self.sc.decode_sharing:
+                        # before place(): the ledger must not match the
+                        # request against its own fresh slot.
+                        twin = self.sched.find_twin(got.prompt)
                     start_row, cps = self._claim_pages(slot, got, share)
                     copies.extend(cps)
                 self.sched.place(slot, got, prefill_done=start_row)
+                if twin is not None:
+                    self.sched.link_twin(slot, twin)
                 placed.append((slot, got))
         except IotlbFault:
             # strict fault mid-wave: no slot was mutated yet (the faulting
@@ -632,6 +669,7 @@ class ServingEngine:
             for slot, req in reversed(placed):
                 if self.sc.paged:
                     self.alloc.release_slot(slot)
+                self.sched.break_twins(slot)
                 self.sched.release(slot)
                 queue.defer(req)
             raise
@@ -663,12 +701,19 @@ class ServingEngine:
                                               self._pages_dev(), z_len)
                 lg, self.cache = self._decode(self.params, self.cache, one,
                                               inactive, self._pages_dev())
+                if self._drafter is not None:
+                    zv = jnp.zeros((bsz, self.sc.spec_k + 1), jnp.int32)
+                    _, self.cache = self._verify(
+                        self.params, self.cache, zv, z_len,
+                        self._pages_dev(), z_len)
         else:
             _, self.cache = self._prefill(self.params, self.cache, z_tok,
                                           z_len)
             lg, self.cache = self._decode(self.params, self.cache, one,
                                           inactive)
         jax.block_until_ready(lg)
+        if self._drafter is not None:
+            self._drafter.warmup()
 
     def admit(self, req: Request) -> bool:
         """Single-request admission (compat shim over the batched path).
@@ -786,7 +831,14 @@ class ServingEngine:
         req.done = True
         self.sched.note_terminal(req)   # deadline miss if no first token
         self.completed.append(req)
+        # twin links die with either party; an orphaned follower keeps
+        # its shared pages (release_slot below drops this side's refs,
+        # leaving the survivor sole owner) and the restored COW barrier
+        # covers any write that would still land in one.
+        self.sched.break_twins(slot)
         self.sched.release(slot)    # release slot
+        if self._drafter is not None:
+            self._drafter.release(slot)
         if self.sc.paged:
             # drop this slot's pending restore transfers BEFORE the
             # allocator cancels their bookkeeping — a stale entry here
@@ -835,6 +887,13 @@ class ServingEngine:
         release its pages, and park it on the swap queue."""
         meta = self.sched.slots[slot]
         req = meta.req
+        # snapshots never carry draft or twin state: the drafter
+        # re-prefills from the committed stream after swap-in (lazy
+        # catch-up) and a re-admitted twin re-links at admission — the
+        # wire format is untouched.
+        self.sched.break_twins(slot)
+        if self._drafter is not None:
+            self._drafter.release(slot)
         n_logical = self.alloc.logical_count(slot)
         # in-flight restores cancel cleanly (the host slot keeps the
         # bytes until finish_restore), so mid-transfer pages read as
@@ -993,6 +1052,26 @@ class ServingEngine:
             wr = int(self.positions[i])     # this tick's cache write row
             j = wr // ps
             if self.alloc.page_table[i, j] < 0:
+                L = self.sched.leader_of(i)
+                if L is not None and self.sched.slots[L] is not None \
+                        and self.alloc.page_table[L, j] >= 0 \
+                        and int(self.positions[L]) >= wr:
+                    # twin decode sharing: the leader has written (or
+                    # writes this very dispatch, identical bytes — same
+                    # token at the same row under greedy lockstep) every
+                    # row of page j this follower will attend, so map the
+                    # leader's physical page instead of growing a new
+                    # one.  Both lanes' scatters then land the SAME bytes
+                    # in the same rows; the COW barrier below stands down
+                    # only while the equality ledger holds the link.
+                    self.alloc.share(i, j,
+                                     int(self.alloc.page_table[L, j]))
+                    self.n_twin_pages += 1
+                    self.alloc.growth_due[i] = max(
+                        0, int(self.alloc.growth_due[i]) - 1)
+                    self.alloc.check_write(i, wr, 1,
+                                           strict=self.sc.strict_iotlb)
+                    continue
                 grown = self.alloc.alloc(i, j)
                 if not grown and self.tiered and self._evict_pages(
                         1, protect=self._held_slots | set(active)):
@@ -1049,13 +1128,18 @@ class ServingEngine:
                     continue
             else:
                 # COW barrier: decode never writes a page another slot
-                # still references.  (Unreachable by construction today —
-                # shared pages lie strictly inside both parties' prompt
-                # regions, decode writes at rows >= len(prompt) — kept as
-                # defense in depth; copies batch into one dispatch below.)
-                cp = self.alloc.privatize(i, j)
-                if cp is not None:
-                    cow.append(cp)
+                # still references.  (Reachable only for prefix shares —
+                # which lie strictly inside both parties' prompt regions,
+                # so decode rows >= len(prompt) never hit them: defense
+                # in depth — and for twin decode pages, where the barrier
+                # STANDS DOWN while the link holds: both lanes write
+                # identical bytes, and sharing them is the whole point.
+                # A broken link restores the barrier before the next
+                # write.)
+                if not self.sched.is_twinned(i):
+                    cp = self.alloc.privatize(i, j)
+                    if cp is not None:
+                        cow.append(cp)
             # page-granular write check for this tick's row: a row past
             # the slot's mapped pages faults AT THE PAGE BOUNDARY here
             # rather than silently landing inside a whole-slot window.
@@ -1417,6 +1501,8 @@ class ServingEngine:
             "n_spills": self.n_spills,
             "host_pages_used": (self.alloc.host_pages_used()
                                 if self.sc.paged else 0),
+            "spec_disabled": (self._drafter.n_disabled
+                              if self._drafter is not None else 0),
         }
 
     # -- oversized contexts: host-resident cache, streamed dispatches --------
@@ -1490,6 +1576,139 @@ class ServingEngine:
             self.alloc.release_host(ov.n_host_pages)
             self._oversized.remove(ov)
 
+    def _spec_round(self, active: List[int]) -> None:
+        """One speculative round over ``active``: the drafter proposes up
+        to ``spec_k`` greedy tokens per slot, the target verifies all
+        k+1 candidate rows in ONE dispatch, the longest accepted prefix
+        commits, and rejected rows roll back page-granularly.
+
+        Greedy bit-identity: row j of the verify block attends exactly
+        the window plain decode would at position P+j with the same
+        flash op order (models/attention._verify_attention_local), the
+        committed tokens in rows [P, P+j) are by construction the ones
+        decode would have written (row P is the feed token; an accepted
+        draft row IS the target's argmax), and the commit loop below
+        replays decode's append -> terminate -> continue rule token by
+        token.  Whatever the drafter proposes only changes how many
+        dispatches the stream costs, never its bytes."""
+        ps, sk = self.sc.page_size, self.sc.spec_k
+        bsz = self.sc.max_batch
+        work: List[Tuple[int, List[int], int]] = []
+        for i in active:
+            req = self.sched.slots[i].req
+            P = int(self.positions[i])
+            # clamp: candidate rows past the max_new_tokens cap can
+            # never commit, and the clamp keeps every verify write row
+            # (<= P + k <= len(prompt) + max_new_tokens - 2) inside the
+            # slot's worst-case page reservation (_max_pages).
+            k = max(0, min(sk, self.sc.max_new_tokens
+                           - len(req.out_tokens) - 1))
+            # target pages for verify rows (P, P+k] beyond the one
+            # _grow_pages mapped — drawn from the slot's own reservation
+            # (reserve mode: always succeeds) or the free pool
+            # (overcommit: exhaustion degrades k for this round; the
+            # engine never preempts anyone to speculate).
+            for j in range(P // ps + 1, (P + k) // ps + 1):
+                if self.alloc.page_table[i, j] < 0 and \
+                        not self.alloc.alloc(i, j):
+                    k = j * ps - 1 - P
+                    break
+            if self.sc.reserve_decode_pages:
+                self.alloc.growth_due[i] = max(
+                    0, self._max_pages(req) - self.alloc.logical_count(i))
+            if k > 0:
+                work.append((i, req.prompt + req.out_tokens, k))
+        proposals = self._drafter.propose(work)
+        # COW + page-granular write coverage for the verify rows
+        # (privatize is defense in depth, as on the decode path: shared
+        # pages live in prompt regions, verify writes at rows >= P >=
+        # len(prompt)).
+        cow: List[Tuple[int, int]] = []
+        for i in active:
+            d = proposals.get(i, [])
+            P = int(self.positions[i])
+            for j in range(P // ps, (P + len(d)) // ps + 1):
+                cp = self.alloc.privatize(i, j)
+                if cp is not None:
+                    cow.append(cp)
+                self.alloc.check_write(i, j * ps, ps,
+                                       strict=self.sc.strict_iotlb)
+        self._apply_copies(cow)
+        # ONE verify dispatch at the FIXED (bsz, spec_k + 1) trace shape:
+        # row 0 carries the committed feed token (exactly plain decode's
+        # write), rows 1..k the draft; a slot with no draft this round
+        # rides as a length-1 row — bitwise plain decode — and inactive
+        # lanes ride at length 0 (no write, fully-masked attention).
+        toks_np = np.zeros((bsz, sk + 1), np.int32)
+        lens_np = np.zeros((bsz,), np.int32)
+        offs_np = np.zeros((bsz,), np.int32)
+        for i in active:
+            d = proposals.get(i, [])
+            toks_np[i, 0] = self.last_token[i]
+            toks_np[i, 1:1 + len(d)] = d
+            lens_np[i] = len(d) + 1
+            offs_np[i] = self.positions[i]
+        with self._kernel_ctx():
+            logits, self.cache = self._verify(
+                self.params, self.cache, jnp.asarray(toks_np),
+                jnp.asarray(lens_np), self._pages_dev(),
+                jnp.asarray(offs_np))
+        greedy = np.asarray(verify_greedy_tokens(logits))
+        lg_np = np.asarray(logits) if self.sc.record_logits else None
+        for i in active:
+            req = self.sched.slots[i].req
+            d = proposals.get(i, [])
+            P = int(self.positions[i])
+            n_emit = 0
+            finished = False
+            for j in range(len(d) + 1):
+                tok = int(greedy[i, j])
+                req.out_tokens.append(tok)
+                if lg_np is not None:
+                    req.logits.append(lg_np[i, j].copy())
+                n_emit += 1
+                if tok == self.sc.eos_id or \
+                        len(req.out_tokens) >= self.sc.max_new_tokens:
+                    finished = True   # decode's exact termination rule
+                    break
+                if j < len(d) and tok != d[j]:
+                    break             # first rejection: later rows invalid
+            self.last_token[i] = req.out_tokens[-1]
+            self.positions[i] = P + n_emit
+            # page-granular rollback: whole pages past the last committed
+            # row (P + n_emit - 1) release back to the pool — respecting
+            # refcounts, so a prefix-shared page merely drops this ref.
+            # Rejected rows left on the kept boundary page are never
+            # attended (decode at position p masks rows > p) and are
+            # overwritten before the position reaches them.
+            self.alloc.truncate_rows(i, P + n_emit)
+            if self.sc.reserve_decode_pages:
+                self.alloc.growth_due[i] = max(
+                    0, self._max_pages(req) - self.alloc.logical_count(i))
+            self.n_spec_rounds += 1
+            self.n_draft_tokens += len(d)
+            self.n_draft_accepted += n_emit - 1
+            req.spec_drafted += len(d)
+            req.spec_accepted += n_emit - 1
+            if finished:
+                self._finish(i)
+            else:
+                self._drafter.commit(i, P, len(d), n_emit)
+
+    def spec_stats(self) -> dict:
+        """Speculation telemetry (all zeros when spec_draft is None)."""
+        d = self._drafter
+        return {
+            "spec_rounds": self.n_spec_rounds,
+            "draft_tokens": self.n_draft_tokens,
+            "draft_accepted": self.n_draft_accepted,
+            "acceptance_rate": self.n_draft_accepted
+            / max(self.n_draft_tokens, 1),
+            "draft_dispatches": d.n_draft_dispatches if d else 0,
+            "catchup_dispatches": d.n_catchup_dispatches if d else 0,
+            "spec_disabled": d.n_disabled if d else 0,
+        }
+
     def step(self):
         """One engine tick: advance any unfinished prefill by one chunk
         (unless this tick's admission wave already did), then one decode
@@ -1528,6 +1747,10 @@ class ServingEngine:
             self._end_tick(t0)
             return
         self.sched.mark_dispatch(active, self.tick_no)
+        if self._drafter is not None:
+            self._spec_round(active)
+            self._end_tick(t0)
+            return
         # host-side staging: ONE mask/position build + one transfer per
         # tick, not one .at[i].set dispatch per active slot.
         mask_np = np.zeros((self.sc.max_batch,), bool)
@@ -1554,6 +1777,12 @@ class ServingEngine:
             req.out_tokens.append(tok)
             if lg_np is not None:
                 req.logits.append(lg_np[i].copy())
+            if self.sc.decode_sharing and \
+                    not self.sched.check_twin_token(i):
+                # divergence (unreachable for greedy twins; ledger
+                # defense): break the link so the COW barrier privatizes
+                # any still-shared page before the next write.
+                self.sched.break_twins(i)
             if tok == self.sc.eos_id or \
                     len(req.out_tokens) >= self.sc.max_new_tokens:
                 self._finish(i)

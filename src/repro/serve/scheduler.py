@@ -97,6 +97,9 @@ class Scheduler:
         self._submit_seq = 0
         self.deadline_hits = 0
         self.deadline_misses = 0
+        # decode-token twin ledger: follower slot -> leader slot (greedy
+        # requests with identical prompts sharing their decode pages).
+        self.twin_leader: dict = {}
 
     # -- pending queue -------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -280,6 +283,70 @@ class Scheduler:
             if best_key is None or key < best_key:
                 best, best_key = i, key
         return best
+
+    # -- decode-token twin ledger -------------------------------------------
+    # Greedy requests with IDENTICAL full prompts emit identical token
+    # streams (same params, argmax sampling), so their decode rows hold
+    # identical K/V — the engine can point both slots' page tables at ONE
+    # physical page per decode page instead of two.  The scheduler owns
+    # the EQUALITY LEDGER: who is twinned with whom, and the per-token
+    # check that the streams really do stay equal (defense in depth — a
+    # divergence breaks the link before another shared write could mix
+    # streams).  This is the same ledger speculative verification rides:
+    # committing a draft row IS asserting sampled-token equality between
+    # the drafter's proposal and the target's argmax.
+
+    def find_twin(self, prompt: List[int]) -> Optional[int]:
+        """Resident slot with the IDENTICAL full prompt (the decode-twin
+        candidate), lowest slot id first, or None.  Only unlinked leaders
+        qualify — chains stay depth 1 so breaking one link never strands
+        a transitive follower."""
+        for i, meta in enumerate(self.slots):
+            if meta is not None and meta.req.prompt == prompt \
+                    and i not in self.twin_leader:
+                return i
+        return None
+
+    def link_twin(self, follower: int, leader: int) -> None:
+        self.twin_leader[follower] = leader
+
+    def leader_of(self, follower: int) -> Optional[int]:
+        return self.twin_leader.get(follower)
+
+    def is_twinned(self, slot: int) -> bool:
+        """Whether ``slot`` takes part in any live twin link (either
+        side) — the engine skips the decode COW barrier for twinned
+        slots, whose only shared decode-region pages are twin pages
+        both parties write identical bytes into."""
+        return slot in self.twin_leader or \
+            slot in self.twin_leader.values()
+
+    def break_twins(self, slot: int) -> List[int]:
+        """Drop every twin link ``slot`` takes part in (as follower OR
+        leader) — called at finish / swap-out / divergence.  Returns the
+        FOLLOWERS whose link just broke, so the engine can privatize any
+        still-shared decode pages before the next write."""
+        broken = [f for f, l in self.twin_leader.items() if l == slot]
+        for f in broken:
+            del self.twin_leader[f]
+        if slot in self.twin_leader:
+            del self.twin_leader[slot]
+            broken.append(slot)
+        return broken
+
+    def check_twin_token(self, follower: int) -> bool:
+        """Equality check after an emit: the follower's stream must be a
+        prefix-match of its leader's as far as both have emitted.  True =
+        still equal (greedy twins cannot diverge; this is the ledger's
+        invariant check).  Only the NEWEST common index needs comparing —
+        earlier ones passed on earlier ticks."""
+        leader = self.twin_leader.get(follower)
+        if leader is None or self.slots[leader] is None:
+            return True
+        a = self.slots[follower].req.out_tokens
+        b = self.slots[leader].req.out_tokens
+        n = min(len(a), len(b))
+        return n == 0 or a[n - 1] == b[n - 1]
 
     # -- prefix sharing -----------------------------------------------------
     def shared_prefix(self, prompt: List[int],

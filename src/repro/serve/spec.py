@@ -1,0 +1,268 @@
+"""Speculative-decoding DRAFTER: a second, cheaper model with its own
+paged cache that proposes greedy continuations for the target to verify.
+
+The engine owns the speculation POLICY (per-slot draft length, the
+verify dispatch, the accept/rollback arithmetic); this module owns the
+draft-side EXECUTION — a self-contained paged serving stack for the
+draft model:
+
+  * its own fp paged cache and :class:`PageAllocator` over a SEPARATE
+    page pool (``ServeConfig.spec_draft_pages``, or one full slot span
+    per batch lane when unset), so speculation can never evict, share,
+    or otherwise touch a target page;
+  * its own jitted chunked-prefill (always the resumed-offsets trace —
+    one trace for every catch-up wave) and single-token decode steps;
+  * LAZY CATCH-UP: the drafter never mirrors the target's prefill or
+    swap machinery.  Before proposing for a slot it re-prefills its own
+    cache from the target's COMMITTED token stream (prompt + emitted
+    tokens) up to the target's current position.  One mechanism covers
+    fresh admissions, prefix-shared admissions, swap-ins, and the
+    one-row gap a fully-accepted round leaves behind.
+
+Degradation contract: when the draft pool cannot back a slot's rows,
+that slot's drafter goes DEAD — the engine keeps decoding it through
+the verify path with zero drafted tokens (bit-identical to plain
+decode, one token per tick) — and the event is counted once in
+``SpecDrafter.n_disabled`` (surfaced as ``tier_stats()['spec_disabled']``).
+``release`` (request finish / swap-out) clears the dead flag, so a
+re-admitted request speculates again.
+
+Correctness never depends on the draft model: rejected drafts cost
+only the wasted verify rows, and stale draft cache rows past a commit
+are harmless — draft attention at position p masks every row beyond p,
+and the rows are overwritten before they are ever attended.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import mesh_axes_for
+from repro.models import init_paged_cache
+from repro.models.config import ArchConfig
+from repro.serve.allocator import PageAllocator
+from repro.serve.config import ServeConfig
+from repro.train.step import (make_paged_chunked_prefill_step,
+                              make_paged_decode_step)
+
+# Block kinds whose per-token compute is independent across the rows of
+# one dispatch.  MoE blocks are excluded: expert capacity is sized from
+# the dispatch's token count and capacity-slot ranking couples tokens
+# within a batch, so a (bsz, k+1) verify would not be bitwise the
+# (bsz, 1) decode.  Recurrent kinds are excluded structurally (no paged
+# rows to roll back).
+SPEC_KINDS = frozenset({"attn_mlp", "shared_attn"})
+
+
+def pattern_kinds(cfg: ArchConfig) -> set:
+    """The set of block kinds in ``cfg``'s block program."""
+    kinds = set()
+    for entry in cfg.pattern:
+        if entry[0] == "scan":
+            kinds.add(entry[1])
+        else:
+            kinds.update(k for k, _ in entry[1])
+    return kinds
+
+
+def vet_spec_arch(cfg: ArchConfig, role: str) -> None:
+    """Reject architectures the speculative contract cannot hold for."""
+    bad = pattern_kinds(cfg) - SPEC_KINDS
+    if bad:
+        raise ValueError(
+            f"speculative decoding: {role} arch {cfg.name!r} has block "
+            f"kind(s) {sorted(bad)}; supported kinds: {sorted(SPEC_KINDS)} "
+            "(MoE capacity ranking and recurrent state couple tokens "
+            "across a dispatch, breaking greedy bit-identity)")
+    if cfg.kv_lora_rank:
+        raise ValueError(
+            f"speculative decoding: {role} arch {cfg.name!r} uses MLA "
+            "(kv_lora_rank > 0); the latent cache has no verify path")
+
+
+class SpecDrafter:
+    """Draft-side serving state for one engine: cache, pool, jits."""
+
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig):
+        vet_spec_arch(cfg, "draft")
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        bsz, ps = sc.max_batch, sc.page_size
+        self.pages_per_slot = -(-sc.slot_rows // ps)
+        num_pages = (sc.spec_draft_pages if sc.spec_draft_pages is not None
+                     else bsz * self.pages_per_slot)
+        # mirror the engine's pool striping: same rules context, same
+        # page-aligned placement, so the sharded flash-decoding path
+        # serves the drafter exactly as it serves the target.
+        mesh, paxes = mesh_axes_for("pages")
+        shards = 1
+        self._pool_sharding = None
+        if mesh is not None and paxes:
+            shards = int(np.prod([mesh.shape[a] for a in paxes]))
+            num_pages = -(-num_pages // shards) * shards
+            self._pool_sharding = NamedSharding(mesh, PartitionSpec(
+                None, paxes[0] if len(paxes) == 1 else paxes))
+        self.num_pages = num_pages
+        # always fp: draft numerics never reach the emitted stream, so
+        # the quantized formats' density buys nothing here.
+        self.cache = init_paged_cache(cfg, bsz, num_pages, ps,
+                                      kv_format="fp")
+        if self._pool_sharding is not None:
+            self.cache = jax.tree.map(
+                lambda leaf: jax.device_put(leaf, self._pool_sharding),
+                self.cache)
+        self.alloc = PageAllocator(num_pages, ps, bsz, self.pages_per_slot,
+                                   num_shards=shards)
+        self._decode = jax.jit(make_paged_decode_step(cfg), donate_argnums=1)
+        self._prefill = jax.jit(make_paged_chunked_prefill_step(cfg),
+                                donate_argnums=1)
+        # rows[i]: draft cache rows [0, rows[i]) hold the target's
+        # committed stream for slot i.  dead[i]: draft pool could not
+        # back the slot — plain decode until release().
+        self.rows = np.zeros((bsz,), np.int32)
+        self.dead = np.zeros((bsz,), bool)
+        self.n_disabled = 0         # slots that degraded to plain decode
+        self.n_draft_dispatches = 0
+        self.n_catchup_dispatches = 0
+
+    def _pages_dev(self) -> jax.Array:
+        return jnp.asarray(self.alloc.page_table)
+
+    def _ensure_pages(self, slot: int, last_row: int) -> bool:
+        """Map every draft page covering rows [0, last_row]."""
+        for j in range(last_row // self.sc.page_size + 1):
+            if self.alloc.page_table[slot, j] < 0:
+                if not self.alloc.alloc(slot, j):
+                    return False
+        return True
+
+    def _disable(self, slot: int) -> None:
+        self.dead[slot] = True
+        self.n_disabled += 1
+        self.alloc.release_slot(slot)
+        self.rows[slot] = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def release(self, slot: int) -> None:
+        """The target finished or swapped the slot out: drop every draft
+        page and re-arm speculation for the slot's next occupant."""
+        self.alloc.release_slot(slot)
+        self.rows[slot] = 0
+        self.dead[slot] = False
+
+    def commit(self, slot: int, pos: int, k_drafted: int,
+               n_emitted: int) -> None:
+        """One verify round landed: rows [0, pos + min(k_drafted,
+        n_emitted)) of the draft cache now agree with the committed
+        stream (drafted rows past the accepted prefix are stale but
+        never attended before being overwritten)."""
+        if not self.dead[slot]:
+            self.rows[slot] = pos + min(k_drafted, n_emitted)
+
+    # -- catch-up + proposal -------------------------------------------------
+    def _catch_up(self, work: List[Tuple[int, List[int], int]]) -> None:
+        """Chunk-prefill each slot's draft cache up to the target's
+        position (stream length - 1: the newest emitted token is fed to
+        the first draft decode, mirroring the target's own decode)."""
+        bsz, sp = self.sc.max_batch, self.sc.max_prompt
+        while True:
+            wave = []
+            for slot, stream, _k in work:
+                if self.dead[slot]:
+                    continue
+                target = len(stream) - 1
+                have = int(self.rows[slot])
+                if have >= target:
+                    continue
+                toks = stream[have:have + min(sp, target - have)]
+                if not self._ensure_pages(slot, have + len(toks) - 1):
+                    self._disable(slot)
+                    continue
+                wave.append((slot, have, toks))
+            if not wave:
+                return
+            toks_np = np.zeros((bsz, sp), np.int32)
+            lens_np = np.zeros((bsz,), np.int32)
+            offs_np = np.zeros((bsz,), np.int32)
+            for slot, off, toks in wave:
+                toks_np[slot, :len(toks)] = toks
+                lens_np[slot] = len(toks)
+                offs_np[slot] = off
+            # ALWAYS the offsets trace (even at offset 0): catch-up
+            # waves mix fresh and resumed slots freely, and the drafter
+            # has no logit-invariance contract to split traces for.
+            _, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(toks_np),
+                jnp.asarray(lens_np), self._pages_dev(),
+                jnp.asarray(offs_np))
+            self.n_catchup_dispatches += 1
+            for slot, off, toks in wave:
+                self.rows[slot] = off + len(toks)
+
+    def propose(self, work: List[Tuple[int, List[int], int]]
+                ) -> Dict[int, List[int]]:
+        """Draft up to ``k`` greedy tokens per slot.
+
+        ``work`` rows are (slot, committed stream = prompt + emitted
+        tokens, k).  Returns slot -> drafted tokens (possibly fewer
+        than k — or none — when the draft pool degrades the slot).
+        Drafting is ``max(k)`` fixed-shape (bsz, 1) decode dispatches
+        with inactive lanes masked at position -1, so the trace count
+        stays O(1) whatever the per-slot draft lengths."""
+        self._catch_up(work)
+        out: Dict[int, List[int]] = {slot: [] for slot, _s, _k in work}
+        feed: Dict[int, int] = {}
+        pos: Dict[int, int] = {}
+        live: List[Tuple[int, int]] = []
+        for slot, stream, k in work:
+            if self.dead[slot] or k <= 0:
+                continue
+            feed[slot] = stream[-1]
+            pos[slot] = len(stream) - 1
+            live.append((slot, k))
+        bsz = self.sc.max_batch
+        for t in range(max((k for _s, k in live), default=0)):
+            active = []
+            for slot, k in live:
+                if t >= k or self.dead[slot]:
+                    continue
+                if not self._ensure_pages(slot, pos[slot]):
+                    self._disable(slot)
+                    continue
+                active.append(slot)
+            if not active:
+                break
+            toks_np = np.zeros((bsz, 1), np.int32)
+            pos_np = np.full((bsz,), -1, np.int32)
+            for slot in active:
+                toks_np[slot, 0] = feed[slot]
+                pos_np[slot] = pos[slot]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks_np),
+                jnp.asarray(pos_np), self._pages_dev())
+            self.n_draft_dispatches += 1
+            nxt = np.asarray(jnp.argmax(logits.astype(jnp.float32), axis=-1))
+            for slot in active:
+                tok = int(nxt[slot])
+                out[slot].append(tok)
+                feed[slot] = tok
+                pos[slot] += 1
+                self.rows[slot] = pos[slot]
+        return out
+
+    def warmup(self) -> None:
+        """Compile the catch-up and draft-decode traces (no-op shapes)."""
+        bsz, sp = self.sc.max_batch, self.sc.max_prompt
+        z_tok = jnp.zeros((bsz, sp), jnp.int32)
+        z_len = jnp.zeros((bsz,), jnp.int32)
+        _, self.cache = self._prefill(self.params, self.cache, z_tok,
+                                      z_len, self._pages_dev(), z_len)
+        lg, self.cache = self._decode(
+            self.params, self.cache, jnp.zeros((bsz, 1), jnp.int32),
+            jnp.full((bsz,), -1, jnp.int32), self._pages_dev())
+        jax.block_until_ready(lg)

@@ -215,3 +215,26 @@ def make_paged_chunked_prefill_step(cfg: ArchConfig):
             logits, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
         return last[:, 0, :], cache
     return prefill
+
+
+def make_paged_verify_step(cfg: ArchConfig):
+    """Speculative VERIFY against a PAGED cache.
+
+    Scores a (B, S) block of candidate tokens — each slot's last committed
+    token followed by its draft proposals — at cache rows
+    [offset, offset + length) in ONE dispatch, and returns the FULL
+    (B, S, V) logits: the verifier needs every position's argmax (row i's
+    logits decide whether draft token i+1 is accepted and what to emit if
+    it is not), unlike the prefill builders which gather only the last
+    valid row.  ``mode='verify'`` runs attention in DECODE-order flash
+    numerics with a per-row causal mask, so the logits at every valid row
+    are BITWISE the logits plain greedy decode would produce at that
+    position — the speculative-decoding bit-identity contract.  Slots not
+    in the round pass length 0 (no cache write, garbage logits ignored).
+    """
+    def verify(params, cache, tokens, lengths, pages, offsets):
+        logits, cache, _ = forward(params, tokens, cfg, cache=cache,
+                                   mode="verify", pos=lengths, pages=pages,
+                                   offset=offsets)
+        return logits, cache
+    return verify

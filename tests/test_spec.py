@@ -1,0 +1,385 @@
+"""Speculative decoding: draft/verify with page-granular rollback.
+
+The hard contract under test: with greedy sampling the speculative
+engine's emitted token stream AND its recorded per-token logits are
+BIT-IDENTICAL to the plain decode loop — whatever the drafter proposes,
+through chunked prefill, COW prefix sharing, fp and int8 page formats,
+overcommit/swap cycles, the tiered pool, draft-pool degradation, and
+1 vs 8 pool shards on the lax and Pallas decode paths (subprocess leg).
+Speculation may only change how many dispatches a stream costs, never
+its bytes.
+
+Also here: ``Allocator.truncate_rows`` unit coverage (whole-page
+release past a row boundary across all three residency states,
+refcounted shared pages), the decode-token TWIN sharing satellite
+(identical greedy prompts share physical decode pages, addressing
+only), and the ServeConfig validation surface for the new knobs.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.allocator import PageAllocator
+from repro.serve.spec import SpecDrafter, pattern_kinds, vet_spec_arch
+
+CFG = ArchConfig(name="spec_t", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+DRAFT = ArchConfig(name="spec_d", family="dense", n_layers=1, d_model=32,
+                   n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=100,
+                   decode_margin=32, dtype=jnp.float32)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+DPARAMS = init_params(DRAFT, jax.random.PRNGKey(7))
+
+
+def _mk_prompts(vocab=100):
+    """Multi-chunk prompts (prompt > the 8-token chunk) plus a pair
+    sharing a page-aligned 8-row prefix (COW prefix sharing engages)."""
+    rng = np.random.default_rng(3)
+    p = [rng.integers(1, vocab - 1, size=n).tolist() for n in (5, 11, 19)]
+    shared = rng.integers(1, vocab - 1, size=8).tolist()
+    p.append(shared + rng.integers(1, vocab - 1, size=3).tolist())
+    p.append(shared + rng.integers(1, vocab - 1, size=5).tolist())
+    return p
+
+
+def _serve(sc, prompts, draft=None):
+    eng = ServingEngine(CFG, PARAMS, sc, draft_model=draft)
+    out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    toks = {r.rid: tuple(r.out_tokens) for r in out}
+    lgts = {r.rid: np.stack(r.logits) for r in out if r.logits}
+    return toks, lgts, eng
+
+
+def _assert_identical(ref, got, tag=""):
+    ref_t, ref_l = ref
+    got_t, got_l = got
+    assert got_t == ref_t, tag
+    assert set(got_l) == set(ref_l), tag
+    for rid in ref_l:
+        np.testing.assert_array_equal(got_l[rid], ref_l[rid],
+                                      err_msg=f"{tag} rid={rid}")
+
+
+# ---------------------------------------------------------------------------
+# Allocator.truncate_rows
+# ---------------------------------------------------------------------------
+
+def test_truncate_rows_releases_whole_pages_past_boundary():
+    al = PageAllocator(12, 4, 2, 6)
+    for j in range(5):
+        assert al.alloc(0, j)
+    # rows [0, 6): pages 0 and 1 stay, pages 2..4 release.
+    assert al.truncate_rows(0, 6) == 3
+    assert [int(p) >= 0 for p in al.page_table[0]] == \
+        [True, True, False, False, False, False]
+    assert len(al.free_pages) == 12 - 2
+    # boundary exactly on a page edge keeps only full pages below it.
+    assert al.truncate_rows(0, 4) == 1
+    assert al.truncate_rows(0, 0) == 1
+    assert len(al.free_pages) == 12
+    assert al.pages_in_use() == 0
+
+
+def test_truncate_rows_respects_shared_refcounts():
+    al = PageAllocator(12, 4, 2, 6)
+    for j in range(3):
+        assert al.alloc(0, j)
+    phys = int(al.page_table[0, 2])
+    al.share(1, 2, phys)            # slot 1 maps slot 0's page 2
+    assert al.truncate_rows(0, 8) == 1   # drops slot 0's ref only
+    assert int(al.refcount[phys]) == 1
+    assert phys not in al.free_pages, "sharer still owns the page"
+    assert al.truncate_rows(1, 8) == 1   # last ref -> back to the pool
+    assert phys in al.free_pages
+
+
+def test_truncate_rows_host_and_inflight_states():
+    al = PageAllocator(8, 4, 2, 6, host_pages=6)
+    for j in range(4):
+        assert al.alloc(0, j)
+    assert al.evict(0, 2) is not None            # page 2 -> host tier
+    assert al.begin_restore(0, 2) is not None    # page 2 -> in flight
+    assert al.evict(0, 3) is not None            # page 3 -> host tier
+    # truncate to rows [0, 8): logical pages 2 (in-flight) and 3 (host)
+    # both release — device page + host slot return to their free lists.
+    assert al.truncate_rows(0, 8) == 2
+    assert not al.inflight
+    assert int(al.host_table[0, 2]) < 0 and int(al.host_table[0, 3]) < 0
+    assert al.host_avail() == al.host_pages
+    assert len(al.free_pages) + al.pages_in_use() == al.num_pages
+    assert al.pages_in_use() == 2
+
+
+# ---------------------------------------------------------------------------
+# greedy bit-identity: tokens AND logits, every engine dimension
+# ---------------------------------------------------------------------------
+
+BASE = dict(max_batch=4, max_prompt=8, max_new_tokens=8, page_size=4,
+            max_seq=32, record_logits=True)
+
+
+@pytest.mark.parametrize("kvf", ["fp", "int8"])
+@pytest.mark.parametrize("draft", ["self", "foreign"],
+                         ids=["self", "foreign"])
+def test_spec_bit_identity(kvf, draft):
+    prompts = _mk_prompts()
+    ref = _serve(ServeConfig(**BASE, kv_format=kvf), prompts)[:2]
+    dm = (DRAFT, DPARAMS) if draft == "foreign" else None
+    toks, lgts, eng = _serve(
+        ServeConfig(**BASE, kv_format=kvf, spec_draft="self", spec_k=3),
+        prompts, draft=dm)
+    _assert_identical(ref, (toks, lgts), f"kv={kvf} draft={draft}")
+    st = eng.spec_stats()
+    assert st["spec_rounds"] > 0 and st["draft_tokens"] > 0
+    if draft == "self":
+        # self-speculation accepts every draft by construction.
+        assert st["acceptance_rate"] == 1.0
+
+
+def test_spec_accelerates_engine_ticks():
+    # the throughput mechanism itself: the same token count lands in
+    # fewer engine ticks (k accepted drafts + 1 per verify dispatch).
+    prompts = _mk_prompts()
+    *_, e0 = _serve(ServeConfig(**BASE), prompts)
+    toks, _, e1 = _serve(ServeConfig(**BASE, spec_draft="self", spec_k=4),
+                         prompts)
+    assert {r: len(t) for r, t in toks.items()} == \
+        {i: BASE["max_new_tokens"] for i in range(len(prompts))}
+    assert e1.tick_no * 2 < e0.tick_no, (e0.tick_no, e1.tick_no)
+
+
+def test_spec_eos_mid_round_terminates_exactly():
+    # pick an EOS that provably fires MID-stream: the 3rd token the
+    # plain engine emits for request 0.  Both engines must then cut
+    # every stream at the first occurrence, bit-identically.
+    prompts = _mk_prompts()
+    probe, _, _ = _serve(ServeConfig(**BASE), prompts)
+    eos = probe[0][2]
+    ref = _serve(ServeConfig(**BASE, eos_id=eos), prompts)[:2]
+    got = _serve(ServeConfig(**BASE, eos_id=eos, spec_draft="self",
+                             spec_k=4), prompts)[:2]
+    _assert_identical(ref, got, "eos")
+    assert any(len(t) < BASE["max_new_tokens"] for t in ref[0].values()), \
+        "EOS must actually cut a stream for this test to bite"
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_spec_k_extremes(k):
+    prompts = _mk_prompts()
+    ref = _serve(ServeConfig(**BASE), prompts)[:2]
+    got = _serve(ServeConfig(**BASE, spec_draft="self", spec_k=k),
+                 prompts)[:2]
+    _assert_identical(ref, got, f"k={k}")
+
+
+def test_spec_overcommit_swap_cycles():
+    # pool far below the working set, overcommit growth: speculation
+    # claims pages ahead and rolls them back while requests swap in and
+    # out around it.
+    prompts = _mk_prompts()
+    base = dict(BASE, reserve_decode_pages=False, num_pages=14)
+    ref = _serve(ServeConfig(**base), prompts)[:2]
+    toks, lgts, eng = _serve(
+        ServeConfig(**base, spec_draft="self", spec_k=3), prompts)
+    _assert_identical(ref, (toks, lgts), "overcommit")
+    assert eng.n_preemptions > 0, "pool pressure must actually preempt"
+
+
+def test_spec_tiered_pool():
+    prompts = _mk_prompts()
+    base = dict(BASE, reserve_decode_pages=False, num_pages=12,
+                host_pool_pages=40, transfer_ticks=1, prefetch_depth=2)
+    ref = _serve(ServeConfig(**dict(BASE, num_pages=40)), prompts)[:2]
+    got = _serve(ServeConfig(**base, spec_draft="self", spec_k=3),
+                 prompts)[:2]
+    _assert_identical(ref, got, "tiered")
+
+
+def test_spec_draft_pool_pressure_degrades_not_corrupts():
+    # a draft pool too small for every slot: some drafters go DEAD
+    # (counted in tier_stats['spec_disabled']), their slots decode
+    # speculation-free — and the stream stays bit-identical.
+    prompts = _mk_prompts()
+    ref = _serve(ServeConfig(**BASE), prompts)[:2]
+    toks, lgts, eng = _serve(
+        ServeConfig(**BASE, spec_draft="self", spec_k=3,
+                    spec_draft_pages=6), prompts)
+    _assert_identical(ref, (toks, lgts), "draft pressure")
+    assert eng.tier_stats()["spec_disabled"] > 0
+    assert eng.spec_stats()["spec_disabled"] > 0
+
+
+def test_spec_drafter_pool_never_touches_target_pool():
+    prompts = _mk_prompts()
+    *_, eng = _serve(ServeConfig(**BASE, spec_draft="self", spec_k=3),
+                     prompts)
+    assert eng._drafter.alloc is not eng.alloc
+    assert eng._drafter.num_pages == eng.sc.max_batch * eng.pages_per_slot
+    # both pools fully drain at completion.
+    assert eng.alloc.pages_in_use() == 0
+    assert eng._drafter.alloc.pages_in_use() == 0
+
+
+# ---------------------------------------------------------------------------
+# decode-token twin sharing (greedy identical prompts)
+# ---------------------------------------------------------------------------
+
+def test_twin_decode_sharing_bit_identical_and_saves_pages():
+    rng = np.random.default_rng(5)
+    p = rng.integers(1, 99, size=6).tolist()
+    prompts = [p, list(p), list(p), rng.integers(1, 99, size=9).tolist()]
+    ref = _serve(ServeConfig(**BASE), prompts)[:2]
+    toks, lgts, eng = _serve(ServeConfig(**BASE, decode_sharing=True),
+                             prompts)
+    _assert_identical(ref, (toks, lgts), "twin")
+    assert eng.n_twin_pages > 0, "identical prompts must share decode pages"
+    assert eng.alloc.pages_in_use() == 0   # refcounts fully unwound
+
+
+def test_twin_leader_finish_leaves_follower_sole_owner():
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, 99, size=6).tolist()
+    sc = ServeConfig(**dict(BASE, record_logits=False),
+                     decode_sharing=True)
+    eng = ServingEngine(CFG, PARAMS, sc)
+    a, b = Request(0, list(p)), Request(1, list(p))
+    ha, hb = eng.submit(a), eng.submit(b)
+    # drive the leader to completion; the follower decodes on behind it.
+    ha.result()
+    assert not eng.sched.twin_leader, "links must break at finish"
+    hb.result()
+    assert a.out_tokens == b.out_tokens
+    assert eng.alloc.pages_in_use() == 0
+
+
+def test_twin_peak_pages_below_unshared():
+    # the actual saving: peak pool occupancy with sharing on is strictly
+    # below the unshared run of the same workload.
+    rng = np.random.default_rng(8)
+    p = rng.integers(1, 99, size=4).tolist()
+    prompts = [p, list(p), list(p), list(p)]
+
+    def peak(sc):
+        eng = ServingEngine(CFG, PARAMS, sc)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(i, list(pr)))
+        top = 0
+        while eng.sched.has_work():
+            eng.tick()
+            top = max(top, eng.alloc.pages_in_use())
+        return top
+
+    base = dict(BASE, record_logits=False)
+    assert peak(ServeConfig(**base, decode_sharing=True)) < \
+        peak(ServeConfig(**base))
+
+
+# ---------------------------------------------------------------------------
+# config + arch validation
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="spec_draft"):
+        ServeConfig(**BASE, spec_draft="self", temperature=0.7)
+    with pytest.raises(ValueError, match="spec_draft"):
+        ServeConfig(max_batch=2, max_prompt=8, max_new_tokens=4,
+                    paged=False, spec_draft="self")
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeConfig(**BASE, spec_k=0)
+    with pytest.raises(ValueError, match="spec_draft_pages"):
+        ServeConfig(**BASE, spec_draft_pages=0)
+    with pytest.raises(ValueError, match="decode_sharing"):
+        ServeConfig(**BASE, decode_sharing=True, temperature=0.5)
+    with pytest.raises(ValueError, match="decode_sharing"):
+        ServeConfig(**BASE, decode_sharing=True, spec_draft="self")
+
+
+def test_spec_arch_validation():
+    moe = ArchConfig(name="m", family="moe", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                     n_experts=4, top_k=2, d_ff_expert=32)
+    assert pattern_kinds(moe) == {"attn_moe"}
+    with pytest.raises(ValueError, match="attn_moe"):
+        vet_spec_arch(moe, "target")
+    mla = CFG.with_(kv_lora_rank=32, pattern=(("scan", "attn_mlp", 2),))
+    with pytest.raises(ValueError, match="MLA"):
+        vet_spec_arch(mla, "draft")
+    with pytest.raises(ValueError, match="attn_moe"):
+        ServingEngine(moe, None, ServeConfig(**BASE, spec_draft="self"))
+    vet_spec_arch(CFG, "target")    # dense attention passes
+
+
+def test_drafter_rejects_unsupported_arch():
+    moe = ArchConfig(name="m2", family="moe", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                     n_experts=4, top_k=2, d_ff_expert=32)
+    with pytest.raises(ValueError, match="draft"):
+        SpecDrafter(moe, None, ServeConfig(**BASE, spec_draft="self"))
+
+
+# ---------------------------------------------------------------------------
+# sharded legs: 1 vs 8 pool shards, lax vs Pallas decode (subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARD_BODY = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models import ArchConfig, init_params
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_test_mesh
+
+CFG = ArchConfig(name='spec_t', family='dense', n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=100,
+                 decode_margin=32, dtype=jnp.float32)
+params = init_params(CFG, jax.random.PRNGKey(0))
+rng = np.random.default_rng(3)
+prompts = [rng.integers(1, 99, size=n).tolist() for n in (5, 11, 19, 9)]
+
+def serve(mesh_shape, spec, pallas):
+    mesh = make_test_mesh(mesh_shape, ('data', 'model'))
+    kw = dict(max_batch=4, max_prompt=8, max_new_tokens=6, page_size=4,
+              max_seq=32, num_pages=40, record_logits=True,
+              use_pallas_decode=pallas)
+    if spec:
+        kw.update(spec_draft='self', spec_k=3)
+    with use_rules(mesh, 'fsdp_sp'):
+        eng = ServingEngine(CFG, params, ServeConfig(**kw))
+        out = eng.run([Request(i, list(p)) for i, p in enumerate(prompts)])
+    toks = {r.rid: tuple(r.out_tokens) for r in out}
+    lgts = {r.rid: np.stack(r.logits) for r in out}
+    return toks, lgts, eng
+
+# speculation must be invisible PER PATH: each spec leg is compared
+# against a plain engine with the SAME mesh shape and decode kernel
+# (lax vs Pallas and 1- vs 8-way combines sum in different orders).
+for shape, shards in (((8, 1), 1), ((1, 8), 8)):
+    for pallas in (False, True):
+        ref_t, ref_l, _ = serve(shape, spec=False, pallas=pallas)
+        toks, lgts, eng = serve(shape, spec=True, pallas=pallas)
+        assert eng.pool_shards == shards
+        assert eng.spec_stats()['acceptance_rate'] == 1.0
+        assert toks == ref_t, (shards, pallas, toks, ref_t)
+        for rid in ref_l:
+            np.testing.assert_array_equal(lgts[rid], ref_l[rid])
+print('SUBPROC_OK')
+"""
+
+
+def test_spec_sharded_bit_identity_8dev():
+    code = ("import os\n"
+            'os.environ["XLA_FLAGS"] = '
+            '"--xla_force_host_platform_device_count=8"\n'
+            + textwrap.dedent(_SHARD_BODY))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0 and "SUBPROC_OK" in r.stdout, \
+        r.stderr[-3000:]

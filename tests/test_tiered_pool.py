@@ -2,8 +2,9 @@
 
 Three layers of coverage for the two-tier (device + pinned host) pool:
 
-  * allocator walker — random evict / restore / touch / release
-    sequences against ``PageAllocator`` asserting, after EVERY step,
+  * allocator walker — random evict / restore / touch / release /
+    share / truncate (speculative rollback) sequences against
+    ``PageAllocator`` asserting, after EVERY step,
     that no physical or host page has two owners, that per-tier byte
     accounting balances exactly (device free + mapped + in-flight ==
     num_pages; host free + occupied == host_pages), and that an
@@ -87,7 +88,7 @@ def _walk(al: PageAllocator, rng, steps: int = 400):
     """Random evict/prefetch/touch walk; invariants hold at every step."""
     B, P = al.page_table.shape
     for _ in range(steps):
-        op = rng.integers(0, 7)
+        op = rng.integers(0, 9)
         slot = int(rng.integers(0, B))
         j = int(rng.integers(0, P))
         if op == 0:
@@ -115,6 +116,20 @@ def _walk(al: PageAllocator, rng, steps: int = 400):
             n = int(rng.integers(1, 4))
             if al.reserve_host(n):
                 al.release_host(n)
+        elif op == 7:
+            # speculative rollback: whole pages at/past the row boundary
+            # release whatever their residency state (device page -> ref
+            # drop, host slot -> freed, in-flight restore -> popped).
+            al.truncate_rows(slot, int(rng.integers(0, P * al.page_size + 1)))
+        elif op == 8:
+            # map another slot's device page at the same logical index
+            # (COW prefix / twin decode sharing) so truncate and release
+            # walk over refcount > 1 pages too.
+            src = int(rng.integers(0, B))
+            if al.page_table[src, j] >= 0 and al.page_table[slot, j] < 0 \
+                    and al.host_table[slot, j] < 0 \
+                    and (slot, j) not in al.inflight:
+                al.share(slot, j, int(al.page_table[src, j]))
         _check_invariants(al)
 
 
@@ -142,7 +157,7 @@ def test_allocator_walker_hypothesis():
     from hypothesis import strategies as st
 
     @settings(max_examples=40, deadline=None)
-    @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 3),
+    @given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 3),
                               st.integers(0, 5)),
                     min_size=1, max_size=120),
            st.integers(0, 2 ** 31 - 1))
@@ -172,6 +187,16 @@ def test_allocator_walker_hypothesis():
             elif op == 6:
                 if al.reserve_host(1 + j):
                     al.release_host(1 + j)
+            elif op == 7:
+                al.truncate_rows(slot, int(rng.integers(
+                    0, al.pages_per_slot * al.page_size + 1)))
+            elif op == 8:
+                src = int(rng.integers(0, al.page_table.shape[0]))
+                if al.page_table[src, j] >= 0 \
+                        and al.page_table[slot, j] < 0 \
+                        and al.host_table[slot, j] < 0 \
+                        and (slot, j) not in al.inflight:
+                    al.share(slot, j, int(al.page_table[src, j]))
             _check_invariants(al)
 
     run()
